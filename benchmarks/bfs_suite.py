@@ -1,0 +1,124 @@
+"""BFS benchmarks: paper Figs. 7-9.
+
+- fig7_strategies: migrate vs remote-write traffic + measured MTEPS
+- fig8_balance:    Erdős–Rényi (balanced) vs RMAT (skewed) degradation
+- fig9_compare:    naive pull-per-round vs the push implementation on this
+                   host (the STINGER-vs-MEATBEE x86 analogue)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Comm, MigratoryStrategy, bfs, bfs_traffic, teps
+from repro.core.bfs import UNVISITED, _adj_global, _expand_dense
+from repro.sparse import edges_to_csr, erdos_renyi_edges, partition_graph, rmat_edges
+
+from .util import emit, time_fn
+
+
+def _graph(kind: str, scale: int, ef: int = 8, p: int = 8):
+    n = 1 << scale
+    edges = (
+        erdos_renyi_edges(scale, ef, seed=7)
+        if kind == "er"
+        else rmat_edges(scale, ef, seed=7)
+    )
+    g = edges_to_csr(edges, n)
+    return partition_graph(g, p)
+
+
+def fig7_strategies(full: bool = False):
+    rows = []
+    scales = (12, 13, 14) if not full else (12, 13, 14, 15, 16)
+    for scale in scales:
+        pg = _graph("er", scale)
+        sec = time_fn(lambda: bfs(pg, 0), iters=3)
+        for comm in (Comm.MIGRATE, Comm.REMOTE_WRITE):
+            st = bfs_traffic(pg, 0, MigratoryStrategy(comm=comm))
+            mteps = teps(st.edges_traversed, sec) / 1e6
+            rows.append(emit(
+                "fig7_bfs_strategies", f"scale={scale}_{comm.value}", sec,
+                mteps=round(mteps, 2),
+                traffic_mb=round(st.traffic.total_bytes / 1e6, 2),
+                rounds=st.rounds,
+            ))
+    return rows
+
+
+def fig8_balance(full: bool = False):
+    rows = []
+    scale = 14 if not full else 16
+    for kind in ("er", "rmat"):
+        pg = _graph(kind, scale)
+        deg = np.asarray(pg.deg)
+        sec = time_fn(lambda: bfs(pg, 0), iters=3)
+        st = bfs_traffic(pg, 0, MigratoryStrategy(comm=Comm.REMOTE_WRITE))
+        rows.append(emit(
+            "fig8_bfs_balance", f"{kind}_scale={scale}", sec,
+            mteps=round(teps(st.edges_traversed, sec) / 1e6, 2),
+            max_deg=int(deg.max()),
+            nodelet_edge_imbalance=round(
+                float(deg.sum(axis=1).max() / np.maximum(deg.sum(axis=1).mean(), 1)), 2
+            ),
+        ))
+    return rows
+
+
+def _bfs_pull_naive(pg, root: int):
+    """Naive per-round pull implementation (the STINGER-port analogue):
+    gathers parent state for every edge before proposing (extra gather +
+    filter work vs the push version)."""
+    adj = _adj_global(pg)
+    n = adj.shape[0]
+
+    @jax.jit
+    def run(root):
+        parents0 = jnp.full((n,), UNVISITED, jnp.int32).at[root].set(root)
+        frontier0 = jnp.zeros((n,), bool).at[root].set(True)
+
+        def cond(s):
+            return s[1].any()
+
+        def body(s):
+            parents, frontier = s
+            # the migrate-style remote read: P[d] for every candidate edge
+            pd = parents[jnp.maximum(adj, 0)]
+            valid = frontier[:, None] & (adj >= 0) & (pd == UNVISITED)
+            src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], adj.shape)
+            dst = jnp.where(valid, adj, 0)
+            prop = jnp.where(valid, src, UNVISITED)
+            nP = jnp.full((n,), UNVISITED, jnp.int32).at[dst.reshape(-1)].min(
+                prop.reshape(-1), mode="drop")
+            newly = (parents == UNVISITED) & (nP != UNVISITED)
+            return jnp.where(newly, nP, parents), newly
+
+        parents, _ = jax.lax.while_loop(cond, body, (parents0, frontier0))
+        return parents
+
+    return run
+
+
+def fig9_compare(full: bool = False):
+    rows = []
+    scales = (12, 13, 14) if not full else (13, 14, 15, 16)
+    for scale in scales:
+        pg = _graph("er", scale)
+        st = bfs_traffic(pg, 0, MigratoryStrategy(comm=Comm.REMOTE_WRITE))
+        sec_push = time_fn(lambda: bfs(pg, 0), iters=3)
+        naive = _bfs_pull_naive(pg, 0)
+        sec_pull = time_fn(lambda: naive(jnp.int32(0)), iters=3)
+        rows.append(emit(
+            "fig9_bfs_compare", f"push_scale={scale}", sec_push,
+            mteps=round(teps(st.edges_traversed, sec_push) / 1e6, 2),
+        ))
+        rows.append(emit(
+            "fig9_bfs_compare", f"naive_pull_scale={scale}", sec_pull,
+            mteps=round(teps(st.edges_traversed, sec_pull) / 1e6, 2),
+        ))
+    return rows
+
+
+def run(full: bool = False):
+    return fig7_strategies(full) + fig8_balance(full) + fig9_compare(full)

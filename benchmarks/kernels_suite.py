@@ -1,0 +1,72 @@
+"""Kernel micro-benches (interpret-mode correctness-path timings on CPU; on
+TPU these run natively — the numbers here track relative effects only):
+SpMV grain sweep through the Pallas grid, flash-attention block sizes,
+fused topk-sim vs unfused reference."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.spmv.ops import spmv as spmv_kernel
+from repro.kernels.spmv.ref import spmv_ell_reference
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.topk_sim.ops import topk_sim_pairs
+from repro.core import bucketize, generate_alignment_pair, neighbor_buckets, pick_grid
+
+from .util import emit, time_fn
+
+
+def spmv_kernel_grain(full: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    r, k, n = (4096, 8, 4096) if not full else (16384, 8, 16384)
+    cols = jnp.asarray(rng.integers(-1, n, size=(r, k)).astype(np.int32))
+    vals = jnp.asarray(np.where(np.asarray(cols) >= 0, rng.standard_normal((r, k)), 0).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    sec_ref = time_fn(lambda: spmv_ell_reference(cols, vals, x), iters=3)
+    rows.append(emit("kernel_spmv", "jnp_ref", sec_ref))
+    for grain in (64, 256, 1024):
+        sec = time_fn(lambda: spmv_kernel(cols, vals, x, grain=grain), iters=3)
+        rows.append(emit("kernel_spmv", f"pallas_grain={grain}", sec))
+    return rows
+
+
+def flash_blocks(full: bool = False):
+    rows = []
+    rng = np.random.default_rng(1)
+    b, hq, hkv, s, d = 1, 4, 2, (256 if not full else 1024), 64
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
+    sec = time_fn(lambda: attention_reference(q, k, v), iters=3)
+    rows.append(emit("kernel_flash", "jnp_ref", sec))
+    for bq, bk in ((64, 64), (128, 128)):
+        sec = time_fn(lambda: flash_attention(q, k, v, block_q=bq, block_k=bk), iters=3)
+        rows.append(emit("kernel_flash", f"pallas_{bq}x{bk}", sec))
+    return rows
+
+
+def topk_sim(full: bool = False):
+    rows = []
+    n = 512 if not full else 2048
+    vs1, vs2, _ = generate_alignment_pair(n, seed=5)
+    grid = pick_grid(n, 32)
+    cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+    b1 = bucketize(vs1, grid, cap=cap)
+    b2 = bucketize(vs2, grid, cap=cap)
+    nb = neighbor_buckets(grid)
+    g2 = grid * grid
+    pb2 = jnp.asarray(np.repeat(np.arange(g2), 9))
+    pb1 = jnp.asarray(nb.reshape(-1))
+    for use_kernel, name in ((False, "jnp_ref"), (True, "pallas_fused")):
+        sec = time_fn(
+            lambda: topk_sim_pairs(vs1, vs2, b1, b2, pb2, pb1, use_kernel=use_kernel),
+            iters=3,
+        )
+        rows.append(emit("kernel_topk_sim", name, sec, pairs=int(g2 * 9)))
+    return rows
+
+
+def run(full: bool = False):
+    return spmv_kernel_grain(full) + flash_blocks(full) + topk_sim(full)

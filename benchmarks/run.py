@@ -1,0 +1,48 @@
+"""Benchmark runner: one suite per paper table/figure + kernel micro-benches
++ the beyond-paper MoE dispatch A/B.
+
+    PYTHONPATH=src python -m benchmarks.run [--bench NAME] [--full]
+
+Prints ``bench,case,us_per_call,derived...`` CSV rows and writes
+experiments/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+SUITES = {}
+
+
+def _register():
+    from . import bfs_suite, gsana_suite, kernels_suite, moe_dispatch, spmv_suite
+
+    SUITES.update({
+        "spmv": spmv_suite.run,
+        "bfs": bfs_suite.run,
+        "gsana": gsana_suite.run,
+        "kernels": kernels_suite.run,
+        "moe_dispatch": moe_dispatch.run,
+    })
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=None, help="suite name (default: all)")
+    ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    args = ap.parse_args(argv)
+    _register()
+    names = [args.bench] if args.bench else list(SUITES)
+    print("bench,case,us_per_call,derived")
+    all_rows = []
+    for name in names:
+        all_rows.extend(SUITES[name](full=args.full))
+    out = Path(__file__).resolve().parents[1] / "experiments" / "bench_results.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(all_rows, indent=2, default=str))
+    print(f"# wrote {out} ({len(all_rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Benchmark harness utilities: warmed, blocked wall-clock timing + CSV rows."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
+    """Median wall seconds per call of fn(*args) (jit-warmed, blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(bench: str, case: str, seconds: float, **derived) -> dict:
+    row = {"bench": bench, "case": case, "us_per_call": seconds * 1e6, **derived}
+    extras = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{bench},{case},{row['us_per_call']:.1f},{extras}")
+    return row

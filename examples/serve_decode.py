@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + greedy decode on any assigned arch.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-3b --gen 32
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — Migratory-Strategy Framework (MSF).
+
+A production-grade JAX framework reproducing and extending
+*Programming Strategies for Irregular Algorithms on the Emu Chick*
+(Hein et al., 2018): replication (S1), remote writes over thread
+migration (S2), and locality/load-aware data layout (S3), adapted to
+multi-pod TPU SPMD execution.
+"""
+
+__version__ = "0.1.0"

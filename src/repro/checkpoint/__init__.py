@@ -1,0 +1,2 @@
+from . import store
+from .store import AsyncCheckpointer, latest_step, restore, save

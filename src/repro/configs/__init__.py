@@ -1,0 +1,2 @@
+from .registry import ARCHS, get_config, reduced_config
+from .shapes import SHAPES, ShapeSpec, applicable, cells

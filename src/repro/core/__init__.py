@@ -1,0 +1,49 @@
+"""The paper's primary contribution: the three Emu programming strategies
+(S1 replication, S2 remote writes, S3 locality layout) as composable,
+strategy-configurable distributed operators."""
+from .strategies import (
+    CONTEXT_BYTES,
+    WRITE_PACKET_BYTES,
+    Comm,
+    Layout,
+    MigratoryStrategy,
+    Scheme,
+    TrafficStats,
+)
+from .spmv import (
+    PartitionedELL,
+    effective_bandwidth,
+    gather_result,
+    partition_ell,
+    spmv,
+    spmv_traffic,
+    stripe_vector,
+    unstripe_vector,
+)
+from .bfs import (
+    BFSRunStats,
+    bfs,
+    bfs_effective_bandwidth,
+    bfs_traffic,
+    teps,
+    validate_parents,
+)
+from .gsana import (
+    Placement,
+    PlanStats,
+    compute_similarity,
+    gsana_effective_bw,
+    layout_blk,
+    layout_hcb,
+    plan_stats,
+    recall_at_k,
+)
+from .gsana_data import (
+    Buckets,
+    VertexSet,
+    bucketize,
+    generate_alignment_pair,
+    neighbor_buckets,
+    pick_grid,
+)
+from .hilbert import d_to_xy, hilbert_order_of_buckets, xy_to_d

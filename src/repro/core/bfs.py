@@ -1,0 +1,287 @@
+"""Graph500 BFS: migrating threads (Alg. 1) vs remote writes (Alg. 2).
+
+Paper §3.2: the migrate version reads ``P[d]`` remotely (a thread migration
+per traversed edge) and CASes; the remote-write version blindly pushes the
+proposed parent into a shadow array ``nP`` (small one-sided packets, later
+writes overwrite earlier ones) and commits in a local scan — two phases, no
+atomics. We keep Alg. 2's two-phase structure exactly, replacing the
+nondeterministic overwrite with a deterministic ``min`` merge (any proposed
+parent is a valid BFS parent; see DESIGN.md §10).
+
+TPU realization (DESIGN.md §2):
+- ``migrate``  = pull: per round, ``all_gather`` the parent array to every
+  shard (and all_gather the per-shard proposal partials back) — data moves to
+  compute, twice.
+- ``remote_write`` = push: each shard computes a dense proposal partial for
+  the whole vertex space from purely local state and pushes it with a
+  reduce-scatter(min) (implemented as all_to_all + local min); the owner
+  commits locally. ~P× less traffic per round, no parent pull.
+
+Both strategies produce identical parent trees (level-synchronous min-merge);
+they differ in communication structure — which is the paper's point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sparse.graph import PartitionedGraph
+from .strategies import Comm, MigratoryStrategy, TrafficStats
+
+UNVISITED = jnp.iinfo(jnp.int32).max  # internal sentinel (min-merge friendly)
+
+
+def _adj_global(g: PartitionedGraph) -> jax.Array:
+    """(P, V_p, K) nodelet-major -> (N_pad, K) global-vertex-major view."""
+    p, vp, k = g.adj.shape
+    return jnp.transpose(g.adj, (1, 0, 2)).reshape(vp * p, k)
+
+
+def _expand_dense(adj: jax.Array, frontier: jax.Array, n_pad: int) -> jax.Array:
+    """One frontier expansion: dense proposal array nP (N_pad,) via min-scatter.
+
+    For every frontier vertex s and neighbor d: propose parent s for d.
+    Invalid slots scatter UNVISITED (a no-op for min).
+    """
+    n, k = adj.shape
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k))
+    valid = frontier[:, None] & (adj >= 0)
+    dst = jnp.where(valid, adj, 0)
+    prop = jnp.where(valid, src, UNVISITED)
+    return jnp.full((n_pad,), UNVISITED, dtype=jnp.int32).at[dst.reshape(-1)].min(
+        prop.reshape(-1), mode="drop"
+    )
+
+
+@partial(jax.jit, static_argnames=("max_rounds",))
+def _bfs_local(adj: jax.Array, root: jax.Array, max_rounds: int) -> jax.Array:
+    """Level-synchronous BFS on a single device (semantics oracle for both
+    strategies — Alg. 1 and Alg. 2 compute the same tree here)."""
+    n = adj.shape[0]
+    parents0 = jnp.full((n,), UNVISITED, dtype=jnp.int32).at[root].set(root)
+    frontier0 = jnp.zeros((n,), dtype=bool).at[root].set(True)
+
+    def cond(state):
+        _, frontier, it = state
+        return jnp.logical_and(frontier.any(), it < max_rounds)
+
+    def body(state):
+        parents, frontier, it = state
+        nP = _expand_dense(adj, frontier, n)
+        newly = (parents == UNVISITED) & (nP != UNVISITED)
+        parents = jnp.where(newly, nP, parents)
+        return parents, newly, it + 1
+
+    parents, _, _ = jax.lax.while_loop(cond, body, (parents0, frontier0, 0))
+    return parents
+
+
+def bfs(
+    g: PartitionedGraph,
+    root: int,
+    strategy: MigratoryStrategy | None = None,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    axis_name: str = "nodelet",
+    max_rounds: int | None = None,
+) -> jax.Array:
+    """BFS parent array, (n_vertices,) int32, -1 for unreached.
+
+    Without a mesh, runs the single-device oracle. With a mesh, runs the
+    strategy-specific distributed implementation over ``axis_name``.
+    """
+    strategy = strategy or MigratoryStrategy()
+    n = g.n_vertices
+    n_pad = g.P * g.v_per_nodelet
+    max_rounds = max_rounds or n_pad
+    if mesh is None:
+        parents = _bfs_local(_adj_global(g), jnp.int32(root), max_rounds)
+    else:
+        parents = _bfs_distributed(g, root, strategy, mesh, axis_name, max_rounds)
+    parents = parents[:n]
+    return jnp.where(parents == UNVISITED, -1, parents)
+
+
+def _bfs_distributed(g, root, strategy, mesh, axis_name, max_rounds):
+    """Distributed BFS over the nodelet mesh axis.
+
+    State per shard: its slice of the (vertex-major) parent/frontier arrays.
+    Vertex-major layout: global vertex v -> shard v // V_p, slot v % V_p
+    (block distribution over the padded global order).
+    """
+    from jax.sharding import PartitionSpec as P_
+
+    p, vp, k = g.adj.shape
+    n_pad = p * vp
+    vs = n_pad // p  # vertices per shard (block)
+    adj_g = _adj_global(g)  # (N_pad, K) -> sharded on rows
+    push = strategy.comm == Comm.REMOTE_WRITE
+
+    def body(adj_s):  # adj_s: (vs, K) local adjacency rows
+        shard = jax.lax.axis_index(axis_name)
+        lo = shard * vs
+        vids = lo + jnp.arange(vs, dtype=jnp.int32)
+        parents0 = jnp.where(vids == root, jnp.int32(root), UNVISITED)
+        frontier0 = vids == root
+
+        def cond(state):
+            _, _, it, alive = state
+            return jnp.logical_and(alive, it < max_rounds)
+
+        def round_body(state):
+            parents, frontier, it, _ = state
+            if push:
+                # Alg. 2: blind dense push from local state only.
+                src = lo + jnp.broadcast_to(
+                    jnp.arange(vs, dtype=jnp.int32)[:, None], (vs, k)
+                )
+                valid = frontier[:, None] & (adj_s >= 0)
+                dst = jnp.where(valid, adj_s, 0)
+                prop = jnp.where(valid, src, UNVISITED)
+                partial_nP = (
+                    jnp.full((n_pad,), UNVISITED, dtype=jnp.int32)
+                    .at[dst.reshape(-1)]
+                    .min(prop.reshape(-1), mode="drop")
+                )
+                # reduce-scatter(min) == all_to_all + local min: the remote write
+                blocks = partial_nP.reshape(p, vs)
+                recv = jax.lax.all_to_all(blocks, axis_name, 0, 0, tiled=True)
+                nP = jnp.min(recv.reshape(p, vs), axis=0)
+            else:
+                # Alg. 1: pull everything — gather parents (the per-edge read
+                # of P[d] that migrates the thread), expand with the visited
+                # filter, gather everyone's partials back (migrate analogue).
+                par_full = jax.lax.all_gather(parents, axis_name, tiled=True)
+                src = lo + jnp.broadcast_to(
+                    jnp.arange(vs, dtype=jnp.int32)[:, None], (vs, k)
+                )
+                valid = frontier[:, None] & (adj_s >= 0)
+                dst = jnp.where(valid, adj_s, 0)
+                # the remote read: P[d] == UNVISITED check before the CAS
+                valid = valid & (par_full[dst] == UNVISITED)
+                prop = jnp.where(valid, src, UNVISITED)
+                nP_partial = (
+                    jnp.full((n_pad,), UNVISITED, dtype=jnp.int32)
+                    .at[dst.reshape(-1)]
+                    .min(prop.reshape(-1), mode="drop")
+                )
+                # claims still must reach the owner: second gather + min
+                all_parts = jax.lax.all_gather(nP_partial, axis_name)  # (P, N_pad)
+                nP_full = jnp.min(all_parts, axis=0)
+                nP = jax.lax.dynamic_slice(nP_full, (lo,), (vs,))
+            newly = (parents == UNVISITED) & (nP != UNVISITED)
+            parents = jnp.where(newly, nP, parents)
+            alive = jax.lax.psum(newly.sum(), axis_name) > 0
+            return parents, newly, it + 1, alive
+
+        parents, _, _, _ = jax.lax.while_loop(
+            cond, round_body, (parents0, frontier0, 0, jnp.bool_(True))
+        )
+        return parents
+
+    f = jax.shard_map(
+        body, mesh=mesh, in_specs=(P_(axis_name),), out_specs=P_(axis_name),
+        check_vma=False,
+    )
+    return f(adj_g)
+
+
+# -- paper-model traffic accounting (numpy simulator) -------------------------
+
+
+@dataclasses.dataclass
+class BFSRunStats:
+    rounds: int
+    edges_traversed: int
+    traffic: TrafficStats
+
+
+def bfs_traffic(g: PartitionedGraph, root: int, strategy: MigratoryStrategy) -> BFSRunStats:
+    """Replay BFS in numpy, counting the paper's traffic units.
+
+    migrate (Alg. 1): one thread migration per traversed edge whose
+    destination lives on a remote nodelet (read of P[d] moves the thread
+    there), plus the hop back ("ping-pong", §7) — counted as 2 migrations.
+    remote_write (Alg. 2): one small packet per traversed edge with a remote
+    destination; no migrations.
+    """
+    p, vp, k = g.adj.shape
+    adj = np.transpose(np.asarray(g.adj), (1, 0, 2)).reshape(vp * p, k)
+    n = g.n_vertices
+    owner = np.arange(vp * p) % p  # striped ownership (paper layout)
+    parents = np.full(vp * p, -1, dtype=np.int64)
+    parents[root] = root
+    frontier = np.zeros(vp * p, dtype=bool)
+    frontier[root] = True
+    migrations = remote_writes = edges = rounds = 0
+    while frontier.any():
+        rounds += 1
+        srcs = np.nonzero(frontier)[0]
+        nbrs = adj[srcs]  # (f, K)
+        valid = nbrs >= 0
+        dst = nbrs[valid]
+        src = np.repeat(srcs, valid.sum(axis=1))
+        edges += len(dst)
+        remote = owner[dst] != owner[src]
+        if strategy.comm == Comm.MIGRATE:
+            migrations += int(2 * remote.sum())
+        else:
+            remote_writes += int(remote.sum())
+        nP = np.full(vp * p, np.iinfo(np.int64).max)
+        np.minimum.at(nP, dst, src)
+        newly = (parents == -1) & (nP != np.iinfo(np.int64).max)
+        parents[newly] = nP[newly]
+        frontier = newly
+    return BFSRunStats(
+        rounds=rounds,
+        edges_traversed=edges,
+        traffic=TrafficStats(migrations=migrations, remote_writes=remote_writes),
+    )
+
+
+def teps(n_edges_traversed: int, seconds: float) -> float:
+    return n_edges_traversed / max(seconds, 1e-12)
+
+
+def bfs_effective_bandwidth(scale: int, seconds: float, edge_factor: int = 16) -> float:
+    """Paper §5.2: BW = 16 * 2^scale * 2 * 8 / time = TEPS * 16."""
+    return edge_factor * (1 << scale) * 2 * 8 / max(seconds, 1e-12)
+
+
+def validate_parents(g: PartitionedGraph, root: int, parents: np.ndarray) -> bool:
+    """Graph500-style validation: parent edges exist, root ok, levels consistent."""
+    p, vp, k = g.adj.shape
+    adj = np.transpose(np.asarray(g.adj), (1, 0, 2)).reshape(vp * p, k)
+    n = g.n_vertices
+    parents = np.asarray(parents[:n])
+    if parents[root] != root:
+        return False
+    # compute levels by following parents (bounded by n)
+    level = np.full(n, -1, dtype=np.int64)
+    level[root] = 0
+    reached = np.nonzero(parents >= 0)[0]
+    for v in reached:
+        if v == root:
+            continue
+        # parent edge must exist in the graph
+        if v not in adj[parents[v]][adj[parents[v]] >= 0]:
+            return False
+    # level consistency via BFS from root on the parent tree
+    children: dict[int, list[int]] = {}
+    for v in reached:
+        if v != root:
+            children.setdefault(int(parents[v]), []).append(int(v))
+    stack = [(int(root), 0)]
+    seen = 0
+    while stack:
+        u, lu = stack.pop()
+        if lu > n:
+            return False
+        seen += 1
+        for c in children.get(u, ()):
+            stack.append((c, lu + 1))
+    return seen == len(reached)

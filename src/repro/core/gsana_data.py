@@ -1,0 +1,199 @@
+"""GSANA alignment-problem substrate: vertex metadata, 2-D placement,
+quadtree-leaf (grid) bucketization, and a DBLP-like pair generator.
+
+Paper §3.3: GSANA places vertices on a 2-D plane from global structure; we
+generate pairs with a latent ground-truth placement (corresponding vertices
+land near each other, as GSANA's structural embedding achieves on DBLP).
+Vertex metadata (types / neighbor types / edge types / attributes) is stored
+in **sorted fixed-width arrays** — exactly the paper's "metadata of a vertex's
+neighborhood in sorted arrays" regularization, padded with -1 for the TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class VertexSet:
+    """One graph's vertices + metadata used by the similarity function σ."""
+
+    pos: jax.Array  # (n, 2) float32 in [0,1)^2
+    deg: jax.Array  # (n,) int32
+    vtype: jax.Array  # (n,) int32
+    ntypes: jax.Array  # (n, Kn) int32 sorted asc, -1 pad — adjacent vertex types
+    etypes: jax.Array  # (n, Ke) int32 sorted asc, -1 pad — adjacent edge types
+    attrs: jax.Array  # (n, Ka) int32 sorted asc, -1 pad — vertex attributes
+
+    def tree_flatten(self):
+        return (self.pos, self.deg, self.vtype, self.ntypes, self.etypes, self.attrs), None
+
+    @classmethod
+    def tree_unflatten(cls, _, leaves):
+        return cls(*leaves)
+
+    @property
+    def n(self) -> int:
+        return self.pos.shape[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Buckets:
+    """Grid bucketization (uniform-depth quadtree leaves, DESIGN.md §3)."""
+
+    vid: jax.Array  # (grid*grid, cap) int32 vertex ids, -1 pad
+    count: jax.Array  # (grid*grid,) int32
+    grid: int  # static, power of two
+
+    def tree_flatten(self):
+        return (self.vid, self.count), self.grid
+
+    @classmethod
+    def tree_unflatten(cls, grid, leaves):
+        return cls(*leaves, grid=grid)
+
+    @property
+    def cap(self) -> int:
+        return self.vid.shape[1]
+
+
+def _pad_sorted(rows: list[np.ndarray], width: int) -> np.ndarray:
+    out = np.full((len(rows), width), -1, dtype=np.int32)
+    for i, r in enumerate(rows):
+        r = np.sort(np.asarray(r, dtype=np.int32))[:width]
+        out[i, : len(r)] = r
+    return out
+
+
+def _metadata_from_edges(
+    n: int, edges: np.ndarray, vtype: np.ndarray, etype: np.ndarray,
+    attrs_list: list[np.ndarray], kn: int, ke: int, ka: int,
+) -> dict[str, np.ndarray]:
+    nbr: list[list[int]] = [[] for _ in range(n)]
+    nbe: list[list[int]] = [[] for _ in range(n)]
+    for (u, v), t in zip(edges, etype):
+        nbr[u].append(vtype[v])
+        nbr[v].append(vtype[u])
+        nbe[u].append(t)
+        nbe[v].append(t)
+    deg = np.array([len(x) for x in nbr], dtype=np.int32)
+    return dict(
+        deg=deg,
+        ntypes=_pad_sorted([np.array(x) for x in nbr], kn),
+        etypes=_pad_sorted([np.array(x) for x in nbe], ke),
+        attrs=_pad_sorted(attrs_list, ka),
+    )
+
+
+def generate_alignment_pair(
+    n: int,
+    avg_deg: float = 6.0,
+    n_types: int = 8,
+    n_etypes: int = 6,
+    n_attr_vocab: int = 64,
+    kn: int = 16,
+    ke: int = 16,
+    ka: int = 8,
+    drop_frac: float = 0.1,
+    pos_noise: float = 0.01,
+    seed: int = 0,
+) -> tuple[VertexSet, VertexSet, np.ndarray]:
+    """DBLP-like pair: graph2 is a perturbed relabeling of graph1.
+
+    Returns (vs1, vs2, pi) with ground truth pi: V1 -> V2 ids.
+    """
+    rng = np.random.default_rng(seed)
+    m = int(n * avg_deg / 2)
+    e1 = rng.integers(0, n, size=(m, 2), dtype=np.int64)
+    e1 = e1[e1[:, 0] != e1[:, 1]]
+    vtype1 = rng.integers(0, n_types, size=n).astype(np.int32)
+    etype1 = rng.integers(0, n_etypes, size=len(e1)).astype(np.int32)
+    attr_counts = rng.integers(1, ka + 1, size=n)
+    attrs1 = [rng.choice(n_attr_vocab, size=c, replace=False) for c in attr_counts]
+
+    # latent placement: corresponding vertices land close on the plane
+    pos_true = rng.random((n, 2)).astype(np.float32)
+    pos1 = np.clip(pos_true + rng.normal(0, pos_noise, (n, 2)).astype(np.float32), 0, 0.999)
+
+    # graph2: relabel + perturb edges, keep types/attrs (metadata preserved)
+    pi = rng.permutation(n).astype(np.int64)
+    keep = rng.random(len(e1)) >= drop_frac
+    e2 = pi[e1[keep]]
+    extra = rng.integers(0, n, size=(int(len(e1) * drop_frac), 2), dtype=np.int64)
+    extra = extra[extra[:, 0] != extra[:, 1]]
+    e2 = np.concatenate([e2, extra], axis=0)
+    etype2 = np.concatenate(
+        [etype1[keep], rng.integers(0, n_etypes, size=len(extra)).astype(np.int32)]
+    )
+    vtype2 = np.empty(n, dtype=np.int32)
+    vtype2[pi] = vtype1
+    attrs2: list[np.ndarray] = [None] * n  # type: ignore
+    for u in range(n):
+        attrs2[pi[u]] = attrs1[u]
+    pos2 = np.empty((n, 2), dtype=np.float32)
+    pos2[pi] = np.clip(pos_true + rng.normal(0, pos_noise, (n, 2)).astype(np.float32), 0, 0.999)
+
+    md1 = _metadata_from_edges(n, e1, vtype1, etype1, attrs1, kn, ke, ka)
+    md2 = _metadata_from_edges(n, e2, vtype2, etype2, attrs2, kn, ke, ka)
+    vs1 = VertexSet(
+        pos=jnp.asarray(pos1), deg=jnp.asarray(md1["deg"]), vtype=jnp.asarray(vtype1),
+        ntypes=jnp.asarray(md1["ntypes"]), etypes=jnp.asarray(md1["etypes"]),
+        attrs=jnp.asarray(md1["attrs"]),
+    )
+    vs2 = VertexSet(
+        pos=jnp.asarray(pos2), deg=jnp.asarray(md2["deg"]), vtype=jnp.asarray(vtype2),
+        ntypes=jnp.asarray(md2["ntypes"]), etypes=jnp.asarray(md2["etypes"]),
+        attrs=jnp.asarray(md2["attrs"]),
+    )
+    return vs1, vs2, pi
+
+
+def bucketize(vs: VertexSet, grid: int, cap: int | None = None) -> Buckets:
+    """Assign vertices to grid x grid buckets by 2-D position; pad to cap."""
+    pos = np.asarray(vs.pos)
+    bx = np.minimum((pos[:, 0] * grid).astype(np.int64), grid - 1)
+    by = np.minimum((pos[:, 1] * grid).astype(np.int64), grid - 1)
+    b = by * grid + bx
+    order = np.argsort(b, kind="stable")
+    counts = np.bincount(b, minlength=grid * grid)
+    if cap is None:
+        cap = max(1, int(counts.max()))
+    if counts.max() > cap:
+        raise ValueError(f"bucket overflow: max load {counts.max()} > cap {cap}; raise grid")
+    vid = np.full((grid * grid, cap), -1, dtype=np.int32)
+    offs = np.zeros(grid * grid, dtype=np.int64)
+    for v in order:
+        bb = b[v]
+        vid[bb, offs[bb]] = v
+        offs[bb] += 1
+    return Buckets(vid=jnp.asarray(vid), count=jnp.asarray(counts.astype(np.int32)), grid=grid)
+
+
+def pick_grid(n: int, target_bucket: int) -> int:
+    """Power-of-two grid so the average bucket holds ~target_bucket vertices
+    (paper Table 4 pairs |V| with a bucket size |B|)."""
+    g = 1
+    while (n / (g * g)) > target_bucket:
+        g *= 2
+    return max(g, 2)
+
+
+def neighbor_buckets(grid: int) -> np.ndarray:
+    """(grid*grid, 9) neighbor bucket ids (3x3 window, -1 outside) — the
+    quadtree-neighbor task structure of Fig. 3."""
+    ids = np.arange(grid * grid)
+    bx, by = ids % grid, ids // grid
+    out = np.full((grid * grid, 9), -1, dtype=np.int32)
+    j = 0
+    for dy in (-1, 0, 1):
+        for dx in (-1, 0, 1):
+            xx, yy = bx + dx, by + dy
+            ok = (xx >= 0) & (xx < grid) & (yy >= 0) & (yy < grid)
+            out[ok, j] = (yy * grid + xx)[ok]
+            j += 1
+    return out

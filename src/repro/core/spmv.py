@@ -1,0 +1,195 @@
+"""Distributed SpMV with the paper's replication strategy (S1, §3.1/§5.1).
+
+Layout (paper Fig. 2): the row array is striped across ``P`` logical nodelets
+(row ``r`` on nodelet ``r % P``); each row's nonzeros live with their row
+(jagged arrays -> padded ELL planes per nodelet, see DESIGN.md §2). The input
+vector ``x`` is either
+
+- **replicated** on every nodelet (paper's winning strategy): zero per-element
+  communication after a one-time broadcast, or
+- **striped** (``x[j]`` on nodelet ``j % P``): every nonzero whose column
+  lives remotely triggers a thread migration on the Emu == an ``all_gather``
+  pull on TPU (the ``migrate`` realization of remote gets).
+
+``grain`` = rows per task (paper Fig. 4): the local path executes row chunks
+of ``grain`` rows with ``lax.map`` (sequential across chunks, vector within),
+the Pallas kernel uses it as rows-per-program, and the distributed path uses
+it as the rows-per-shard block factor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sparse.csr import CSR
+from .strategies import MigratoryStrategy, TrafficStats
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartitionedELL:
+    """Per-nodelet padded ELL planes. Global row r <-> (p=r%P, slot=r//P)."""
+
+    cols: jax.Array  # (P, R_p, K) int32 global col ids, -1 pad
+    vals: jax.Array  # (P, R_p, K)
+    shape: tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.cols, self.vals), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    @property
+    def P(self) -> int:
+        return self.cols.shape[0]
+
+    @property
+    def rows_per_nodelet(self) -> int:
+        return self.cols.shape[1]
+
+    @property
+    def k(self) -> int:
+        return self.cols.shape[2]
+
+
+def partition_ell(a: CSR, p: int, k: int | None = None, pad_rows_to: int = 1) -> PartitionedELL:
+    """Stripe a CSR matrix's rows over ``p`` nodelets as padded ELL planes."""
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices)
+    data = np.asarray(a.data)
+    n = a.n_rows
+    lens = indptr[1:] - indptr[:-1]
+    kmax = int(lens.max()) if n else 1
+    k = k or max(kmax, 1)
+    if kmax > k:
+        raise ValueError(f"max row degree {kmax} > k={k}; use split_long_rows first")
+    rp = -(-(-(-n // p)) // pad_rows_to) * pad_rows_to
+    cols = np.full((p, rp, k), -1, dtype=np.int32)
+    vals = np.zeros((p, rp, k), dtype=data.dtype)
+    for r in range(n):
+        s, e = indptr[r], indptr[r + 1]
+        cols[r % p, r // p, : e - s] = indices[s:e]
+        vals[r % p, r // p, : e - s] = data[s:e]
+    return PartitionedELL(cols=jnp.asarray(cols), vals=jnp.asarray(vals), shape=a.shape)
+
+
+def stripe_vector(x: jax.Array, p: int) -> jax.Array:
+    """(N,) -> (P, N_p) striped layout, x[j] at (j % p, j // p). Pads with 0."""
+    n = x.shape[0]
+    npp = -(-n // p)
+    xp = jnp.pad(x, (0, npp * p - n))
+    return xp.reshape(npp, p).T
+
+
+def unstripe_vector(xs: jax.Array, n: int) -> jax.Array:
+    p, npp = xs.shape
+    return xs.T.reshape(p * npp)[:n]
+
+
+def _rows_kernel(cols, vals, x_full):
+    """Compute one chunk of rows: masked gather + reduce. cols/vals (..., K)."""
+    mask = cols >= 0
+    xg = jnp.take(x_full, jnp.maximum(cols, 0), axis=0)
+    return jnp.sum(jnp.where(mask, vals * xg, 0), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("grain",))
+def _spmv_local(a: PartitionedELL, x_full: jax.Array, grain: int) -> jax.Array:
+    """Single-device semantics path: vmap over nodelets, lax.map over row
+    chunks of ``grain`` rows (the task structure the Emu sees)."""
+    P, rp, k = a.cols.shape
+    g = max(1, min(grain, rp))
+    n_chunks = -(-rp // g)
+    pad = n_chunks * g - rp
+    cols = jnp.pad(a.cols, ((0, 0), (0, pad), (0, 0)), constant_values=-1)
+    vals = jnp.pad(a.vals, ((0, 0), (0, pad), (0, 0)))
+    cols = cols.reshape(P, n_chunks, g, k)
+    vals = vals.reshape(P, n_chunks, g, k)
+
+    def per_nodelet(c, v):
+        return jax.lax.map(lambda cv: _rows_kernel(cv[0], cv[1], x_full), (c, v))
+
+    y = jax.vmap(per_nodelet)(cols, vals)  # (P, n_chunks, g)
+    return y.reshape(P, n_chunks * g)[:, :rp]
+
+
+def spmv(
+    a: PartitionedELL,
+    x: jax.Array,
+    strategy: MigratoryStrategy,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    axis_name: str = "nodelet",
+) -> jax.Array:
+    """y = A @ x with S1 strategy. Returns y in striped (P, R_p) layout.
+
+    ``x``: full (N,) if ``strategy.replicate_x`` else striped (P, N_p).
+    With ``mesh`` the nodelet dimension is sharded over ``axis_name`` and the
+    non-replicated path pulls ``x`` with an ``all_gather`` (the migrate
+    analogue); otherwise a single-device vmap emulation with identical
+    semantics is used.
+    """
+    grain = strategy.dynamic_grain(a.rows_per_nodelet)
+    if mesh is None:
+        x_full = x if strategy.replicate_x else unstripe_vector(x, a.shape[1])
+        return _spmv_local(a, x_full, grain)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P_
+
+    n = a.shape[1]
+
+    if strategy.replicate_x:
+
+        def body(cols_p, vals_p, x_rep):
+            # x already local everywhere: pure local compute (paper's S1 win)
+            return _rows_kernel(cols_p[0], vals_p[0], x_rep)[None]
+
+        in_specs = (P_(axis_name), P_(axis_name), P_())
+    else:
+
+        def body(cols_p, vals_p, x_striped):
+            # migrate/pull: gather the striped vector (thread-migration analogue)
+            xg = jax.lax.all_gather(x_striped, axis_name)  # (P, 1, N_p)
+            x_full = unstripe_vector(xg[:, 0, :], n)
+            return _rows_kernel(cols_p[0], vals_p[0], x_full)[None]
+
+        in_specs = (P_(axis_name), P_(axis_name), P_(axis_name))
+
+    f = jax.shard_map(
+        body, mesh=mesh, in_specs=in_specs, out_specs=P_(axis_name), check_vma=False
+    )
+    return f(a.cols, a.vals, x)
+
+
+def gather_result(y_striped: jax.Array, n: int) -> jax.Array:
+    """(P, R_p) striped result -> global (N,) row order."""
+    return unstripe_vector(y_striped, n)
+
+
+def spmv_traffic(a: PartitionedELL, strategy: MigratoryStrategy) -> TrafficStats:
+    """Paper-model traffic: striped x costs one migration per nonzero whose
+    column owner differs from the row's nodelet; replication costs none."""
+    cols = np.asarray(a.cols)
+    P = a.P
+    if strategy.replicate_x:
+        return TrafficStats(migrations=0, remote_writes=0)
+    p_idx = np.arange(P)[:, None, None]
+    remote = (cols >= 0) & ((cols % P) != p_idx)
+    return TrafficStats(migrations=int(remote.sum()), remote_writes=0)
+
+
+def effective_bandwidth(a: PartitionedELL, n: int, seconds: float, dtype_bytes: int = 4) -> float:
+    """Paper §5.1 metric: (sizeof(A) + sizeof(x) + sizeof(y)) / time.
+
+    sizeof(A) counts true nonzeros (value + column index), not padding.
+    """
+    nnz = int((np.asarray(a.cols) >= 0).sum())
+    bytes_a = nnz * (dtype_bytes + 4)
+    bytes_xy = (n + a.shape[0]) * dtype_bytes
+    return (bytes_a + bytes_xy) / max(seconds, 1e-12)

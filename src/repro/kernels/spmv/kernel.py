@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: blocked-ELL SpMV with replicated x in VMEM (S1).
+
+TPU adaptation of the paper's SpMV (DESIGN.md §2): rows are padded to ELL
+tiles so each grid program streams a (block_rows, K) tile of column indices
+and values through VMEM; the dense vector ``x`` is *replicated into every
+program's VMEM* — the Pallas realization of the paper's winning replication
+strategy (§5.1). ``block_rows`` is the paper's grain size (rows per thread ->
+rows per program).
+
+The gather ``x[cols]`` is the irregular access; on TPU it executes as a VMEM
+vector gather (VPU), with padding slots (col = -1) masked to zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, y_ref):
+    cols = cols_ref[...]  # (block_rows, K) int32
+    vals = vals_ref[...]  # (block_rows, K)
+    x = x_ref[...]  # (N,) replicated in VMEM
+    mask = cols >= 0
+    xg = jnp.take(x, jnp.maximum(cols, 0).reshape(-1), axis=0).reshape(cols.shape)
+    y_ref[...] = jnp.sum(jnp.where(mask, vals * xg, jnp.zeros_like(vals)), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def spmv_ell_pallas(
+    cols: jax.Array,
+    vals: jax.Array,
+    x: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """y = A @ x for ELL planes. cols/vals: (R, K); x: (N,). R % block_rows == 0.
+
+    ``interpret=True`` runs the kernel body on CPU (validation); on TPU pass
+    ``interpret=False``.
+    """
+    r, k = cols.shape
+    assert r % block_rows == 0, f"rows {r} not a multiple of block_rows {block_rows}"
+    n = x.shape[0]
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        _spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),  # x: whole vector, every program (S1)
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), vals.dtype),
+        interpret=interpret,
+    )(cols, vals, x)

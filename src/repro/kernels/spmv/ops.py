@@ -1,0 +1,34 @@
+"""Jit'd public wrapper for the SpMV kernel: pads rows to the grain and
+dispatches kernel vs reference."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import spmv_ell_pallas
+from .ref import spmv_ell_reference
+
+
+def spmv(
+    cols: jax.Array,
+    vals: jax.Array,
+    x: jax.Array,
+    *,
+    grain: int = 256,
+    use_kernel: bool = True,
+    interpret: bool = True,
+) -> jax.Array:
+    """y = A @ x for padded-ELL A. Handles row padding to the grain.
+
+    ``grain`` = rows per program (the paper's grain size, Fig. 4).
+    """
+    r, k = cols.shape
+    if not use_kernel:
+        return spmv_ell_reference(cols, vals, x)
+    g = max(1, min(grain, r))
+    r_pad = -(-r // g) * g
+    if r_pad != r:
+        cols = jnp.pad(cols, ((0, r_pad - r), (0, 0)), constant_values=-1)
+        vals = jnp.pad(vals, ((0, r_pad - r), (0, 0)))
+    y = spmv_ell_pallas(cols, vals, x, block_rows=g, interpret=interpret)
+    return y[:r]

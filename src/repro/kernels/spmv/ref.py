@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the blocked-ELL SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ell_reference(cols: jax.Array, vals: jax.Array, x: jax.Array) -> jax.Array:
+    """y[r] = sum_k vals[r,k] * x[cols[r,k]] over valid (col >= 0) slots."""
+    mask = cols >= 0
+    xg = jnp.take(x, jnp.maximum(cols, 0), axis=0)
+    return jnp.sum(jnp.where(mask, vals * xg, jnp.zeros_like(vals)), axis=1)

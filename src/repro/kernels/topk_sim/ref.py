@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused similarity+top-k kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import NEG, _sim_from_feats
+
+
+def topk_sim_reference(
+    feat_v: jax.Array, feat_u: jax.Array, mask_v: jax.Array, mask_u: jax.Array,
+    *, t1: int, t2: int, t3: int, k: int = 4,
+):
+    """Batched (vmap over pairs) similarity + lax.top_k."""
+
+    def one(fv, fu, mv, mu):
+        s = _sim_from_feats(fv, fu, t1, t2, t3)
+        valid = (mv > 0)[:, None] & (mu > 0)[None, :]
+        s = jnp.where(valid, s, NEG)
+        sc, ix = jax.lax.top_k(s, k)
+        return sc, ix.astype(jnp.int32)
+
+    return jax.vmap(one)(feat_v, feat_u, mask_v, mask_u)

@@ -1,0 +1,177 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape x mesh) cell on the production meshes, print
+memory_analysis/cost_analysis, and derive the roofline terms.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all            # every cell, subprocess each
+    python -m repro.launch.dryrun --all --mesh multi
+
+Results are written to experiments/dryrun/<arch>__<shape>__<mesh>.json and
+aggregated by EXPERIMENTS.md tooling.
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+from pathlib import Path
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _apply_overrides(cfg, overrides: dict):
+    import dataclasses
+
+    typed = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            typed[k] = v in ("1", "true", "True")
+        elif isinstance(cur, int):
+            typed[k] = int(v)
+        elif isinstance(cur, float):
+            typed[k] = float(v)
+        else:
+            typed[k] = v
+    return dataclasses.replace(cfg, **typed)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, overrides: dict | None = None) -> dict:
+    import jax
+
+    from ..configs import SHAPES, applicable, get_config
+    from ..launch import roofline
+    from ..launch.mesh import make_production_mesh
+    from ..launch.steps import build_programs
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _apply_overrides(cfg, overrides)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    progs = build_programs(cfg, mesh, shape)
+    with mesh:
+        if shape.kind == "decode":
+            params_abs, tok_abs, state_abs = progs.abstract_inputs
+            lowered = progs.step.lower(params_abs, tok_abs, state_abs)
+        else:
+            lowered = progs.step.lower(*progs.abstract_inputs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    print(mem)
+    cost = compiled.cost_analysis()
+    print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+    report = roofline.analyze(hlo)
+    n_chips = mesh.size
+    mf = roofline.model_flops(cfg, shape.kind, shape.seq_len, shape.global_batch)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "status": "ok",
+        "n_chips": n_chips,
+        "seconds_lower": round(t_lower, 2), "seconds_compile": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_dev": mem.argument_size_in_bytes,
+            "output_bytes_per_dev": mem.output_size_in_bytes,
+            "temp_bytes_per_dev": mem.temp_size_in_bytes,
+            "alias_bytes_per_dev": mem.alias_size_in_bytes,
+            "peak_bytes_per_dev": (
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+            ),
+        },
+        "xla_cost_analysis": {
+            "flops_per_dev_body_once": cost.get("flops", 0.0),
+            "bytes_accessed_body_once": cost.get("bytes accessed", 0.0),
+        },
+        "roofline": report.to_dict(),
+        "model_flops_global": mf,
+        "model_flops_per_dev": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / max(report.flops, 1.0),
+        "hlo_bytes": len(hlo),
+    }
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg field override key=value (perf hillclimbing)")
+    ap.add_argument("--tag", default=None, help="suffix for the output json")
+    args = ap.parse_args()
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from ..configs import ARCHS, SHAPES
+
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        failures = []
+        for arch in ARCHS:
+            for shape in SHAPES:
+                for mk in meshes:
+                    out = OUT_DIR / f"{arch}__{shape}__{mk}.json"
+                    if out.exists() and not args.force:
+                        print(f"cached   {out.name}")
+                        continue
+                    cmd = [
+                        sys.executable, "-m", "repro.launch.dryrun",
+                        "--arch", arch, "--shape", shape, "--mesh", mk,
+                    ]
+                    t0 = time.time()
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    dt = time.time() - t0
+                    if r.returncode == 0 and out.exists():
+                        status = json.loads(out.read_text()).get("status")
+                        print(f"{status:8s} {out.name} ({dt:.0f}s)")
+                    else:
+                        failures.append((arch, shape, mk))
+                        print(f"FAILED   {out.name} ({dt:.0f}s)")
+                        print(r.stdout[-2000:])
+                        print(r.stderr[-4000:])
+        if failures:
+            print(f"\n{len(failures)} cell(s) failed: {failures}")
+            sys.exit(1)
+        print("\nAll dry-run cells passed.")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mk in meshes:
+        tag = f"__{args.tag}" if args.tag else ""
+        out = OUT_DIR / f"{args.arch}__{args.shape}__{mk}{tag}.json"
+        try:
+            result = run_cell(args.arch, args.shape, mk, overrides)
+        except Exception:
+            traceback.print_exc()
+            sys.exit(1)
+        out.write_text(json.dumps(result, indent=2, default=float))
+        print(f"wrote {out}")
+        if result["status"] == "ok":
+            r = result["roofline"]
+            print(
+                f"  terms: compute={r['t_compute']:.3e}s memory={r['t_memory']:.3e}s "
+                f"collective={r['t_collective']:.3e}s dominant={r['dominant']}"
+            )
+
+
+if __name__ == "__main__":
+    main()

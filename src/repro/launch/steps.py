@@ -1,0 +1,188 @@
+"""Builds sharded, jit-ready train/serve steps for an (arch x shape x mesh)
+cell: resolves logical param/cache specs to NamedShardings and wires the
+donation/jit boundaries. Used by dryrun.py, train.py, and serve.py."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import api
+from ..models.config import ModelConfig
+from ..models.layers import Ctx
+from ..models.sharding import Rules, make_rules
+from ..optim import AdamWConfig
+
+
+def _resolve(rules: Rules, logical) -> P:
+    """Logical axis tuple -> PartitionSpec (tuples are spec leaves)."""
+    if logical is None:
+        return P()
+    if isinstance(logical, tuple):
+        return rules.spec(*logical)
+    return rules.spec(logical)
+
+
+def _is_spec_leaf(x) -> bool:
+    """A logical-spec leaf is None or a plain tuple of axis names — NOT a
+    NamedTuple container (e.g. KVCaches of specs)."""
+    if x is None:
+        return True
+    return (
+        isinstance(x, tuple)
+        and not hasattr(x, "_fields")
+        and all(e is None or isinstance(e, str) for e in x)
+    )
+
+
+def _tree_specs(rules: Rules, logical_tree) -> Any:
+    return jax.tree.map(
+        lambda leaf: _resolve(rules, leaf), logical_tree, is_leaf=_is_spec_leaf
+    )
+
+
+def _shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+@dataclasses.dataclass
+class CellPrograms:
+    """Jit-wrapped (not yet lowered) programs + shardings for one cell."""
+
+    ctx: Ctx
+    rules: Rules
+    param_sharding: Any
+    batch_sharding: Any | None = None
+    opt_sharding: Any | None = None
+    state_sharding: Any | None = None
+    step: Any = None  # the jit function
+    abstract_inputs: Any = None  # kwargs for .lower()
+
+
+def _batch_specs(cfg: ModelConfig, rules: Rules, batch_tree) -> Any:
+    def spec(leaf):
+        nd = len(leaf.shape)
+        return rules.spec("batch", *([None] * (nd - 1)))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+# per-arch microbatch counts: gradient accumulation for cells whose
+# activations exceed HBM at the full per-device batch (see EXPERIMENTS.md)
+MICROBATCHES = {"mixtral-8x22b": 4, "zamba2-2.7b": 2}
+
+
+def build_train_programs(
+    cfg: ModelConfig, mesh: Mesh, shape, opt_cfg: AdamWConfig | None = None,
+    microbatches: int | None = None,
+) -> CellPrograms:
+    opt_cfg = opt_cfg or AdamWConfig()
+    mb = microbatches or MICROBATCHES.get(cfg.name, 1)
+    rules = make_rules(
+        mesh, num_experts=cfg.num_experts, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, vocab_size=cfg.vocab_size, seq_shard=True,
+    )
+    ctx = Ctx(cfg=cfg, mesh=mesh, rules=rules)
+    pspec = _tree_specs(rules, api.param_specs(cfg))
+    psh = _shardings(mesh, pspec)
+
+    params_abs = api.abstract_params(cfg)
+    opt_abs = jax.eval_shape(lambda: api.init_opt(cfg, params_abs, opt_cfg))
+    # mu/nu/ef mirror params; step is replicated
+    opt_sh = jax.tree.map(lambda _: None, opt_abs)
+    from ..optim import AdamWState
+
+    opt_sh = AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=psh, nu=psh,
+        ef_residual=psh if opt_cfg.compress_grads else None,
+    )
+    batch_abs = api.input_specs(cfg, "train", shape.seq_len, shape.global_batch)
+    bsh = _shardings(mesh, _batch_specs(cfg, rules, batch_abs))
+
+    def step(params, opt_state, batch):
+        return api.train_step(ctx, params, opt_state, batch, opt_cfg, microbatches=mb)
+
+    fn = jax.jit(
+        step,
+        in_shardings=(psh, opt_sh, bsh),
+        out_shardings=(psh, opt_sh, None),
+        donate_argnums=(0, 1),
+    )
+    return CellPrograms(
+        ctx=ctx, rules=rules, param_sharding=psh, batch_sharding=bsh,
+        opt_sharding=opt_sh, step=fn,
+        abstract_inputs=(params_abs, opt_abs, batch_abs),
+    )
+
+
+def build_prefill_programs(cfg: ModelConfig, mesh: Mesh, shape) -> CellPrograms:
+    rules = make_rules(
+        mesh, num_experts=cfg.num_experts, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, vocab_size=cfg.vocab_size, seq_shard=True,
+    )
+    ctx = Ctx(cfg=cfg, mesh=mesh, rules=rules)
+    psh = _shardings(mesh, _tree_specs(rules, api.param_specs(cfg)))
+    params_abs = api.abstract_params(cfg)
+    batch_abs = api.input_specs(cfg, "prefill", shape.seq_len, shape.global_batch)
+    bsh = _shardings(mesh, _batch_specs(cfg, rules, batch_abs))
+    state_sh = _shardings(mesh, _tree_specs(rules, api.decode_state_specs(cfg)))
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        return api.prefill(ctx, params, tokens, max_len=shape.seq_len, batch=batch)
+
+    fn = jax.jit(
+        prefill_step,
+        in_shardings=(psh, bsh),
+        out_shardings=(None, state_sh),
+    )
+    return CellPrograms(
+        ctx=ctx, rules=rules, param_sharding=psh, batch_sharding=bsh,
+        state_sharding=state_sh, step=fn, abstract_inputs=(params_abs, batch_abs),
+    )
+
+
+def build_decode_programs(cfg: ModelConfig, mesh: Mesh, shape) -> CellPrograms:
+    long_ctx = shape.global_batch < mesh.shape["data"]  # batch can't fill DP
+    rules = make_rules(
+        mesh, num_experts=cfg.num_experts, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, vocab_size=cfg.vocab_size,
+        long_context=long_ctx,
+    )
+    if long_ctx:
+        rules = dataclasses.replace(rules, batch=None)  # replicate tiny batch
+    ctx = Ctx(cfg=cfg, mesh=mesh, rules=rules)
+    psh = _shardings(mesh, _tree_specs(rules, api.param_specs(cfg)))
+    params_abs = api.abstract_params(cfg)
+    inputs = api.input_specs(cfg, "decode", shape.seq_len, shape.global_batch)
+    state_sh = _shardings(mesh, _tree_specs(rules, api.decode_state_specs(cfg)))
+    tok_sh = NamedSharding(mesh, rules.spec("batch", None))
+
+    def decode(params, token, state):
+        return api.decode_step(ctx, params, token, state)
+
+    fn = jax.jit(
+        decode,
+        in_shardings=(psh, tok_sh, state_sh),
+        out_shardings=(None, state_sh),
+        donate_argnums=(2,),
+    )
+    return CellPrograms(
+        ctx=ctx, rules=rules, param_sharding=psh, state_sharding=state_sh,
+        step=fn, abstract_inputs=(params_abs, inputs["token"], inputs["state"]),
+    )
+
+
+def build_programs(cfg: ModelConfig, mesh: Mesh, shape) -> CellPrograms:
+    if shape.kind == "train":
+        return build_train_programs(cfg, mesh, shape)
+    if shape.kind == "prefill":
+        return build_prefill_programs(cfg, mesh, shape)
+    return build_decode_programs(cfg, mesh, shape)

@@ -1,0 +1,3 @@
+from .config import ModelConfig
+from .layers import Ctx
+from . import api

@@ -1,0 +1,155 @@
+"""Family-dispatching model API used by the launcher, dry-run, and examples.
+
+Every family exposes: init_params, loss_fn, forward, prefill, decode_step,
+param_specs, and (for decoders) cache/state constructors + specs. The API
+here adds train_step (loss + grad + AdamW) and abstract (ShapeDtypeStruct)
+variants for the dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import AdamWConfig, AdamWState, apply_updates
+from ..optim import init as adamw_init
+from .config import ModelConfig
+from .layers import Ctx, _dt
+from . import rwkv6, transformer, whisper, zamba2
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": rwkv6,
+    "hybrid": zamba2,
+    "encdec": whisper,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Any:
+    return module_for(cfg).init_params(cfg, key)
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    """Param ShapeDtypeStructs without allocating (dry-run)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+    return module_for(cfg).param_specs(cfg)
+
+
+def loss_fn(ctx: Ctx, params: Any, batch: dict) -> jax.Array:
+    return module_for(ctx.cfg).loss_fn(ctx, params, batch)
+
+
+def train_step(
+    ctx: Ctx, params: Any, opt_state: AdamWState, batch: dict, opt_cfg: AdamWConfig,
+    microbatches: int = 1,
+):
+    """One optimizer step; with microbatches > 1, gradients are accumulated
+    over a scan of microbatches (activation memory / m)."""
+    if microbatches <= 1:
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(ctx, p, batch))(params)
+    else:
+        m = microbatches
+
+        def split(leaf):
+            b = leaf.shape[0]
+            assert b % m == 0, f"batch {b} not divisible by microbatches {m}"
+            return leaf.reshape(m, b // m, *leaf.shape[1:])
+
+        mbatch = jax.tree.map(split, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            loss_acc, grad_acc = acc
+            l, g = jax.value_and_grad(lambda p: loss_fn(ctx, p, mb))(params)
+            grad_acc = jax.tree.map(
+                lambda a, x: a + x.astype(jnp.float32) / m, grad_acc, g
+            )
+            return (loss_acc + l / m, grad_acc), None
+
+        (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0), zeros), mbatch)
+    params, opt_state, metrics = apply_updates(params, opt_state, grads, opt_cfg)
+    metrics["loss"] = loss
+    return params, opt_state, metrics
+
+
+def init_opt(cfg: ModelConfig, params: Any, opt_cfg: AdamWConfig) -> AdamWState:
+    return adamw_init(params, opt_cfg)
+
+
+# -- serving -------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    m = module_for(cfg)
+    if cfg.family == "ssm":
+        return m.init_state(cfg, batch)
+    return m.init_caches(cfg, batch, max_len)
+
+
+def decode_state_specs(cfg: ModelConfig):
+    m = module_for(cfg)
+    if cfg.family == "ssm":
+        return m.state_specs(cfg)
+    return m.cache_specs(cfg)
+
+
+def prefill(ctx: Ctx, params: Any, tokens: jax.Array, max_len: int, batch: dict | None = None):
+    m = module_for(ctx.cfg)
+    if ctx.cfg.family == "encdec":
+        return m.prefill(ctx, params, tokens, max_len, batch["frames"])
+    if ctx.cfg.family == "vlm":
+        return m.prefill(ctx, params, tokens, max_len, extra_embeds=batch["patches"])
+    return m.prefill(ctx, params, tokens, max_len)
+
+
+def decode_step(ctx: Ctx, params: Any, token: jax.Array, state):
+    return module_for(ctx.cfg).decode_step(ctx, params, token, state)
+
+
+# -- input specs (ShapeDtypeStructs for every model input) ----------------------
+
+
+def input_specs(cfg: ModelConfig, kind: str, seq_len: int, global_batch: int) -> dict:
+    """Abstract inputs for a (shape-kind x arch) cell.
+
+    train:   full batch dict for train_step (tokens + modality stubs)
+    prefill: prompt batch for prefill
+    decode:  one new token + the decode state sized to seq_len
+    """
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    b, s = global_batch, seq_len
+    if kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s + 1), i32),
+                "frames": jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model), dt),
+            }
+        if cfg.family == "vlm":
+            s_tok = s - cfg.num_patches
+            return {
+                "tokens": jax.ShapeDtypeStruct((b, s_tok + 1), i32),
+                "patches": jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), dt),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((b, s + 1), i32)}
+    if kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.family == "encdec":
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), dt)
+        return out
+    if kind == "decode":
+        state = jax.eval_shape(lambda: init_decode_state(cfg, b, s))
+        return {"token": jax.ShapeDtypeStruct((b, 1), i32), "state": state}
+    raise ValueError(f"unknown shape kind {kind}")

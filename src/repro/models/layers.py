@@ -1,0 +1,314 @@
+"""Shared transformer layers: norms, RoPE, GQA attention (train/prefill/
+decode), MLP. All functions are mesh-optional: with a (mesh, rules) context
+they add sharding constraints, without they run plainly on one device."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .sharding import Rules, constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    cfg: ModelConfig
+    mesh: Any = None
+    rules: Rules | None = None
+
+    def cs(self, x, *axes):
+        return constrain(x, self.mesh, self.rules, *axes)
+
+
+# -- norms ---------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (x32 * r).astype(x.dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x32 - mu), axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def norm(ctx: Ctx, p: dict, x: jax.Array) -> jax.Array:
+    if ctx.cfg.norm == "layernorm":
+        return layernorm(x, p["w"], p["b"], ctx.cfg.norm_eps)
+    return rmsnorm(x, p["w"], ctx.cfg.norm_eps)
+
+
+def norm_params(cfg: ModelConfig, d: int, stack: tuple[int, ...] = ()) -> dict:
+    shape = (*stack, d)
+    p = {"w": jnp.ones(shape, _dt(cfg))}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros(shape, _dt(cfg))
+    return p
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# -- positions -----------------------------------------------------------------
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float, fraction: float) -> jax.Array:
+    """x: (B, S, H, Dh); pos: (S,) or (B, S) absolute positions."""
+    dh = x.shape[-1]
+    rot = int(dh * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    if pos.ndim == 1:
+        ang = pos.astype(jnp.float32)[None, :, None] * freqs[None, None, :]  # (1,S,half)
+    else:
+        ang = pos.astype(jnp.float32)[:, :, None] * freqs[None, None, :]  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1 = x[..., :half]
+    x2 = x[..., half:rot]
+    rest = x[..., rot:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos, rest], axis=-1)
+
+
+def sinusoidal(seq: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div[: (d + 1) // 2]))
+    return pe.astype(dtype)
+
+
+# -- attention -----------------------------------------------------------------
+
+
+_SCORE_BYTE_BUDGET = 1 << 28  # per-device cap on the materialized score tile
+
+
+def _attend_dense(q, k, v, *, causal, window, scale, q_offset, sq_total, kv_valid_len):
+    """One (B, cq, Hq, Dh) x (B, Skv, Hkv, Dh) attention tile, jnp reference."""
+    b, cq, hq, dh = q.shape
+    skv = k.shape[1]
+    hkv = k.shape[2]
+    group = hq // hkv
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), kr.astype(jnp.float32)
+    ) * scale
+    if kv_valid_len is not None:
+        q_pos = q_offset + jnp.arange(cq)[:, None] + (kv_valid_len - sq_total)
+    else:
+        q_pos = q_offset + jnp.arange(cq)[:, None] + (skv - sq_total)
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((cq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window is not None:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32)).astype(q.dtype)
+
+
+def _attend(
+    ctx: Ctx,
+    q: jax.Array,  # (B, Sq, Hq, Dh)
+    k: jax.Array,  # (B, Skv, Hkv, Dh)
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: int | None,
+    kv_valid_len: jax.Array | None = None,  # dynamic kv length (decode)
+) -> jax.Array:
+    """Attention dispatch: flash kernel (static masks), dense jnp, or
+    q-chunked jnp (lax.map over query blocks — flash-shaped memory footprint
+    with pure-jnp lowering for the CPU dry-run)."""
+    cfg = ctx.cfg
+    b, sq, hq, dh = q.shape
+    skv = k.shape[1]
+    if cfg.attn_impl == "flash" and kv_valid_len is None:
+        from ..kernels.flash_attention.ops import flash_attention
+
+        o = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        )
+        return o.transpose(0, 2, 1, 3)
+    scale = dh ** -0.5
+    # per-device score bytes (account for batch/head sharding)
+    shards = 1
+    if ctx.mesh is not None and ctx.rules is not None:
+        for a in (ctx.rules.batch or ()):
+            shards *= ctx.mesh.shape.get(a, 1)
+        ms = ctx.mesh.shape.get("model", 1)
+        if ctx.rules.heads4d or hq % ms == 0:  # incl. the padded-head path
+            shards *= ms
+    score_bytes = b * hq * sq * skv * 4 // shards
+    if kv_valid_len is not None or score_bytes <= _SCORE_BYTE_BUDGET or sq <= 128:
+        return _attend_dense(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_offset=0, sq_total=sq, kv_valid_len=kv_valid_len,
+        )
+    # chunk queries so each tile fits the budget
+    cq = sq
+    while cq > 128 and (b * hq * cq * skv * 4 // shards) > _SCORE_BYTE_BUDGET:
+        cq //= 2
+    while sq % cq:
+        cq //= 2
+    nc = sq // cq
+    qc = q.reshape(b, nc, cq, hq, dh).transpose(1, 0, 2, 3, 4)
+    offsets = jnp.arange(nc, dtype=jnp.int32) * cq
+
+    def tile(args):
+        qi, off = args
+        return _attend_dense(
+            qi, k, v, causal=causal, window=window, scale=scale,
+            q_offset=off, sq_total=sq, kv_valid_len=None,
+        )
+
+    # remat each tile: backward recomputes the score block instead of saving
+    # the softmax residuals of every chunk (flash-attention-like memory)
+    tile = jax.checkpoint(tile, policy=jax.checkpoint_policies.nothing_saveable)
+    o = jax.lax.map(tile, (qc, offsets))
+    return o.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, dh)
+
+
+def attn_params(cfg: ModelConfig, key, d: int | None = None, stack: tuple[int, ...] = ()) -> dict:
+    d = d or cfg.d_model
+    hd, hq, hkv = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    init = jax.nn.initializers.normal(0.02)
+    dt = _dt(cfg)
+    p = {
+        "wq": init(k1, (*stack, d, hq * hd), dt),
+        "wk": init(k2, (*stack, d, hkv * hd), dt),
+        "wv": init(k3, (*stack, d, hkv * hd), dt),
+        "wo": init(k4, (*stack, hq * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((*stack, hq * hd), dt)
+        p["bk"] = jnp.zeros((*stack, hkv * hd), dt)
+        p["bv"] = jnp.zeros((*stack, hkv * hd), dt)
+    return p
+
+
+def attn_sublayer(
+    ctx: Ctx,
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    *,
+    pos_offset: jax.Array | int = 0,
+    cache: tuple[jax.Array, jax.Array] | None = None,  # (B, Smax, Hkv, Dh) x2
+    cache_len: jax.Array | None = None,  # valid entries in cache before this call
+    xkv: jax.Array | None = None,  # cross-attention source (B, Skv, D)
+    causal: bool = True,
+    use_rope: bool = True,
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """Attention sublayer. Returns (out, updated cache or computed (k, v)).
+
+    - self-attn train/prefill: cache=None, returns freshly computed (k, v)
+    - decode: cache + cache_len given; x is the new token(s)
+    - cross-attn: xkv given (keys/values from xkv, no causal mask, no cache)
+    """
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    hd, hq, hkv = cfg.hd, cfg.num_heads, cfg.num_kv_heads
+    src = xkv if xkv is not None else x
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", src, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", src, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, x.shape[1], hq, hd)
+    k = k.reshape(b, src.shape[1], hkv, hd)
+    v = v.reshape(b, src.shape[1], hkv, hd)
+    q = ctx.cs(q, "batch", "seq", "heads4d", None)
+    k = ctx.cs(k, "batch", "seq", "kv_heads4d", None)
+    v = ctx.cs(v, "batch", "seq", "kv_heads4d", None)
+
+    if use_rope and cfg.pos_emb == "rope" and xkv is None:
+        qpos = jnp.arange(x.shape[1]) + pos_offset
+        kpos = jnp.arange(src.shape[1]) + (0 if cache is not None else pos_offset)
+        q = rope(q, qpos, cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, kpos if cache is None else qpos, cfg.rope_theta, cfg.rope_fraction)
+
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_len, 0, 0))
+        o = _attend(
+            ctx, q, ck, cv, causal=causal, window=cfg.sliding_window,
+            kv_valid_len=cache_len + x.shape[1],
+        )
+        new_cache = (ck, cv)
+    else:
+        ms = ctx.mesh.shape.get("model", 1) if ctx.mesh is not None else 1
+        if (
+            cfg.tp_pad_heads and ms > 1 and hq % ms != 0
+            and (ctx.rules is None or ctx.rules.heads4d is None)
+        ):
+            # padded-head TP: repeat KV to MHA (group mapping preserved),
+            # zero-pad heads to the next model-axis multiple, shard the
+            # head dim. Exact: padded heads attend over zero K/V and their
+            # output slice is dropped before the wo projection.
+            hq_pad = -(-hq // ms) * ms
+            kr = jnp.repeat(k, hq // hkv, axis=2)
+            vr = jnp.repeat(v, hq // hkv, axis=2)
+            pad = ((0, 0), (0, 0), (0, hq_pad - hq), (0, 0))
+            qp = ctx.cs(jnp.pad(q, pad), "batch", "seq", "heads_pad", None)
+            kp = ctx.cs(jnp.pad(kr, pad), "batch", "seq", "heads_pad", None)
+            vp = ctx.cs(jnp.pad(vr, pad), "batch", "seq", "heads_pad", None)
+            o = _attend(
+                ctx, qp, kp, vp, causal=causal and xkv is None,
+                window=cfg.sliding_window if xkv is None else None,
+            )[:, :, :hq, :]
+        else:
+            o = _attend(
+                ctx, q, k, v, causal=causal and xkv is None,
+                window=cfg.sliding_window if xkv is None else None,
+            )
+        new_cache = (k, v)
+    o = o.reshape(b, x.shape[1], hq * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"])
+    return ctx.cs(out, "batch", "residual_seq", None), new_cache
+
+
+# -- MLP -----------------------------------------------------------------------
+
+
+def mlp_params(cfg: ModelConfig, key, d_ff: int | None = None, stack: tuple[int, ...] = ()) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dt(cfg)
+    init = jax.nn.initializers.normal(0.02)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": init(k1, (*stack, d, f), dt),
+            "w_up": init(k2, (*stack, d, f), dt),
+            "w_down": init(k3, (*stack, f, d), dt),
+        }
+    return {"w_up": init(k1, (*stack, d, f), dt), "w_down": init(k2, (*stack, f, d), dt)}
+
+
+def mlp_sublayer(ctx: Ctx, p: dict, x: jax.Array) -> jax.Array:
+    if ctx.cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    h = ctx.cs(h, "batch", "seq", "d_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return ctx.cs(out, "batch", "residual_seq", None)

@@ -1,0 +1,53 @@
+"""Chunked cross-entropy: never materializes the full (B, S, V) logits.
+
+The unembed + CE over a 100k+ vocab dominates training memory if done in one
+shot (f32 logits + their backward). Chunking the sequence through a rematted
+scan bounds the live logits to (B, chunk, V/model_shards) and recomputes them
+in the backward pass — the standard production trick.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Ctx
+
+CE_CHUNK = 512
+
+
+def chunked_cross_entropy(
+    ctx: Ctx, x: jax.Array, lm_head: jax.Array, labels: jax.Array,
+    chunk: int = CE_CHUNK,
+) -> jax.Array:
+    """x: (B, S, D) final-normed activations; labels: (B, S) (-1 = pad).
+
+    Returns mean CE over non-pad positions.
+    """
+    b, s, d = x.shape
+    c = min(chunk, s)
+    s_pad = -(-s // c) * c
+    if s_pad != s:
+        x = jnp.pad(x, ((0, 0), (0, s_pad - s), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, s_pad - s)), constant_values=-1)
+    nc = s_pad // c
+    # gather the (possibly seq-sharded) stream once, then slice chunks on an
+    # unsharded leading dim (scan-friendly under GSPMD)
+    x = ctx.cs(x, "batch", None, None)
+    xc = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)  # (nc, B, c, D)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def chunk_loss(carry, inp):
+        xi, li = inp  # (B, c, D), (B, c)
+        logits = jnp.einsum("bcd,dv->bcv", xi, lm_head).astype(jnp.float32)
+        logits = ctx.cs(logits, "batch", None, "vocab")
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(li, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (li >= 0).astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + jnp.sum((logz - gold) * mask), cnt + jnp.sum(mask)), None
+
+    body = jax.checkpoint(chunk_loss, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,149 @@
+"""Mamba-2 (SSD) block: chunked selective-state-space scan.
+
+Same chunked machinery as rwkv6 but with a scalar per-head decay
+a_t = exp(-softplus(dt_t) * exp(A_log)): state (N x P) per head,
+h_t = a_t h_{t-1} + dt_t * B_t x_t^T,  y_t = C_t^T h_t + D x_t.
+Includes the depthwise causal conv frontend and SiLU gating of Mamba-2.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Ctx, _dt, rmsnorm
+
+P_HEAD = 64  # head dim (P) of the inner stream
+CONV_W = 4
+
+
+class MambaLayerState(NamedTuple):
+    h: jax.Array  # (B, H, N, P) ssm state
+    conv: jax.Array  # (B, CONV_W - 1, D_conv) conv tail
+
+
+def mamba_params(cfg: ModelConfig, key, stack: tuple[int, ...] = ()) -> dict:
+    d = cfg.d_model
+    di = 2 * d  # inner dim
+    n = cfg.ssm_state
+    h = di // P_HEAD
+    dconv = di + 2 * n  # x + B + C stream through the conv
+    dt = _dt(cfg)
+    init = jax.nn.initializers.normal(0.02)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init(ks[0], (*stack, d, di + dconv + h), dt),  # z, xBC, dt
+        "conv_w": init(ks[1], (*stack, CONV_W, dconv), dt),
+        "conv_b": jnp.zeros((*stack, dconv), dt),
+        "a_log": jnp.zeros((*stack, h), jnp.float32),
+        "d_skip": jnp.ones((*stack, h), jnp.float32),
+        "dt_bias": jnp.zeros((*stack, h), jnp.float32),
+        "out_norm": jnp.ones((*stack, di), dt),
+        "out_proj": init(ks[2], (*stack, di, d), dt),
+    }
+
+
+def mamba_param_specs() -> dict:
+    L = None
+    return {
+        "in_proj": (L, "fsdp", "heads"),
+        "conv_w": (L, None, "heads"),
+        "conv_b": (L, "heads"),
+        "a_log": (L, "heads"),
+        "d_skip": (L, "heads"),
+        "dt_bias": (L, "heads"),
+        "out_norm": (L, "heads"),
+        "out_proj": (L, "heads", "fsdp"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, tail: jax.Array | None):
+    """Depthwise causal conv, width CONV_W. x: (B, S, C). Returns (y, new_tail)."""
+    bsz, s, c = x.shape
+    head = (
+        jnp.zeros((bsz, CONV_W - 1, c), x.dtype) if tail is None else tail.astype(x.dtype)
+    )
+    xp = jnp.concatenate([head, x], axis=1)  # (B, S + W - 1, C)
+    y = sum(xp[:, i : i + s] * w[i] for i in range(CONV_W)) + b
+    return jax.nn.silu(y), xp[:, -(CONV_W - 1) :]
+
+
+def mamba_sublayer(
+    ctx: Ctx, p: dict, x: jax.Array, state: MambaLayerState | None = None
+) -> tuple[jax.Array, MambaLayerState]:
+    """x: (B, S, D) -> (out, final state). Chunked scan over S."""
+    cfg = ctx.cfg
+    bsz, s, d = x.shape
+    di = 2 * d
+    n = cfg.ssm_state
+    h = di // P_HEAD
+    dconv = di + 2 * n
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt_raw = jnp.split(proj, [di, di + dconv], axis=-1)
+    xbc, conv_tail = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"], None if state is None else state.conv
+    )
+    xi, b_in, c_in = jnp.split(xbc, [di, di + n], axis=-1)
+    xi = ctx.cs(xi, "batch", "seq", "heads")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    log_a = -dt * jnp.exp(p["a_log"])  # (B,S,H) scalar decay per head
+
+    xh_raw = xi.reshape(bsz, s, h, P_HEAD).astype(jnp.float32)
+    xh = xh_raw * dt[..., None]  # fold dt into the input
+    bmat = b_in.astype(jnp.float32)  # (B,S,N) shared across heads (G=1)
+    cmat = c_in.astype(jnp.float32)
+
+    c = min(cfg.ssm_chunk, s)
+    s_pad = -(-s // c) * c
+    if s_pad != s:
+        pad3 = ((0, 0), (0, s_pad - s), (0, 0))
+        xh = jnp.pad(xh, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, pad3)
+        cmat = jnp.pad(cmat, pad3)
+        log_a = jnp.pad(log_a, pad3)
+    nc = s_pad // c
+    xc = xh.reshape(bsz, nc, c, h, P_HEAD).transpose(1, 0, 2, 3, 4)
+    bc = bmat.reshape(bsz, nc, c, n).transpose(1, 0, 2, 3)
+    cc = cmat.reshape(bsz, nc, c, n).transpose(1, 0, 2, 3)
+    lc = log_a.reshape(bsz, nc, c, h).transpose(1, 0, 2, 3)
+
+    causal_incl = jnp.tril(jnp.ones((c, c), bool))  # i <= t
+
+    def chunk_step(hstate, inp):  # hstate: (B, H, N, P)
+        xx, bb, ccm, ll = inp
+        L_inc = jnp.cumsum(ll, axis=1)  # (B,c,H) inclusive
+        # intra: y_t = sum_{i<=t} exp(L_t - L_i) * (C_t . B_i) x_i
+        ratio = L_inc[:, :, None, :] - L_inc[:, None, :, :]  # (B,t,i,H)
+        ratio = jnp.where(causal_incl[None, :, :, None], jnp.exp(ratio), 0.0)
+        cb = jnp.einsum("btn,bin->bti", ccm, bb)
+        y = jnp.einsum("bti,btih,bihp->bthp", cb, ratio, xx)
+        # inter: y_t += exp(L_t) * C_t . h_0
+        y += jnp.einsum("btn,bth,bhnp->bthp", ccm, jnp.exp(L_inc), hstate)
+        # state: h_new = exp(L_last) h_0 + sum_i exp(L_last - L_i) B_i x_i^T
+        last = L_inc[:, -1]  # (B,H)
+        w_tail = jnp.exp(last[:, None] - L_inc)  # (B,c,H)
+        h_new = hstate * jnp.exp(last)[:, :, None, None] + jnp.einsum(
+            "bin,bih,bihp->bhnp", bb, w_tail, xx
+        )
+        return h_new, y.astype(x.dtype)
+
+    h0 = (
+        jnp.zeros((bsz, h, n, P_HEAD), jnp.float32)
+        if state is None
+        else state.h.astype(jnp.float32)
+    )
+    # remat: the (c x c) decay-ratio tensor is recomputed in backward
+    step_fn = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    h_final, y = jax.lax.scan(step_fn, h0, (xc, bc, cc, lc))
+    y = y.astype(jnp.float32)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(bsz, s_pad, h, P_HEAD)[:, :s]
+    y = y + xh_raw * p["d_skip"][None, None, :, None]  # D skip connection
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(y.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return ctx.cs(out, "batch", "residual_seq", None), MambaLayerState(h=h_final, conv=conv_tail)

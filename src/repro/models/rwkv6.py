@@ -1,0 +1,323 @@
+"""RWKV-6 "Finch": data-dependent-decay linear attention (attention-free).
+
+TPU-native chunked formulation (DESIGN.md §2): the per-token recurrence
+S_t = diag(w_t) S_{t-1} + k_t v_t^T is evaluated in chunks of ``ssm_chunk``
+tokens — intra-chunk contributions via an MXU (c x c) matmul with decay
+ratios exp(L_{t-1} - L_i) (f32, L = cumsum log w), inter-chunk via the carried
+per-head state (M x M). A lax.scan over chunks replaces the Emu-style
+per-element walk; decode uses the exact single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Ctx, _dt, norm_params, rmsnorm
+
+HEAD = 64  # rwkv6 head size M
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array  # (L, B, H, M, M) wkv state
+    tm_x: jax.Array  # (L, B, D) last input seen by time-mix (token shift)
+    cm_x: jax.Array  # (L, B, D) last input seen by channel-mix
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    d, f, l = cfg.d_model, cfg.d_ff, cfg.num_layers
+    dt = _dt(cfg)
+    init = jax.nn.initializers.normal(0.02)
+    ks = jax.random.split(key, 12)
+    lora = 32
+    return {
+        "embed": init(ks[0], (cfg.vocab_size, d), dt),
+        "blocks": {
+            "ln1": norm_params(cfg, d, (l,)),
+            "ln2": norm_params(cfg, d, (l,)),
+            # time-mix
+            "mu_r": jnp.full((l, d), 0.5, dt), "mu_k": jnp.full((l, d), 0.5, dt),
+            "mu_v": jnp.full((l, d), 0.5, dt), "mu_w": jnp.full((l, d), 0.5, dt),
+            "mu_g": jnp.full((l, d), 0.5, dt),
+            "w_r": init(ks[1], (l, d, d), dt), "w_k": init(ks[2], (l, d, d), dt),
+            "w_v": init(ks[3], (l, d, d), dt), "w_g": init(ks[4], (l, d, d), dt),
+            "w_o": init(ks[5], (l, d, d), dt),
+            "w_decay": jnp.full((l, d), -1.0, jnp.float32),  # base log-decay
+            "w_lora_a": init(ks[6], (l, d, lora), dt),
+            "w_lora_b": init(ks[7], (l, lora, d), jnp.float32),
+            "u_bonus": jnp.zeros((l, d), jnp.float32),
+            "ln_x": norm_params(cfg, d, (l,)),  # per-head group norm (rms)
+            # channel-mix
+            "cmu_k": jnp.full((l, d), 0.5, dt), "cmu_r": jnp.full((l, d), 0.5, dt),
+            "cw_k": init(ks[8], (l, d, f), dt),
+            "cw_v": init(ks[9], (l, f, d), dt),
+            "cw_r": init(ks[10], (l, d, d), dt),
+        },
+        "final_norm": norm_params(cfg, d),
+        "lm_head": init(ks[11], (d, cfg.vocab_size), dt),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    L = None
+    vec = (L, "heads")  # (l, d) vectors shard with the head dim
+    return {
+        "embed": ("vocab", "fsdp"),
+        "blocks": {
+            "ln1": {"w": (L, None)}, "ln2": {"w": (L, None)},
+            "mu_r": vec, "mu_k": vec, "mu_v": vec, "mu_w": vec, "mu_g": vec,
+            "w_r": (L, "fsdp", "heads"), "w_k": (L, "fsdp", "heads"),
+            "w_v": (L, "fsdp", "heads"), "w_g": (L, "fsdp", "heads"),
+            "w_o": (L, "heads", "fsdp"),
+            "w_decay": vec, "w_lora_a": (L, "fsdp", None), "w_lora_b": (L, None, "heads"),
+            "u_bonus": vec, "ln_x": {"w": (L, None)},
+            "cmu_k": vec, "cmu_r": vec,
+            "cw_k": (L, "fsdp", "d_ff"), "cw_v": (L, "d_ff", "fsdp"),
+            "cw_r": (L, "fsdp", "heads"),
+        },
+        "final_norm": {"w": (None,)},
+        "lm_head": ("fsdp", "vocab"),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array | None) -> jax.Array:
+    """Token shift: x_{t-1} stream; ``last`` carries across calls (decode)."""
+    head = jnp.zeros_like(x[:, :1]) if last is None else last[:, None, :].astype(x.dtype)
+    return jnp.concatenate([head, x[:, :-1]], axis=1)
+
+
+def _time_mix_chunked(
+    ctx: Ctx, p: dict, x: jax.Array, s0: jax.Array, tm_last: jax.Array | None
+):
+    """x: (B, S, D) -> (out (B, S, D), s_final (B, H, M, M), new_tm_last)."""
+    cfg = ctx.cfg
+    b, s, d = x.shape
+    h = d // HEAD
+    c = min(cfg.ssm_chunk, s)
+    xs = _shift(x, tm_last)
+
+    def mix(mu):
+        return x * mu + xs * (1 - mu)
+
+    r = jnp.einsum("bsd,de->bse", mix(p["mu_r"]), p["w_r"]).reshape(b, s, h, HEAD)
+    k = jnp.einsum("bsd,de->bse", mix(p["mu_k"]), p["w_k"]).reshape(b, s, h, HEAD)
+    v = jnp.einsum("bsd,de->bse", mix(p["mu_v"]), p["w_v"]).reshape(b, s, h, HEAD)
+    g = jnp.einsum("bsd,de->bse", mix(p["mu_g"]), p["w_g"])
+    # data-dependent decay (the "Finch" contribution): w = base + lora(x)
+    wx = mix(p["mu_w"])
+    w_log = p["w_decay"] + jnp.einsum(
+        "bsd,dr,re->bse", wx.astype(jnp.float32), p["w_lora_a"].astype(jnp.float32),
+        p["w_lora_b"],
+    )
+    log_w = -jnp.exp(w_log.reshape(b, s, h, HEAD))  # log decay in (-inf, 0)
+    u = p["u_bonus"].reshape(h, HEAD)
+
+    r = ctx.cs(r, "batch", "seq", "heads", None)
+    k = ctx.cs(k, "batch", "seq", "heads", None)
+    v = ctx.cs(v, "batch", "seq", "heads", None)
+
+    # pad to a chunk multiple: k/v/r pads are zero (no contribution), decay
+    # pads are zero in log space (state no-ops) so s_final stays exact.
+    s_pad = -(-s // c) * c
+    if s_pad != s:
+        pad = ((0, 0), (0, s_pad - s), (0, 0), (0, 0))
+        r = jnp.pad(r, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        log_w = jnp.pad(log_w, pad)
+    nc = s_pad // c
+    rc = r.reshape(b, nc, c, h, HEAD).astype(jnp.float32)
+    kc = k.reshape(b, nc, c, h, HEAD).astype(jnp.float32)
+    vc = v.reshape(b, nc, c, h, HEAD).astype(jnp.float32)
+    lw = log_w.reshape(b, nc, c, h, HEAD)
+
+    causal = jnp.tril(jnp.ones((c, c), bool), k=-1)  # strictly lower (i < t)
+
+    def chunk_step(state, inp):
+        rr, kk, vv, ll = inp  # (b, c, h, M)
+        L_inc = jnp.cumsum(ll, axis=1)  # inclusive
+        L_exc = L_inc - ll  # exclusive  (L_{t-1})
+        q_dec = rr * jnp.exp(L_exc)  # (b,c,h,M)
+        k_dec = kk * jnp.exp(-L_inc)
+        A = jnp.einsum("bthm,bihm->bhti", q_dec, k_dec)
+        A = jnp.where(causal[None, None], A, 0.0)
+        diag = jnp.einsum("bthm,hm,bthm->bht", rr, u, kk)
+        o = jnp.einsum("bhti,bihm->bthm", A, vv)
+        o += jnp.einsum("bht,bthm->bthm", diag, vv)
+        o += jnp.einsum("bthm,bhmn->bthn", q_dec, state)
+        # state update
+        decay_all = jnp.exp(L_inc[:, -1])  # (b,h,M)
+        k_tail = kk * jnp.exp(L_inc[:, -1][:, None] - L_inc)  # (b,c,h,M)
+        state = state * decay_all[..., None] + jnp.einsum("bthm,bthn->bhmn", k_tail, vv)
+        return state, o.astype(x.dtype)
+
+    inp = (
+        rc.transpose(1, 0, 2, 3, 4), kc.transpose(1, 0, 2, 3, 4),
+        vc.transpose(1, 0, 2, 3, 4), lw.transpose(1, 0, 2, 3, 4),
+    )
+    # remat: the (c x c) decay matrix A is recomputed in backward
+    step_fn = jax.checkpoint(
+        chunk_step, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    s_final, o = jax.lax.scan(step_fn, s0.astype(jnp.float32), inp)
+    o = o.astype(jnp.float32).transpose(1, 0, 2, 3, 4).reshape(b, s_pad, d)[:, :s]
+    # per-head group norm + gate + output proj
+    o = rmsnorm(o.reshape(b, s, h, HEAD), jnp.ones(HEAD, jnp.float32), cfg.norm_eps)
+    o = (o.reshape(b, s, d) * p["ln_x"]["w"]).astype(x.dtype)
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", o, p["w_o"])
+    return ctx.cs(out, "batch", "residual_seq", None), s_final, x[:, -1, :]
+
+
+def _time_mix_step(ctx: Ctx, p: dict, x1: jax.Array, s0, tm_last):
+    """Exact single-token recurrence (decode). x1: (B, D)."""
+    cfg = ctx.cfg
+    b, d = x1.shape
+    h = d // HEAD
+    xs = tm_last.astype(x1.dtype)
+
+    def mix(mu):
+        return x1 * mu + xs * (1 - mu)
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(b, h, HEAD).astype(jnp.float32)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(b, h, HEAD).astype(jnp.float32)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(b, h, HEAD).astype(jnp.float32)
+    g = mix(p["mu_g"]) @ p["w_g"]
+    wx = mix(p["mu_w"])
+    w_log = p["w_decay"] + (wx.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32)) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_log.reshape(b, h, HEAD)))
+    u = p["u_bonus"].reshape(h, HEAD)
+    s0 = s0.astype(jnp.float32)
+    kv = jnp.einsum("bhm,bhn->bhmn", k, v)
+    o = jnp.einsum("bhm,bhmn->bhn", r, s0 + u[None, :, :, None] * kv)
+    s_new = s0 * w[..., None] + kv
+    o = rmsnorm(o, jnp.ones(HEAD, jnp.float32), cfg.norm_eps)
+    o = (o.reshape(b, d) * p["ln_x"]["w"]).astype(x1.dtype)
+    o = o * jax.nn.silu(g)
+    return o @ p["w_o"], s_new, x1
+
+
+def _channel_mix(ctx: Ctx, p: dict, x: jax.Array, cm_last: jax.Array | None):
+    xs = _shift(x, cm_last) if x.ndim == 3 else cm_last.astype(x.dtype)
+    xk = x * p["cmu_k"] + xs * (1 - p["cmu_k"])
+    xr = x * p["cmu_r"] + xs * (1 - p["cmu_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["cw_k"]))
+    k = ctx.cs(k, "batch", "seq", "d_ff") if x.ndim == 3 else k
+    out = (k @ p["cw_v"]) * jax.nn.sigmoid(xr @ p["cw_r"])
+    last = x[:, -1, :] if x.ndim == 3 else x
+    return out, last
+
+
+def _block(ctx: Ctx, p: dict, x: jax.Array, state: tuple | None):
+    """One rwkv block over a full sequence (training/prefill)."""
+    s0, tm_last, cm_last = state
+    h, s_new, tm_new = _time_mix_chunked(
+        ctx, p, rmsnorm(x, p["ln1"]["w"], ctx.cfg.norm_eps), s0, tm_last
+    )
+    x = x + h
+    xn = rmsnorm(x, p["ln2"]["w"], ctx.cfg.norm_eps)
+    h2, cm_new = _channel_mix(ctx, p, xn, cm_last)
+    return x + h2, (s_new, tm_new, cm_new)
+
+
+def forward(ctx: Ctx, params: dict, tokens: jax.Array, extra_embeds=None) -> jax.Array:
+    cfg = ctx.cfg
+    b, s = tokens.shape
+    d = cfg.d_model
+    h = d // HEAD
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.cs(x, "batch", "residual_seq", None)
+    s0 = jnp.zeros((b, h, HEAD, HEAD), jnp.float32)
+
+    def body(carry, pl):
+        y, _ = _block(ctx, pl, carry, (s0, None, None))
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(x, params["final_norm"]["w"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return ctx.cs(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(ctx: Ctx, params: dict, batch: dict) -> jax.Array:
+    from .losses import chunked_cross_entropy
+
+    cfg = ctx.cfg
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    b = inputs.shape[0]
+    h = cfg.d_model // HEAD
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = ctx.cs(x, "batch", "residual_seq", None)
+    s0 = jnp.zeros((b, h, HEAD, HEAD), jnp.float32)
+
+    def body(carry, pl):
+        y, _ = _block(ctx, pl, carry, (s0, None, None))
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(x, params["final_norm"]["w"], cfg.norm_eps)
+    return chunked_cross_entropy(ctx, x, params["lm_head"], labels)
+
+
+def init_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    h = cfg.d_model // HEAD
+    return RWKVState(
+        s=jnp.zeros((cfg.num_layers, batch, h, HEAD, HEAD), jnp.float32),
+        tm_x=jnp.zeros((cfg.num_layers, batch, cfg.d_model), jnp.float32),
+        cm_x=jnp.zeros((cfg.num_layers, batch, cfg.d_model), jnp.float32),
+    )
+
+
+def state_specs(cfg: ModelConfig) -> RWKVState:
+    return RWKVState(
+        s=(None, "batch", "heads4d", None, None),
+        tm_x=(None, "batch", None),
+        cm_x=(None, "batch", None),
+    )
+
+
+def prefill(ctx: Ctx, params: dict, tokens: jax.Array, max_len: int = 0):
+    """Absorb the prompt into recurrent state (the 'KV cache' of an SSM)."""
+    cfg = ctx.cfg
+    b, s = tokens.shape
+    h = cfg.d_model // HEAD
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.cs(x, "batch", "seq", None)
+    s0 = jnp.zeros((b, h, HEAD, HEAD), jnp.float32)
+
+    def body(carry, pl):
+        y, st = _block(ctx, pl, carry, (s0, None, None))
+        return y, st
+
+    x, (ss, tms, cms) = jax.lax.scan(body, x, params["blocks"])
+    x = rmsnorm(x, params["final_norm"]["w"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:, :], params["lm_head"])
+    return logits, RWKVState(s=ss, tm_x=tms, cm_x=cms)
+
+
+def decode_step(ctx: Ctx, params: dict, token: jax.Array, state: RWKVState):
+    """(B, 1) token -> (B, 1, V) logits. O(1) per token: the 500k-context
+    cell runs through this path (state already encodes the context)."""
+    cfg = ctx.cfg
+    x = jnp.take(params["embed"], token[:, 0], axis=0)  # (B, D)
+
+    def body(carry, scanned):
+        pl, s0, tm, cm = scanned
+        xn = rmsnorm(carry, pl["ln1"]["w"], cfg.norm_eps)
+        h, s_new, tm_new = _time_mix_step(ctx, pl, xn, s0, tm)
+        y = carry + h
+        yn = rmsnorm(y, pl["ln2"]["w"], cfg.norm_eps)
+        h2, cm_new = _channel_mix(ctx, pl, yn, cm)
+        return y + h2, (s_new, tm_new, cm_new)
+
+    x, (ss, tms, cms) = jax.lax.scan(body, x, (params["blocks"], state.s, state.tm_x, state.cm_x))
+    x = rmsnorm(x, params["final_norm"]["w"], cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])[:, None, :]
+    return logits, RWKVState(s=ss, tm_x=tms, cm_x=cms)

@@ -1,0 +1,119 @@
+"""Logical-axis sharding rules mapped onto the production mesh.
+
+Model code annotates arrays with *logical* axes; the rules translate them to
+mesh axes. The paper's strategies surface here (DESIGN.md §4): ``replicate``
+(S1) vs sharded layouts for read-hot operands, and push- vs pull-style
+constraint placement for MoE dispatch (S2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = tuple[str, ...] | str | None
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """logical axis -> mesh axes."""
+
+    batch: MeshAxes = ("data",)
+    seq: MeshAxes = None
+    residual_seq: MeshAxes = None  # Megatron-SP: residual stream seq-sharded
+    kv_seq: MeshAxes = None  # set to ("data",) for long-context decode
+    heads: MeshAxes = "model"  # flattened H*hd projections (always divisible)
+    heads4d: MeshAxes = "model"  # explicit head dim of 4-D activations
+    kv_heads4d: MeshAxes = "model"  # explicit kv-head dim (replicate if uneven)
+    heads_pad: MeshAxes = "model"  # padded-head dim (always divisible)
+    d_model: MeshAxes = None
+    fsdp: MeshAxes = "data"  # weight-shard axis (d_model dim of weights)
+    d_ff: MeshAxes = "model"
+    vocab: MeshAxes = "model"
+    experts: MeshAxes = "model"  # expert dim of MoE weights (EP storage)
+    expert_inner: MeshAxes = None  # d_model dim of expert weights (FSDP when no EP)
+    moe_d_ff: MeshAxes = None  # F dim of expert weights ("model" in tp mode)
+    replicated: MeshAxes = None
+
+    def spec(self, *axes: str | None) -> P:
+        out = []
+        for a in axes:
+            if a is None:
+                out.append(None)
+            else:
+                out.append(getattr(self, a))
+        return P(*out)
+
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    num_experts: int = 0,
+    num_heads: int = 0,
+    num_kv_heads: int = 0,
+    vocab_size: int = 0,
+    long_context: bool = False,
+    seq_shard: bool = False,
+) -> Rules:
+    """Production rules for the (pod?, data, model) mesh.
+
+    - batch spans (pod, data): DP across pods, DP+FSDP within.
+    - 4-D head dims shard over "model" only when divisible (e.g. qwen2's 28
+      q-heads / 4 kv-heads do NOT divide 16 — heads stay unsharded and the
+      baseline pays an attention-region gather, a documented hillclimb
+      target); flattened H*hd projection dims always divide and always shard.
+    - experts shard over "data" for EP dispatch (handled inside moe.py's
+      shard_map); the "experts" rule here covers the weight STORAGE layout:
+      sharded when divisible, else replicated-expert/F-sliced (tp mode).
+    - long-context decode (batch=1) shards the KV sequence over "data"
+      (sequence parallelism) since there is no batch to shard.
+    """
+    axes = mesh.axis_names
+    batch = ("pod", "data") if "pod" in axes else ("data",)
+    fsdp = ("pod", "data") if "pod" in axes else ("data",)  # hierarchical FSDP
+    ms = mesh.shape["model"] if "model" in mesh.shape else 1
+    ds = mesh.shape["data"] if "data" in mesh.shape else 1
+    ep = bool(num_experts) and num_experts % ds == 0
+    kv_head_model = bool(num_kv_heads) and num_kv_heads % ms == 0
+    return Rules(
+        batch=batch,
+        fsdp=fsdp,
+        # Megatron sequence parallelism: the residual stream (and hence the
+        # per-layer scan-carry checkpoints) live seq-sharded over "model";
+        # XLA inserts the AG/RS pair at each layer boundary. Cuts stored
+        # activations by the model-axis factor — required to fit train/prefill
+        # shapes in HBM. Off for decode (seq 1).
+        residual_seq=("model",) if seq_shard else None,
+        # KV caches shard their sequence dim over "model" when the kv-head dim
+        # cannot take it (kv-head counts rarely divide a 16-way axis; a 32k
+        # cache must not replicate), plus "data" for long-context (batch=1).
+        kv_seq=_kv_seq_axes(long_context, kv_head_model),
+        heads4d="model" if (num_heads and num_heads % ms == 0) else None,
+        kv_heads4d="model" if kv_head_model else None,
+        # MoE weight storage: EP shards experts over "data" with full-F
+        # experts; the tp fallback (expert count not divisible, e.g. mixtral
+        # 8 on 16) keeps experts unsharded but FSDPs d_model and TPs F.
+        experts="data" if ep else None,
+        expert_inner="model" if ep else "data",
+        moe_d_ff=None if ep else "model",
+        # whisper's 51865 vocab does not divide the model axis: replicate
+        vocab="model" if (not vocab_size or vocab_size % ms == 0) else None,
+    )
+
+
+def _kv_seq_axes(long_context: bool, kv_head_model: bool):
+    axes = (("data",) if long_context else ()) + (
+        () if kv_head_model else ("model",)
+    )
+    return axes or None
+
+
+def constrain(x: jax.Array, mesh: Mesh | None, rules: Rules | None, *axes: str | None):
+    if mesh is None or rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, rules.spec(*axes)))
+
+
+def named(mesh: Mesh, rules: Rules, *axes: str | None) -> NamedSharding:
+    return NamedSharding(mesh, rules.spec(*axes))

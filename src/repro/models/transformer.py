@@ -1,0 +1,222 @@
+"""Unified decoder-only LM: dense (qwen2/llama/mistral/glm/phi3v) and MoE
+(mixtral/moonshot) families, with scanned layer stacks, KV-cache serving, and
+mesh-aware sharding. The VLM variant prepends stub patch embeddings."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    Ctx, _dt, attn_params, attn_sublayer, mlp_params, mlp_sublayer, norm,
+    norm_params,
+)
+from .moe import moe_params, moe_sublayer
+
+
+class KVCaches(NamedTuple):
+    k: jax.Array  # (L, B, Smax, Hkv, Dh)
+    v: jax.Array
+    length: jax.Array  # () int32 valid prefix
+
+
+# -- params --------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 8)
+    l = cfg.num_layers
+    init = jax.nn.initializers.normal(0.02)
+    p: dict[str, Any] = {
+        "embed": init(ks[0], (cfg.vocab_size, cfg.d_model), _dt(cfg)),
+        "blocks": {
+            "ln1": norm_params(cfg, cfg.d_model, (l,)),
+            "ln2": norm_params(cfg, cfg.d_model, (l,)),
+            "attn": attn_params(cfg, ks[1], stack=(l,)),
+        },
+        "final_norm": norm_params(cfg, cfg.d_model),
+        "lm_head": init(ks[2], (cfg.d_model, cfg.vocab_size), _dt(cfg)),
+    }
+    if cfg.is_moe:
+        p["blocks"]["moe"] = moe_params(cfg, ks[3], stack=(l,))
+    else:
+        p["blocks"]["mlp"] = mlp_params(cfg, ks[3], stack=(l,))
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    """Logical-axis PartitionSpecs mirroring init_params' tree.
+
+    fsdp shards the d_model dim of weights over "data"; heads/d_ff/vocab
+    shard over "model"; MoE experts over "data" (EP) + F over "model" (TP)
+    when divisible, else F over "model" only (the tp fallback).
+    """
+    L = None  # layer-stack dim never sharded
+
+    def nrm():
+        base = {"w": (L, None)}
+        if cfg.norm == "layernorm":
+            base["b"] = (L, None)
+        return base
+
+    attn = {
+        "wq": (L, "fsdp", "heads"),
+        "wk": (L, "fsdp", "heads"),
+        "wv": (L, "fsdp", "heads"),
+        "wo": (L, "heads", "fsdp"),
+    }
+    if cfg.qkv_bias:
+        attn.update({"bq": (L, "heads"), "bk": (L, "heads"), "bv": (L, "heads")})
+    p: dict[str, Any] = {
+        "embed": ("vocab", "fsdp"),
+        "blocks": {"ln1": nrm(), "ln2": nrm(), "attn": attn},
+        "final_norm": {"w": (None,)} if cfg.norm != "layernorm" else {"w": (None,), "b": (None,)},
+        "lm_head": ("fsdp", "vocab"),
+    }
+    if cfg.is_moe:
+        p["blocks"]["moe"] = {
+            "router": (L, None, None),
+            "w_gate": (L, "experts", "expert_inner", "moe_d_ff"),
+            "w_up": (L, "experts", "expert_inner", "moe_d_ff"),
+            "w_down": (L, "experts", "moe_d_ff", "expert_inner"),
+        }
+    else:
+        p["blocks"]["mlp"] = {
+            "w_gate": (L, "fsdp", "d_ff"),
+            "w_up": (L, "fsdp", "d_ff"),
+            "w_down": (L, "d_ff", "fsdp"),
+        }
+    return p
+
+
+# -- forward -------------------------------------------------------------------
+
+
+def _block(ctx: Ctx, p: dict, x: jax.Array, *, pos_offset=0, cache=None, cache_len=None):
+    h, new_cache = attn_sublayer(
+        ctx, p["attn"], norm(ctx, p["ln1"], x),
+        pos_offset=pos_offset, cache=cache, cache_len=cache_len,
+    )
+    x = x + h
+    if "moe" in p:
+        h2 = moe_sublayer(ctx, p["moe"], norm(ctx, p["ln2"], x))
+    else:
+        h2 = mlp_sublayer(ctx, p["mlp"], norm(ctx, p["ln2"], x))
+    x = x + h2
+    return ctx.cs(x, "batch", "residual_seq", None), new_cache
+
+
+def _embed(ctx: Ctx, params: dict, tokens: jax.Array, extra_embeds: jax.Array | None):
+    """Token (+optional patch-prefix) embedding. S1 surface: the activation
+    stream is replicated over "model" while the table stays vocab-sharded."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if extra_embeds is not None:  # vlm: prepend stub patch embeddings
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    return ctx.cs(x, "batch", "residual_seq", None)
+
+
+def _unembed(ctx: Ctx, params: dict, x: jax.Array) -> jax.Array:
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return ctx.cs(logits, "batch", "seq", "vocab")
+
+
+def forward(
+    ctx: Ctx, params: dict, tokens: jax.Array, extra_embeds: jax.Array | None = None
+) -> jax.Array:
+    """Training/scoring forward: (B, S) tokens -> (B, S[+Np], V) logits."""
+    return _unembed(ctx, params, backbone(ctx, params, tokens, extra_embeds))
+
+
+def backbone(ctx: Ctx, params: dict, tokens: jax.Array, extra_embeds=None) -> jax.Array:
+    """Embed + scanned blocks + final norm (no unembed)."""
+    cfg = ctx.cfg
+    x = _embed(ctx, params, tokens, extra_embeds)
+
+    def body(carry, pl):
+        y, _ = _block(ctx, pl, carry)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return norm(ctx, params["final_norm"], x)
+
+
+def loss_fn(ctx: Ctx, params: dict, batch: dict) -> jax.Array:
+    from .losses import chunked_cross_entropy
+
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = backbone(ctx, params, inputs, batch.get("patches"))
+    if "patches" in batch:  # loss only on the token positions
+        x = x[:, batch["patches"].shape[1]:]
+    return chunked_cross_entropy(ctx, x, params["lm_head"], labels)
+
+
+# -- serving -------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> KVCaches:
+    shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.hd)
+    return KVCaches(
+        k=jnp.zeros(shape, _dt(cfg)),
+        v=jnp.zeros(shape, _dt(cfg)),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_specs(cfg: ModelConfig) -> KVCaches:
+    """Logical PartitionSpecs for KV caches (kv_seq shards for long-context)."""
+    spec = (None, "batch", "kv_seq", "kv_heads4d", None)
+    return KVCaches(k=spec, v=spec, length=())
+
+
+def prefill(
+    ctx: Ctx, params: dict, tokens: jax.Array, max_len: int,
+    extra_embeds: jax.Array | None = None,
+) -> tuple[jax.Array, KVCaches]:
+    """Run the prompt, build KV caches sized max_len. Returns (last-token
+    logits, caches)."""
+    cfg = ctx.cfg
+    x = _embed(ctx, params, tokens, extra_embeds)
+    s = x.shape[1]
+
+    def body(carry, pl):
+        y, (k, v) = _block(ctx, pl, carry)
+        return y, (k, v)
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = norm(ctx, params["final_norm"], x)
+    logits = _unembed(ctx, params, x[:, -1:, :])
+    b = tokens.shape[0]
+    caches = init_caches(cfg, b, max(max_len, s))  # vlm: patches extend s
+    caches = KVCaches(
+        k=jax.lax.dynamic_update_slice(caches.k, ks.astype(caches.k.dtype), (0, 0, 0, 0, 0)),
+        v=jax.lax.dynamic_update_slice(caches.v, vs.astype(caches.v.dtype), (0, 0, 0, 0, 0)),
+        length=jnp.asarray(s, jnp.int32),
+    )
+    return logits, caches
+
+
+def decode_step(
+    ctx: Ctx, params: dict, token: jax.Array, caches: KVCaches
+) -> tuple[jax.Array, KVCaches]:
+    """One serve step: (B, 1) token -> (B, 1, V) logits, caches advanced."""
+    cfg = ctx.cfg
+    x = _embed(ctx, params, token, None)
+    ln = caches.length
+
+    def body(carry, scanned):
+        pl, ck, cv = scanned
+        y, (nk, nv) = _block(ctx, pl, carry, pos_offset=ln, cache=(ck, cv), cache_len=ln)
+        return y, (nk, nv)
+
+    x, (nks, nvs) = jax.lax.scan(body, x, (params["blocks"], caches.k, caches.v))
+    x = norm(ctx, params["final_norm"], x)
+    logits = _unembed(ctx, params, x)
+    return logits, KVCaches(k=nks, v=nvs, length=ln + token.shape[1])

@@ -1,0 +1,218 @@
+"""Zamba2 hybrid: Mamba-2 backbone + ONE shared attention block applied at a
+fixed cadence (paper-S1 made literal: the shared block is read-hot replicated
+state reused at every application point, while each point keeps its own KV
+cache). 54 layers / period 6 -> 9 shared-attention applications."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    Ctx, _dt, attn_params, attn_sublayer, mlp_params, mlp_sublayer, norm,
+    norm_params,
+)
+from .mamba2 import MambaLayerState, mamba_param_specs, mamba_params, mamba_sublayer
+
+
+class ZambaCaches(NamedTuple):
+    mamba_h: jax.Array  # (L, B, H, N, P)
+    mamba_conv: jax.Array  # (L, B, W-1, Dconv)
+    attn_k: jax.Array  # (A, B, Smax, Hkv, Dh) one per application point
+    attn_v: jax.Array
+    length: jax.Array
+
+
+def _groups(cfg: ModelConfig) -> tuple[int, int]:
+    period = cfg.shared_attn_period or cfg.num_layers
+    assert cfg.num_layers % period == 0
+    return cfg.num_layers // period, period  # (n_groups, per_group)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    g, per = _groups(cfg)
+    l = cfg.num_layers
+    dt = _dt(cfg)
+    init = jax.nn.initializers.normal(0.02)
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "blocks": {
+            "ln": norm_params(cfg, cfg.d_model, (l,)),
+            "mamba": mamba_params(cfg, ks[1], stack=(l,)),
+        },
+        "shared_attn": {  # ONE block, reused at every application point (S1)
+            "ln1": norm_params(cfg, cfg.d_model),
+            "ln2": norm_params(cfg, cfg.d_model),
+            "attn": attn_params(cfg, ks[2]),
+            "mlp": mlp_params(cfg, ks[3]),
+        },
+        "final_norm": norm_params(cfg, cfg.d_model),
+        "lm_head": init(ks[4], (cfg.d_model, cfg.vocab_size), dt),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    attn = {
+        "wq": ("fsdp", "heads"), "wk": ("fsdp", "heads"),
+        "wv": ("fsdp", "heads"), "wo": ("heads", "fsdp"),
+    }
+    return {
+        "embed": ("vocab", "fsdp"),
+        "blocks": {"ln": {"w": (None, None)}, "mamba": mamba_param_specs()},
+        "shared_attn": {
+            "ln1": {"w": (None,)}, "ln2": {"w": (None,)},
+            "attn": attn,
+            "mlp": {
+                "w_gate": ("fsdp", "d_ff"), "w_up": ("fsdp", "d_ff"),
+                "w_down": ("d_ff", "fsdp"),
+            },
+        },
+        "final_norm": {"w": (None,)},
+        "lm_head": ("fsdp", "vocab"),
+    }
+
+
+def _shared_attn_block(ctx, p, x, *, pos_offset=0, cache=None, cache_len=None):
+    h, new_cache = attn_sublayer(
+        ctx, p["attn"], norm(ctx, p["ln1"], x),
+        pos_offset=pos_offset, cache=cache, cache_len=cache_len,
+    )
+    x = x + h
+    x = x + mlp_sublayer(ctx, p["mlp"], norm(ctx, p["ln2"], x))
+    return x, new_cache
+
+
+def _backbone(ctx: Ctx, params: dict, x: jax.Array, caches: ZambaCaches | None):
+    """Shared forward core: groups of scanned mamba layers + shared attn."""
+    cfg = ctx.cfg
+    g, per = _groups(cfg)
+    b = x.shape[0]
+    length = caches.length if caches is not None else None
+    new_h, new_conv, new_k, new_v = [], [], [], []
+
+    def group_blocks(gi):
+        return jax.tree.map(lambda a: a[gi * per : (gi + 1) * per], params["blocks"])
+
+    for gi in range(g):
+        blocks = group_blocks(gi)
+
+        def body(carry, scanned):
+            if caches is None:
+                pl, = scanned
+                st = None
+            else:
+                pl, hst, cst = scanned
+                st = MambaLayerState(h=hst, conv=cst)
+            xn = norm(ctx, pl["ln"], carry)
+            out, new_st = mamba_sublayer(ctx, pl["mamba"], xn, st)
+            return carry + out, (new_st.h, new_st.conv)
+
+        if cfg.remat and caches is None:
+            body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+        xs = (
+            (blocks,)
+            if caches is None
+            else (blocks, caches.mamba_h[gi * per : (gi + 1) * per],
+                  caches.mamba_conv[gi * per : (gi + 1) * per])
+        )
+        x, (hs, convs) = jax.lax.scan(body, x, xs)
+        new_h.append(hs)
+        new_conv.append(convs)
+        if caches is None:
+            x, (k, v) = _shared_attn_block(ctx, params["shared_attn"], x)
+        else:
+            x, (k, v) = _shared_attn_block(
+                ctx, params["shared_attn"], x, pos_offset=length,
+                cache=(caches.attn_k[gi], caches.attn_v[gi]), cache_len=length,
+            )
+        new_k.append(k)
+        new_v.append(v)
+    aux = (
+        jnp.concatenate(new_h), jnp.concatenate(new_conv),
+        jnp.stack(new_k), jnp.stack(new_v),
+    )
+    return x, aux
+
+
+def forward(ctx: Ctx, params: dict, tokens: jax.Array, extra_embeds=None) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.cs(x, "batch", "residual_seq", None)
+    x, _ = _backbone(ctx, params, x, None)
+    x = norm(ctx, params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return ctx.cs(logits, "batch", "seq", "vocab")
+
+
+def loss_fn(ctx: Ctx, params: dict, batch: dict) -> jax.Array:
+    from .losses import chunked_cross_entropy
+
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = jnp.take(params["embed"], inputs, axis=0)
+    x = ctx.cs(x, "batch", "residual_seq", None)
+    x, _ = _backbone(ctx, params, x, None)
+    x = norm(ctx, params["final_norm"], x)
+    return chunked_cross_entropy(ctx, x, params["lm_head"], labels)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> ZambaCaches:
+    from .mamba2 import CONV_W, P_HEAD
+
+    g, _ = _groups(cfg)
+    di = 2 * cfg.d_model
+    h = di // P_HEAD
+    return ZambaCaches(
+        mamba_h=jnp.zeros((cfg.num_layers, batch, h, cfg.ssm_state, P_HEAD), jnp.float32),
+        mamba_conv=jnp.zeros(
+            (cfg.num_layers, batch, CONV_W - 1, di + 2 * cfg.ssm_state), _dt(cfg)
+        ),
+        attn_k=jnp.zeros((g, batch, max_len, cfg.num_kv_heads, cfg.hd), _dt(cfg)),
+        attn_v=jnp.zeros((g, batch, max_len, cfg.num_kv_heads, cfg.hd), _dt(cfg)),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_specs(cfg: ModelConfig) -> ZambaCaches:
+    return ZambaCaches(
+        mamba_h=(None, "batch", "heads4d", None, None),
+        mamba_conv=(None, "batch", None, "heads"),
+        attn_k=(None, "batch", "kv_seq", "kv_heads4d", None),
+        attn_v=(None, "batch", "kv_seq", "kv_heads4d", None),
+        length=(),
+    )
+
+
+def prefill(ctx: Ctx, params: dict, tokens: jax.Array, max_len: int):
+    cfg = ctx.cfg
+    b, s = tokens.shape
+    caches0 = init_caches(cfg, b, max_len)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = ctx.cs(x, "batch", "residual_seq", None)
+    x, (hs, convs, ks, vs) = _backbone(ctx, params, x, None)
+    x = norm(ctx, params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"])
+    caches = ZambaCaches(
+        mamba_h=hs, mamba_conv=convs,
+        attn_k=jax.lax.dynamic_update_slice(
+            caches0.attn_k, ks.astype(caches0.attn_k.dtype), (0, 0, 0, 0, 0)
+        ),
+        attn_v=jax.lax.dynamic_update_slice(
+            caches0.attn_v, vs.astype(caches0.attn_v.dtype), (0, 0, 0, 0, 0)
+        ),
+        length=jnp.asarray(s, jnp.int32),
+    )
+    return logits, caches
+
+
+def decode_step(ctx: Ctx, params: dict, token: jax.Array, caches: ZambaCaches):
+    x = jnp.take(params["embed"], token, axis=0)  # (B, 1, D)
+    x, (hs, convs, ks, vs) = _backbone(ctx, params, x, caches)
+    x = norm(ctx, params["final_norm"], x)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, ZambaCaches(
+        mamba_h=hs, mamba_conv=convs, attn_k=ks, attn_v=vs,
+        length=caches.length + token.shape[1],
+    )

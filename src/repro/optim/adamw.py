@@ -1,0 +1,120 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and optional
+error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+The compression hook implements the standard EF-SGD trick: quantize the
+gradient to int8 with a per-tensor scale, carry the quantization residual in
+the optimizer state, add it back next step. At 1000+ node scale the cross-pod
+gradient reduction is the slowest collective (lowest-bandwidth links); 4x
+smaller payloads move the collective roofline term down proportionally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    mu: Any  # pytree like params (f32)
+    nu: Any  # pytree like params (f32)
+    ef_residual: Any | None  # error-feedback residual (None if compression off)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float | None = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    compress_grads: bool = False  # int8 EF compression (cross-pod trick)
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to min_lr_frac."""
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    ef = (
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if cfg.compress_grads
+        else None
+    )
+    nu = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=nu, ef_residual=ef)
+
+
+def _quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_decompress(g: jax.Array, residual: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """EF int8 round-trip: returns (decompressed grad, new residual)."""
+    g_ef = g + residual
+    q, scale = _quantize_int8(g_ef)
+    deq = q.astype(jnp.float32) * scale
+    return deq, g_ef - deq
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg",), donate_argnums=(0, 1))
+def apply_updates(
+    params: Any, state: AdamWState, grads: Any, cfg: AdamWConfig
+) -> tuple[Any, AdamWState, dict[str, jax.Array]]:
+    """One AdamW step. Returns (params, state, metrics)."""
+    step = state.step + 1
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    ef = state.ef_residual
+    if cfg.compress_grads:
+        out = jax.tree.map(compress_decompress, grads, ef)
+        grads = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        ef = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda n, g: cfg.b2 * n + (1 - cfg.b2) * g * g, state.nu, grads)
+
+    def upd(p, m, n):
+        mhat = m / b1c
+        nhat = n / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return (
+        new_params,
+        AdamWState(step=step, mu=mu, nu=nu, ef_residual=ef),
+        {"grad_norm": gnorm, "lr": lr},
+    )

@@ -1,0 +1,2 @@
+from .elastic import ElasticPlan, make_elastic_mesh, plan_remesh
+from .supervisor import Failure, RunResult, SupervisorConfig, run_supervised, straggler_report

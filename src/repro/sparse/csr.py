@@ -1,0 +1,91 @@
+"""CSR sparse-matrix container (paper §3.1 Fig. 2 layout).
+
+The Emu stores the row-offset array striped across nodelets and keeps each
+row's nonzeros together on one nodelet (jagged ``col``/``V`` arrays). Here the
+container is device-agnostic; the *partitioned* views used by the distributed
+ops live in :mod:`repro.core.spmv`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row matrix: three arrays + a static shape."""
+
+    indptr: jax.Array  # (n_rows + 1,) int32
+    indices: jax.Array  # (nnz,) int32 column ids
+    data: jax.Array  # (nnz,) values
+    shape: tuple[int, int]  # static
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.data), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, shape, leaves):
+        return cls(*leaves, shape=shape)
+
+    # -- basic properties ------------------------------------------------
+    @property
+    def nnz(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def n_rows(self) -> int:
+        return self.shape[0]
+
+    @property
+    def n_cols(self) -> int:
+        return self.shape[1]
+
+    def row_lengths(self) -> jax.Array:
+        return self.indptr[1:] - self.indptr[:-1]
+
+    # -- conversions -------------------------------------------------------
+    @classmethod
+    def from_coo(cls, rows, cols, vals, shape) -> "CSR":
+        rows = np.asarray(rows, dtype=np.int64)
+        cols = np.asarray(cols, dtype=np.int64)
+        vals = np.asarray(vals)
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        indptr = np.zeros(shape[0] + 1, dtype=np.int64)
+        np.add.at(indptr, rows + 1, 1)
+        indptr = np.cumsum(indptr)
+        return cls(
+            indptr=jnp.asarray(indptr, dtype=jnp.int32),
+            indices=jnp.asarray(cols, dtype=jnp.int32),
+            data=jnp.asarray(vals),
+            shape=tuple(int(s) for s in shape),
+        )
+
+    @classmethod
+    def from_dense(cls, dense: np.ndarray) -> "CSR":
+        dense = np.asarray(dense)
+        rows, cols = np.nonzero(dense)
+        return cls.from_coo(rows, cols, dense[rows, cols], dense.shape)
+
+    def to_dense(self) -> jax.Array:
+        row_of_nnz = jnp.searchsorted(
+            self.indptr, jnp.arange(self.nnz, dtype=self.indptr.dtype), side="right"
+        ) - 1
+        out = jnp.zeros(self.shape, dtype=self.data.dtype)
+        return out.at[row_of_nnz, self.indices].add(self.data)
+
+
+@partial(jax.jit, static_argnames=())
+def spmv_csr_ref(a: CSR, x: jax.Array) -> jax.Array:
+    """Reference CSR SpMV (y = A @ x) via segment-sum. Oracle for all SpMV paths."""
+    row_of_nnz = jnp.searchsorted(
+        a.indptr, jnp.arange(a.nnz, dtype=a.indptr.dtype), side="right"
+    ) - 1
+    prod = a.data * jnp.take(x, a.indices, axis=0)
+    return jax.ops.segment_sum(prod, row_of_nnz, num_segments=a.n_rows)

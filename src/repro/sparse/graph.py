@@ -1,0 +1,85 @@
+"""STINGER-inspired partitioned graph (paper §3.2).
+
+Vertices are striped across ``P`` logical nodelets exactly as on the Chick
+(vertex ``v`` lives on nodelet ``v % P``); each vertex's adjacency stays with
+its owner ("edge blocks from the local pool"). The TPU-blocked realization is
+a padded (P, V_p, K) neighbor tensor — edge-block chains become contiguous
+padded rows (DESIGN.md §2: regularize fine-grained structures into tiles).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .csr import CSR
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartitionedGraph:
+    """Graph striped over P logical nodelets.
+
+    Global vertex id v  <->  (nodelet p = v % P, local slot l = v // P).
+    """
+
+    adj: jax.Array  # (P, V_p, K) int32 global neighbor ids, -1 = pad
+    deg: jax.Array  # (P, V_p) int32 true degrees
+    n_vertices: int  # static (<= P * V_p)
+
+    def tree_flatten(self):
+        return (self.adj, self.deg), self.n_vertices
+
+    @classmethod
+    def tree_unflatten(cls, n, leaves):
+        return cls(*leaves, n_vertices=n)
+
+    @property
+    def P(self) -> int:
+        return self.adj.shape[0]
+
+    @property
+    def v_per_nodelet(self) -> int:
+        return self.adj.shape[1]
+
+    @property
+    def k(self) -> int:
+        return self.adj.shape[2]
+
+    @property
+    def n_edges(self) -> int:
+        return int(self.deg.sum())
+
+
+def partition_graph(a: CSR, p: int, k: int | None = None) -> PartitionedGraph:
+    """Stripe an adjacency CSR over ``p`` nodelets (v % p ownership)."""
+    indptr = np.asarray(a.indptr)
+    indices = np.asarray(a.indices)
+    n = a.n_rows
+    vp = -(-n // p)
+    lens = indptr[1:] - indptr[:-1]
+    kmax = int(lens.max()) if n else 1
+    k = k or max(kmax, 1)
+    if kmax > k:
+        raise ValueError(f"max degree {kmax} > k={k}")
+    adj = np.full((p, vp, k), -1, dtype=np.int32)
+    deg = np.zeros((p, vp), dtype=np.int32)
+    for v in range(n):
+        s, e = indptr[v], indptr[v + 1]
+        adj[v % p, v // p, : e - s] = indices[s:e]
+        deg[v % p, v // p] = e - s
+    return PartitionedGraph(adj=jnp.asarray(adj), deg=jnp.asarray(deg), n_vertices=n)
+
+
+def owner_of(v: jax.Array, p: int) -> jax.Array:
+    return v % p
+
+
+def local_slot(v: jax.Array, p: int) -> jax.Array:
+    return v // p
+
+
+def global_id(p_idx: jax.Array, slot: jax.Array, p: int) -> jax.Array:
+    return slot * p + p_idx

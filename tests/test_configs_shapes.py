@@ -1,0 +1,50 @@
+"""Config/shape registry invariants + divisibility constraints the production
+mesh relies on."""
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable, cells, get_config, reduced_config
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert len(cells(ARCHS)) == 40
+
+
+def test_long_500k_applicability():
+    runs = [a for a in ARCHS if applicable(get_config(a), SHAPES["long_500k"])[0]]
+    # SSM, hybrid, and SWA archs only (DESIGN.md §7)
+    assert sorted(runs) == ["mixtral-8x22b", "rwkv6-3b", "zamba2-2.7b"]
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_flattened_projection_dims_divide_model_axis(arch):
+    """TP sharding requires flattened head/ffn/vocab dims divisible by 16
+    (whisper's vocab is the one documented exception -> replicated)."""
+    cfg = get_config(arch)
+    ms = 16
+    assert (cfg.num_heads * cfg.hd) % ms == 0, "q projection"
+    assert (cfg.num_kv_heads * cfg.hd) % ms == 0, "kv projection"
+    assert cfg.d_model % ms == 0, "fsdp dim"
+    if cfg.is_moe:
+        assert (cfg.moe_d_ff or cfg.d_ff) % ms == 0
+    else:
+        assert cfg.d_ff % ms == 0
+    if arch != "whisper-small":
+        assert cfg.vocab_size % ms == 0
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_configs_are_small(arch):
+    cfg = reduced_config(arch)
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 256
+    assert cfg.vocab_size <= 1024
+    assert cfg.family == get_config(arch).family
+
+
+def test_global_batch_divides_mesh():
+    for s in SHAPES.values():
+        if s.kind == "train":
+            assert s.global_batch % 32 == 0  # pod x data
+        # decode_32k batch 128 over data 16 ok; long_500k batch 1 replicated

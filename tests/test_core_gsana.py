@@ -1,0 +1,87 @@
+"""Core GSANA: S3 layout strategy — scheme equivalence, recall, layout effects."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Scheme, bucketize, compute_similarity, generate_alignment_pair,
+    gsana_effective_bw, hilbert_order_of_buckets, layout_blk, layout_hcb,
+    neighbor_buckets, pick_grid, plan_stats, recall_at_k, xy_to_d, d_to_xy,
+)
+
+
+@pytest.fixture(scope="module")
+def problem():
+    vs1, vs2, pi = generate_alignment_pair(384, seed=11)
+    grid = pick_grid(384, 32)
+    cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+    b1 = bucketize(vs1, grid, cap=cap)
+    b2 = bucketize(vs2, grid, cap=cap)
+    return vs1, vs2, b1, b2, pi
+
+
+def test_hilbert_curve_bijection():
+    order = 4
+    d = np.arange(256)
+    x, y = d_to_xy(order, d)
+    assert (xy_to_d(order, x, y) == d).all()
+    # consecutive points are grid neighbors (the locality property)
+    dx, dy = np.abs(np.diff(x)), np.abs(np.diff(y))
+    assert ((dx + dy) == 1).all()
+
+
+def test_neighbor_buckets_window():
+    nb = neighbor_buckets(4)
+    assert nb.shape == (16, 9)
+    assert (nb[5] >= 0).all()  # interior bucket has 9 neighbors
+    assert (nb[0] >= 0).sum() == 4  # corner has 4
+
+
+def test_all_equals_pair(problem):
+    """Paper §3.3.1: ALL and PAIR compute the same similarity top-k."""
+    vs1, vs2, b1, b2, pi = problem
+    cA, sA = compute_similarity(vs1, vs2, b1, b2, k=4, scheme=Scheme.ALL)
+    cP, sP = compute_similarity(vs1, vs2, b1, b2, k=4, scheme=Scheme.PAIR)
+    sa = np.where(np.isfinite(np.asarray(sA)), np.asarray(sA), -1.0)
+    sp = np.where(np.isfinite(np.asarray(sP)), np.asarray(sP), -1.0)
+    assert np.allclose(sa, sp, atol=1e-5)
+
+
+def test_alignment_recall(problem):
+    """The aligner finds ground-truth partners (paper: GSANA achieves high
+    recall with reduced problem space)."""
+    vs1, vs2, b1, b2, pi = problem
+    cand, _ = compute_similarity(vs1, vs2, b1, b2, k=4)
+    assert recall_at_k(cand, pi) > 0.9
+
+
+def test_hcb_reduces_migrations(problem):
+    """Paper Fig. 11: HCB cuts thread migrations vs BLK (10-36% time gain)."""
+    vs1, vs2, b1, b2, _ = problem
+    p = 8
+    pl_blk = layout_blk(b1, b2, vs1.n, vs2.n, p)
+    pl_hcb = layout_hcb(b1, b2, p)
+    st_blk = plan_stats(vs1, vs2, b1, b2, pl_blk, Scheme.PAIR, p)
+    st_hcb = plan_stats(vs1, vs2, b1, b2, pl_hcb, Scheme.PAIR, p)
+    assert st_hcb.traffic.migrations < st_blk.traffic.migrations
+    assert st_hcb.total_comparisons == st_blk.total_comparisons
+
+
+def test_pair_improves_balance(problem):
+    """Paper §5.3: PAIR's finer granularity gives better modeled speedup."""
+    vs1, vs2, b1, b2, _ = problem
+    p = 8
+    pl = layout_blk(b1, b2, vs1.n, vs2.n, p)
+    st_all = plan_stats(vs1, vs2, b1, b2, pl, Scheme.ALL, p, threads_per_nodelet=32)
+    st_pair = plan_stats(vs1, vs2, b1, b2, pl, Scheme.PAIR, p, threads_per_nodelet=32)
+    assert st_pair.speedup_model >= st_all.speedup_model
+
+
+def test_effective_bw_positive(problem):
+    vs1, vs2, b1, b2, _ = problem
+    bw = gsana_effective_bw(vs1, vs2, b1, b2, seconds=1.0)
+    assert bw > 0
+
+
+def test_hilbert_rank_is_permutation():
+    r = hilbert_order_of_buckets(8)
+    assert sorted(r.tolist()) == list(range(64))

@@ -1,0 +1,65 @@
+"""Multi-device shard_map paths for the core algorithms.
+
+Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+so the main test process keeps seeing 1 device (per the dry-run isolation
+rule). Marked slow-ish; one subprocess covers all assertions.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.sparse import *
+from repro.core import *
+
+mesh = jax.make_mesh((8,), ("nodelet",), axis_types=(jax.sharding.AxisType.Auto,))
+a = laplacian_2d(16)
+x = jnp.asarray(np.random.default_rng(0).standard_normal(256).astype(np.float32))
+pe = partition_ell(a, 8)
+ref = spmv_csr_ref(a, x)
+y1 = gather_result(spmv(pe, x, MigratoryStrategy(replicate_x=True), mesh=mesh), 256)
+y2 = gather_result(spmv(pe, stripe_vector(x, 8), MigratoryStrategy(replicate_x=False), mesh=mesh), 256)
+assert abs(np.asarray(y1) - np.asarray(ref)).max() < 1e-4, "replicated spmv"
+assert abs(np.asarray(y2) - np.asarray(ref)).max() < 1e-4, "striped spmv"
+
+g = edges_to_csr(erdos_renyi_edges(9, 8, seed=1), 512)
+pg = partition_graph(g, 8)
+p_ref = np.asarray(bfs(pg, 3))
+for comm in (Comm.REMOTE_WRITE, Comm.MIGRATE):
+    p_d = np.asarray(bfs(pg, 3, MigratoryStrategy(comm=comm), mesh=mesh))
+    assert validate_parents(pg, 3, p_d), comm
+    assert (((p_d >= 0) == (p_ref >= 0)).all()), comm
+
+# collective structure: push must use all-to-all, pull must use all-gather
+from jax.sharding import PartitionSpec as P
+import re
+def hlo_for(comm):
+    from repro.core.bfs import _bfs_distributed
+    import repro.core.bfs as bfsmod
+    adj = jnp.transpose(pg.adj, (1, 0, 2)).reshape(-1, pg.k)
+    def run(adj):
+        return bfsmod._bfs_distributed(pg, 3, MigratoryStrategy(comm=comm), mesh, "nodelet", 64)
+    return jax.jit(lambda: _bfs_distributed(pg, 3, MigratoryStrategy(comm=comm), mesh, "nodelet", 64)).lower().compile().as_text()
+push_hlo = hlo_for(Comm.REMOTE_WRITE)
+pull_hlo = hlo_for(Comm.MIGRATE)
+assert "all-to-all" in push_hlo, "push should lower to all-to-all"
+assert "all-gather" in pull_hlo, "pull should lower to all-gather"
+print("DISTRIBUTED-CORE-OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_core_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env, capture_output=True, text=True,
+        timeout=900,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
+    assert "DISTRIBUTED-CORE-OK" in r.stdout

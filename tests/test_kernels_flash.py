@@ -1,0 +1,84 @@
+"""Pallas flash-attention kernel vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+
+
+def _rand_qkv(rng, b, hq, hkv, sq, skv, d, dtype=np.float32):
+    q = jnp.asarray(rng.standard_normal((b, hq, sq, d)).astype(dtype))
+    k = jnp.asarray(rng.standard_normal((b, hkv, skv, d)).astype(dtype))
+    v = jnp.asarray(rng.standard_normal((b, hkv, skv, d)).astype(dtype))
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,window", [
+    (2, 4, 2, 64, 64, 32, True, None),    # GQA causal
+    (1, 8, 8, 128, 128, 64, True, None),  # MHA
+    (1, 8, 1, 64, 64, 32, True, None),    # MQA
+    (1, 4, 4, 64, 192, 32, True, None),   # q tail of longer kv (chunked decode)
+    (2, 4, 2, 96, 96, 32, True, 48),      # sliding window (Mixtral SWA)
+    (1, 2, 1, 64, 64, 32, False, None),   # non-causal (encoder / cross-attn)
+    (1, 2, 2, 100, 100, 32, True, None),  # non-block-multiple seq (padding)
+])
+def test_flash_matches_ref(b, hq, hkv, sq, skv, d, causal, window):
+    rng = np.random.default_rng(b * sq + skv)
+    q, k, v = _rand_qkv(rng, b, hq, hkv, sq, skv, d)
+    o_k = flash_attention(q, k, v, causal=causal, window=window, block_q=32, block_k=32)
+    o_r = attention_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), rtol=1e-4, atol=1e-5)
+
+
+def test_flash_block_size_invariance():
+    rng = np.random.default_rng(7)
+    q, k, v = _rand_qkv(rng, 1, 4, 2, 128, 128, 32)
+    outs = [
+        np.asarray(flash_attention(q, k, v, block_q=bq, block_k=bk))
+        for bq, bk in [(32, 32), (64, 32), (32, 64), (128, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-5, atol=1e-6)
+
+
+def test_flash_bf16():
+    rng = np.random.default_rng(3)
+    q, k, v = _rand_qkv(rng, 1, 4, 2, 64, 64, 64)
+    o_k = flash_attention(
+        q.astype(jnp.bfloat16), k.astype(jnp.bfloat16), v.astype(jnp.bfloat16),
+        block_q=32, block_k=32,
+    )
+    o_r = attention_reference(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(o_k.astype(jnp.float32)), np.asarray(o_r), rtol=0.1, atol=0.05
+    )
+
+
+def test_flash_window_equals_full_when_wide():
+    """A window >= seq must equal full causal attention."""
+    rng = np.random.default_rng(5)
+    q, k, v = _rand_qkv(rng, 1, 2, 2, 64, 64, 32)
+    o_w = flash_attention(q, k, v, window=64, block_q=32, block_k=32)
+    o_f = flash_attention(q, k, v, window=None, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(o_w), np.asarray(o_f), rtol=1e-6)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    b=st.integers(1, 2),
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([1, 2, 4]),
+    sq=st.sampled_from([16, 48, 64]),
+    extra_kv=st.sampled_from([0, 16, 64]),
+    d=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_flash(b, hkv, group, sq, extra_kv, d, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = _rand_qkv(rng, b, hkv * group, hkv, sq, sq + extra_kv, d)
+    o_k = flash_attention(q, k, v, causal=causal, block_q=16, block_k=16)
+    o_r = attention_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), rtol=1e-4, atol=1e-4)
