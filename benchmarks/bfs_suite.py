@@ -1,4 +1,4 @@
-"""BFS benchmarks: paper Figs. 7-9.
+"""BFS benchmarks: paper Figs. 7-9, through ``engine.run``.
 
 - fig7_strategies: migrate vs remote-write traffic + measured MTEPS
 - fig8_balance:    Erdős–Rényi (balanced) vs RMAT (skewed) degradation
@@ -11,11 +11,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Comm, MigratoryStrategy, bfs, bfs_traffic, teps
-from repro.core.bfs import UNVISITED, _adj_global, _expand_dense
+from repro.core import Comm, MigratoryStrategy, teps
+from repro.core.bfs import UNVISITED, _adj_global
+from repro.engine import BFSInputs, BFSOp, run as engine_run
 from repro.sparse import edges_to_csr, erdos_renyi_edges, partition_graph, rmat_edges
 
-from .util import emit, time_fn
+from .util import emit, emit_report, time_fn
 
 
 def _graph(kind: str, scale: int, ef: int = 8, p: int = 8):
@@ -29,35 +30,35 @@ def _graph(kind: str, scale: int, ef: int = 8, p: int = 8):
     return partition_graph(g, p)
 
 
-def fig7_strategies(full: bool = False):
+def fig7_strategies(full: bool = False, quick: bool = False):
     rows = []
-    scales = (12, 13, 14) if not full else (12, 13, 14, 15, 16)
+    scales = (10,) if quick else ((12, 13, 14, 15, 16) if full else (12, 13, 14))
     for scale in scales:
-        pg = _graph("er", scale)
-        sec = time_fn(lambda: bfs(pg, 0), iters=3)
+        inputs = BFSInputs(_graph("er", scale), 0)
         for comm in (Comm.MIGRATE, Comm.REMOTE_WRITE):
-            st = bfs_traffic(pg, 0, MigratoryStrategy(comm=comm))
-            mteps = teps(st.edges_traversed, sec) / 1e6
-            rows.append(emit(
-                "fig7_bfs_strategies", f"scale={scale}_{comm.value}", sec,
-                mteps=round(mteps, 2),
-                traffic_mb=round(st.traffic.total_bytes / 1e6, 2),
-                rounds=st.rounds,
+            _, rep = engine_run(
+                BFSOp(), inputs, MigratoryStrategy(comm=comm), "local",
+                iters=3, warmup=1,
+            )
+            rows.append(emit_report(
+                "fig7_bfs_strategies", f"scale={scale}_{comm.value}", rep,
+                traffic_mb=round(rep.traffic.total_bytes / 1e6, 2),
             ))
     return rows
 
 
-def fig8_balance(full: bool = False):
+def fig8_balance(full: bool = False, quick: bool = False):
     rows = []
-    scale = 14 if not full else 16
+    scale = 10 if quick else (16 if full else 14)
     for kind in ("er", "rmat"):
         pg = _graph(kind, scale)
         deg = np.asarray(pg.deg)
-        sec = time_fn(lambda: bfs(pg, 0), iters=3)
-        st = bfs_traffic(pg, 0, MigratoryStrategy(comm=Comm.REMOTE_WRITE))
-        rows.append(emit(
-            "fig8_bfs_balance", f"{kind}_scale={scale}", sec,
-            mteps=round(teps(st.edges_traversed, sec) / 1e6, 2),
+        _, rep = engine_run(
+            BFSOp(), BFSInputs(pg, 0), MigratoryStrategy(comm=Comm.REMOTE_WRITE),
+            "local", iters=3, warmup=1,
+        )
+        rows.append(emit_report(
+            "fig8_bfs_balance", f"{kind}_scale={scale}", rep,
             max_deg=int(deg.max()),
             nodelet_edge_imbalance=round(
                 float(deg.sum(axis=1).max() / np.maximum(deg.sum(axis=1).mean(), 1)), 2
@@ -100,25 +101,25 @@ def _bfs_pull_naive(pg, root: int):
     return run
 
 
-def fig9_compare(full: bool = False):
+def fig9_compare(full: bool = False, quick: bool = False):
     rows = []
-    scales = (12, 13, 14) if not full else (13, 14, 15, 16)
+    scales = (10,) if quick else ((13, 14, 15, 16) if full else (12, 13, 14))
     for scale in scales:
         pg = _graph("er", scale)
-        st = bfs_traffic(pg, 0, MigratoryStrategy(comm=Comm.REMOTE_WRITE))
-        sec_push = time_fn(lambda: bfs(pg, 0), iters=3)
+        _, rep = engine_run(
+            BFSOp(), BFSInputs(pg, 0), MigratoryStrategy(comm=Comm.REMOTE_WRITE),
+            "local", iters=3, warmup=1,
+        )
+        rows.append(emit_report("fig9_bfs_compare", f"push_scale={scale}", rep))
         naive = _bfs_pull_naive(pg, 0)
         sec_pull = time_fn(lambda: naive(jnp.int32(0)), iters=3)
         rows.append(emit(
-            "fig9_bfs_compare", f"push_scale={scale}", sec_push,
-            mteps=round(teps(st.edges_traversed, sec_push) / 1e6, 2),
-        ))
-        rows.append(emit(
             "fig9_bfs_compare", f"naive_pull_scale={scale}", sec_pull,
-            mteps=round(teps(st.edges_traversed, sec_pull) / 1e6, 2),
+            op="bfs", substrate="local",
+            mteps=round(teps(rep.metrics["edges_traversed"], sec_pull) / 1e6, 2),
         ))
     return rows
 
 
-def run(full: bool = False):
-    return fig7_strategies(full) + fig8_balance(full) + fig9_compare(full)
+def run(full: bool = False, quick: bool = False):
+    return fig7_strategies(full, quick) + fig8_balance(full, quick) + fig9_compare(full, quick)

@@ -1,110 +1,106 @@
-"""GSANA benchmarks: paper Figs. 10-12.
+"""GSANA benchmarks: paper Figs. 10-12, through ``engine.run``.
 
-- fig10_threads: bandwidth (paper's RW-model formula) vs thread count for
-  BLK/HCB x ALL (+ PAIR at max threads, as in the paper)
-- fig11_layouts: layout/scheme grid across graph sizes (Table 4 subset)
-- fig12_scaling: strong scaling, single-node vs multi-node with the
-  inter-node migration penalty
+Measured executions go through the engine (one RunReport per layout x
+scheme); the pure placement-model thread sweeps (no execution, paper's
+modeled speedup curves) call ``plan_stats`` directly.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import (
-    Scheme, bucketize, compute_similarity, generate_alignment_pair,
-    gsana_effective_bw, layout_blk, layout_hcb, pick_grid, plan_stats,
-    recall_at_k,
+    Layout, MigratoryStrategy, Scheme, bucketize, generate_alignment_pair,
+    layout_blk, layout_hcb, pick_grid, plan_stats,
 )
+from repro.engine import GSANAInputs, GSANAOp, run as engine_run
 
-from .util import emit, time_fn
+from .util import emit, emit_report
 
 
-def _problem(n: int, seed: int = 3):
+def _problem(n: int, seed: int = 3, **kw) -> GSANAInputs:
     vs1, vs2, pi = generate_alignment_pair(n, seed=seed)
     grid = pick_grid(n, 32)
     cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
-    return vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap), pi
+    return GSANAInputs(
+        vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+        ground_truth=pi, **kw,
+    )
 
 
-def fig10_threads(full: bool = False):
+def fig10_threads(full: bool = False, quick: bool = False):
     rows = []
-    n = 1024 if not full else 2048
-    vs1, vs2, b1, b2, pi = _problem(n)
-    sec_all = time_fn(lambda: compute_similarity(vs1, vs2, b1, b2, scheme=Scheme.ALL), iters=3)
-    sec_pair = time_fn(lambda: compute_similarity(vs1, vs2, b1, b2, scheme=Scheme.PAIR), iters=3)
-    p = 8
-    for name, placement in (
-        ("BLK", layout_blk(b1, b2, vs1.n, vs2.n, p)),
-        ("HCB", layout_hcb(b1, b2, p)),
-    ):
-        for threads in (1, 2, 8, 32, 128, 256):
-            st = plan_stats(vs1, vs2, b1, b2, placement, Scheme.ALL, p,
-                            threads_per_nodelet=max(1, threads // p))
-            model_time = sec_all * st.total_comparisons / max(st.speedup_model, 1e-9) / st.total_comparisons
-            bw = gsana_effective_bw(vs1, vs2, b1, b2, sec_all / max(st.speedup_model, 1e-9))
-            rows.append(emit(
-                "fig10_gsana_threads", f"{name}-ALL_t={threads}", sec_all,
-                model_speedup=round(st.speedup_model, 1),
-                bw_model_mb_s=round(bw / 1e6, 1),
-                migrations=st.traffic.migrations,
+    n = 512 if quick else (2048 if full else 1024)
+    inputs = _problem(n)
+    for layout in (Layout.BLK, Layout.HCB):
+        for scheme in (Scheme.ALL, Scheme.PAIR):
+            st = MigratoryStrategy(layout=layout, scheme=scheme)
+            _, rep = engine_run(GSANAOp(), inputs, st, "local", iters=3, warmup=1)
+            rows.append(emit_report(
+                "fig10_gsana_threads",
+                f"{layout.value.upper()}-{scheme.value.upper()}_t=256", rep,
             ))
-        st = plan_stats(vs1, vs2, b1, b2, placement, Scheme.PAIR, p, threads_per_nodelet=32)
-        bw = gsana_effective_bw(vs1, vs2, b1, b2, sec_pair / max(st.speedup_model, 1e-9))
-        rows.append(emit(
-            "fig10_gsana_threads", f"{name}-PAIR_t=256", sec_pair,
-            model_speedup=round(st.speedup_model, 1),
-            bw_model_mb_s=round(bw / 1e6, 1),
-            migrations=st.traffic.migrations,
-        ))
+        # modeled thread-count sweep (no execution): paper's speedup curves
+        placement = (
+            layout_hcb(inputs.b1, inputs.b2, 8)
+            if layout == Layout.HCB
+            else layout_blk(inputs.b1, inputs.b2, inputs.vs1.n, inputs.vs2.n, 8)
+        )
+        threads_sweep = (8, 256) if quick else (1, 2, 8, 32, 128, 256)
+        for threads in threads_sweep:
+            ps = plan_stats(
+                inputs.vs1, inputs.vs2, inputs.b1, inputs.b2, placement,
+                Scheme.ALL, 8, threads_per_nodelet=max(1, threads // 8),
+            )
+            rows.append(emit(
+                "fig10_gsana_threads_model",
+                f"{layout.value.upper()}-ALL_t={threads}", 0.0,
+                op="gsana", substrate="model",
+                model_speedup=round(ps.speedup_model, 1),
+                migrations=ps.traffic.migrations,
+            ))
     return rows
 
 
-def fig11_layouts(full: bool = False):
+def fig11_layouts(full: bool = False, quick: bool = False):
     rows = []
-    sizes = (512, 1024, 2048) if not full else (512, 1024, 2048, 4096, 8192)
-    p = 8
+    sizes = (512,) if quick else ((512, 1024, 2048, 4096, 8192) if full else (512, 1024, 2048))
     for n in sizes:
-        vs1, vs2, b1, b2, pi = _problem(n)
-        sec = time_fn(lambda: compute_similarity(vs1, vs2, b1, b2, scheme=Scheme.PAIR), iters=3)
-        cand, _ = compute_similarity(vs1, vs2, b1, b2, k=4)
-        rec = recall_at_k(cand, pi)
-        for lname, pl in (
-            ("BLK", layout_blk(b1, b2, vs1.n, vs2.n, p)),
-            ("HCB", layout_hcb(b1, b2, p)),
-        ):
+        inputs = _problem(n)
+        for layout in (Layout.BLK, Layout.HCB):
             for scheme in (Scheme.ALL, Scheme.PAIR):
-                st = plan_stats(vs1, vs2, b1, b2, pl, scheme, p, threads_per_nodelet=32)
-                rows.append(emit(
-                    "fig11_gsana_layouts", f"{lname}-{scheme.value.upper()}_n={n}", sec,
-                    model_makespan=round(st.makespan, 0),
-                    migrations=st.traffic.migrations,
-                    recall_at4=round(rec, 3),
+                st = MigratoryStrategy(layout=layout, scheme=scheme)
+                _, rep = engine_run(GSANAOp(), inputs, st, "local", iters=3, warmup=1)
+                rows.append(emit_report(
+                    "fig11_gsana_layouts",
+                    f"{layout.value.upper()}-{scheme.value.upper()}_n={n}", rep,
                 ))
     return rows
 
 
-def fig12_scaling(full: bool = False):
+def fig12_scaling(full: bool = False, quick: bool = False):
     rows = []
-    n = 2048
-    vs1, vs2, b1, b2, _ = _problem(n)
+    n = 512 if quick else 2048
+    inputs = _problem(n)
+    threads_sweep = (4, 64) if quick else (1, 4, 16, 64, 128)
     for setup, p, penalty in (("SN", 8, 0.3), ("MN", 64, 0.9)):
         for lname, pl in (
-            ("BLK", layout_blk(b1, b2, vs1.n, vs2.n, p)),
-            ("HCB", layout_hcb(b1, b2, p)),
+            ("BLK", layout_blk(inputs.b1, inputs.b2, inputs.vs1.n, inputs.vs2.n, p)),
+            ("HCB", layout_hcb(inputs.b1, inputs.b2, p)),
         ):
-            for threads in (1, 4, 16, 64, 128):
-                st = plan_stats(
-                    vs1, vs2, b1, b2, pl, Scheme.ALL, p,
+            for threads in threads_sweep:
+                ps = plan_stats(
+                    inputs.vs1, inputs.vs2, inputs.b1, inputs.b2, pl, Scheme.ALL, p,
                     threads_per_nodelet=max(1, threads // p),
                     migration_penalty=penalty,
                 )
                 rows.append(emit(
                     "fig12_gsana_scaling", f"{setup}-{lname}_t={threads}", 0.0,
-                    model_speedup=round(st.speedup_model, 2),
-                    model_makespan=round(st.makespan, 0),
+                    op="gsana", substrate="model",
+                    model_speedup=round(ps.speedup_model, 2),
+                    model_makespan=round(ps.makespan, 0),
                 ))
     return rows
 
 
-def run(full: bool = False):
-    return fig10_threads(full) + fig11_layouts(full) + fig12_scaling(full)
+def run(full: bool = False, quick: bool = False):
+    return fig10_threads(full, quick) + fig11_layouts(full, quick) + fig12_scaling(full, quick)

@@ -17,10 +17,10 @@ from repro.core import bucketize, generate_alignment_pair, neighbor_buckets, pic
 from .util import emit, time_fn
 
 
-def spmv_kernel_grain(full: bool = False):
+def spmv_kernel_grain(full: bool = False, quick: bool = False):
     rows = []
     rng = np.random.default_rng(0)
-    r, k, n = (4096, 8, 4096) if not full else (16384, 8, 16384)
+    r, k, n = (16384, 8, 16384) if full else ((1024, 8, 1024) if quick else (4096, 8, 4096))
     cols = jnp.asarray(rng.integers(-1, n, size=(r, k)).astype(np.int32))
     vals = jnp.asarray(np.where(np.asarray(cols) >= 0, rng.standard_normal((r, k)), 0).astype(np.float32))
     x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
@@ -32,10 +32,10 @@ def spmv_kernel_grain(full: bool = False):
     return rows
 
 
-def flash_blocks(full: bool = False):
+def flash_blocks(full: bool = False, quick: bool = False):
     rows = []
     rng = np.random.default_rng(1)
-    b, hq, hkv, s, d = 1, 4, 2, (256 if not full else 1024), 64
+    b, hq, hkv, s, d = 1, 4, 2, (1024 if full else (128 if quick else 256)), 64
     q = jnp.asarray(rng.standard_normal((b, hq, s, d)).astype(np.float32))
     k = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
     v = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
@@ -47,9 +47,9 @@ def flash_blocks(full: bool = False):
     return rows
 
 
-def topk_sim(full: bool = False):
+def topk_sim(full: bool = False, quick: bool = False):
     rows = []
-    n = 512 if not full else 2048
+    n = 2048 if full else (256 if quick else 512)
     vs1, vs2, _ = generate_alignment_pair(n, seed=5)
     grid = pick_grid(n, 32)
     cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
@@ -68,5 +68,8 @@ def topk_sim(full: bool = False):
     return rows
 
 
-def run(full: bool = False):
-    return spmv_kernel_grain(full) + flash_blocks(full) + topk_sim(full)
+def run(full: bool = False, quick: bool = False):
+    return (
+        spmv_kernel_grain(full, quick) + flash_blocks(full, quick)
+        + topk_sim(full, quick)
+    )

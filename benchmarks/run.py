@@ -1,10 +1,13 @@
 """Benchmark runner: one suite per paper table/figure + kernel micro-benches
 + the beyond-paper MoE dispatch A/B.
 
-    PYTHONPATH=src python -m benchmarks.run [--bench NAME] [--full]
+    PYTHONPATH=src python -m benchmarks.run [--bench NAME] [--full] [--quick]
 
+Every row follows the unified RunReport schema (op, strategy_*, substrate,
+seconds, effective_gbps, migrations, remote_writes, op metrics) so
+``bench_results.json`` trajectories are comparable across suites and PRs.
 Prints ``bench,case,us_per_call,derived...`` CSV rows and writes
-experiments/bench_results.json.
+``experiments/bench_results.json``.
 """
 from __future__ import annotations
 
@@ -13,6 +16,9 @@ import json
 from pathlib import Path
 
 SUITES = {}
+
+# subprocess-heavy suites skipped in --quick smoke runs
+SLOW_SUITES = ("moe_dispatch",)
 
 
 def _register():
@@ -31,14 +37,28 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default=None, help="suite name (default: all)")
     ap.add_argument("--full", action="store_true", help="paper-scale sizes")
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="CI smoke mode: smallest sizes, skip subprocess suites",
+    )
+    ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args(argv)
     _register()
-    names = [args.bench] if args.bench else list(SUITES)
+    if args.bench:
+        if args.bench not in SUITES:
+            ap.error(f"unknown suite {args.bench!r}; choose from {sorted(SUITES)}")
+        names = [args.bench]
+    else:
+        names = [n for n in SUITES if not (args.quick and n in SLOW_SUITES)]
     print("bench,case,us_per_call,derived")
     all_rows = []
     for name in names:
-        all_rows.extend(SUITES[name](full=args.full))
-    out = Path(__file__).resolve().parents[1] / "experiments" / "bench_results.json"
+        all_rows.extend(SUITES[name](full=args.full, quick=args.quick))
+    out = (
+        Path(args.out)
+        if args.out
+        else Path(__file__).resolve().parents[1] / "experiments" / "bench_results.json"
+    )
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(all_rows, indent=2, default=str))
     print(f"# wrote {out} ({len(all_rows)} rows)")

@@ -1,4 +1,4 @@
-"""SpMV benchmarks: paper Figs. 4-6 + Table 3.
+"""SpMV benchmarks: paper Figs. 4-6 + Table 3, all through ``engine.run``.
 
 - fig4_grain:       grain-size sweep, striped x (no replication)
 - fig5_replication: same sweep with x replicated (S1)
@@ -12,107 +12,94 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    MigratoryStrategy, effective_bandwidth, gather_result, partition_ell, spmv,
-    spmv_traffic, stripe_vector,
-)
+from repro.core import MigratoryStrategy, partition_ell
+from repro.engine import SpMVInputs, SpMVOp, run as engine_run
 from repro.sparse import TABLE3_SIGNATURES, laplacian_2d, skewed_matrix, split_long_rows
 
-from .util import emit, time_fn
+from .util import emit_report
 
 GRID_SMALL = (24, 48, 96)  # n -> n^2-row Laplacians: 576, 2304, 9216 rows
 GRAINS = (1, 4, 16, 64, 256)
 
 
-def fig4_grain(full: bool = False):
-    rows = []
-    grids = GRID_SMALL + ((160,) if full else ())
-    for n in grids:
-        a = laplacian_2d(n)
-        x = jnp.asarray(np.random.default_rng(0).standard_normal(n * n).astype(np.float32))
-        pe = partition_ell(a, 8)
-        xs = stripe_vector(x, 8)
-        for grain in GRAINS:
-            st = MigratoryStrategy(replicate_x=False, grain=grain)
-            sec = time_fn(lambda: spmv(pe, xs, st))
-            bw = effective_bandwidth(pe, n * n, sec)
-            mig = spmv_traffic(pe, st).migrations
-            rows.append(emit(
-                "fig4_spmv_grain", f"n={n}_grain={grain}", sec,
-                bw_mb_s=round(bw / 1e6, 1), migrations=mig,
-            ))
-    return rows
-
-
-def fig5_replication(full: bool = False):
-    rows = []
-    grids = GRID_SMALL + ((160,) if full else ())
-    for n in grids:
-        a = laplacian_2d(n)
-        x = jnp.asarray(np.random.default_rng(0).standard_normal(n * n).astype(np.float32))
-        pe = partition_ell(a, 8)
-        for grain in GRAINS:
-            st = MigratoryStrategy(replicate_x=True, grain=grain)
-            sec = time_fn(lambda: spmv(pe, x, st))
-            bw = effective_bandwidth(pe, n * n, sec)
-            rows.append(emit(
-                "fig5_spmv_replication", f"n={n}_grain={grain}", sec,
-                bw_mb_s=round(bw / 1e6, 1), migrations=0,
-            ))
-    return rows
-
-
-def fig6_scaling(full: bool = False):
-    rows = []
-    n = 96 if not full else 160
+def _problem(n: int, p: int = 8, k: int | None = None):
     a = laplacian_2d(n)
     x = jnp.asarray(np.random.default_rng(0).standard_normal(n * n).astype(np.float32))
-    for p, label in ((8, "SN_8nodelets"), (64, "MN_64nodelets")):
-        pe = partition_ell(a, p)
-        for threads in (64, 256, 1024, 2048, 4096):
-            grain = max(1, (pe.rows_per_nodelet * p) // threads)
+    return SpMVInputs(partition_ell(a, p, k=k), x)
+
+
+def fig4_grain(full: bool = False, quick: bool = False):
+    rows = []
+    grids = (GRID_SMALL[0],) if quick else GRID_SMALL + ((160,) if full else ())
+    grains = (1, 16) if quick else GRAINS
+    for n in grids:
+        inputs = _problem(n)
+        for grain in grains:
+            st = MigratoryStrategy(replicate_x=False, grain=grain)
+            _, rep = engine_run(SpMVOp(), inputs, st, "local", iters=5, warmup=2)
+            rows.append(emit_report("fig4_spmv_grain", f"n={n}_grain={grain}", rep))
+    return rows
+
+
+def fig5_replication(full: bool = False, quick: bool = False):
+    rows = []
+    grids = (GRID_SMALL[0],) if quick else GRID_SMALL + ((160,) if full else ())
+    grains = (1, 16) if quick else GRAINS
+    for n in grids:
+        inputs = _problem(n)
+        for grain in grains:
             st = MigratoryStrategy(replicate_x=True, grain=grain)
-            sec = time_fn(lambda: spmv(pe, x, st))
-            bw = effective_bandwidth(pe, n * n, sec)
-            rows.append(emit(
-                "fig6_spmv_scaling", f"{label}_threads={threads}", sec,
-                bw_mb_s=round(bw / 1e6, 1), grain=grain,
+            _, rep = engine_run(SpMVOp(), inputs, st, "local", iters=5, warmup=2)
+            rows.append(emit_report("fig5_spmv_replication", f"n={n}_grain={grain}", rep))
+    return rows
+
+
+def fig6_scaling(full: bool = False, quick: bool = False):
+    rows = []
+    n = 24 if quick else (160 if full else 96)
+    threads_sweep = (64, 1024) if quick else (64, 256, 1024, 2048, 4096)
+    for p, label in ((8, "SN_8nodelets"), (64, "MN_64nodelets")):
+        inputs = _problem(n, p)
+        for threads in threads_sweep:
+            grain = max(1, (inputs.a.rows_per_nodelet * p) // threads)
+            st = MigratoryStrategy(replicate_x=True, grain=grain)
+            _, rep = engine_run(SpMVOp(), inputs, st, "local", iters=5, warmup=2)
+            rows.append(emit_report(
+                "fig6_spmv_scaling", f"{label}_threads={threads}", rep,
             ))
     return rows
 
 
-def table3_realworld(full: bool = False):
+def table3_realworld(full: bool = False, quick: bool = False):
     rows = []
     sigs = TABLE3_SIGNATURES if full else TABLE3_SIGNATURES[::2] + TABLE3_SIGNATURES[-2:]
+    if quick:
+        sigs = sigs[:2]
     for name, n, avg, mx in sigs:
         n_eff = n if full else max(n // 4, 2000)
         a = skewed_matrix(n_eff, avg, min(mx, n_eff - 1), seed=1)
         lens = np.diff(np.asarray(a.indptr))
         kmax = int(lens.max())
         x = jnp.asarray(np.random.default_rng(0).standard_normal(n_eff).astype(np.float32))
-        pe = partition_ell(a, 8, k=kmax)
+        inputs = SpMVInputs(partition_ell(a, 8, k=kmax), x)
         st = MigratoryStrategy(replicate_x=True, grain=None)
-        sec = time_fn(lambda: spmv(pe, x, st), iters=3)
-        bw = effective_bandwidth(pe, n_eff, sec)
-        rows.append(emit(
-            "table3_spmv_realworld", name, sec,
-            bw_mb_s=round(bw / 1e6, 1), avg_deg=round(float(lens.mean()), 2),
-            max_deg=kmax,
+        _, rep = engine_run(SpMVOp(), inputs, st, "local", iters=3, warmup=1)
+        rows.append(emit_report(
+            "table3_spmv_realworld", name, rep,
+            avg_deg=round(float(lens.mean()), 2), max_deg=kmax,
         ))
         if kmax > 500:  # hub mitigation: split long rows (paper future work)
             s, owner = split_long_rows(a, k=64)
-            pe2 = partition_ell(s, 8, k=64)
-            sec2 = time_fn(lambda: spmv(pe2, x, st), iters=3)
-            bw2 = effective_bandwidth(pe, n_eff, sec2)
-            rows.append(emit(
-                "table3_spmv_realworld", f"{name}+rowsplit", sec2,
-                bw_mb_s=round(bw2 / 1e6, 1), max_deg=64,
+            inputs2 = SpMVInputs(partition_ell(s, 8, k=64), x)
+            _, rep2 = engine_run(SpMVOp(), inputs2, st, "local", iters=3, warmup=1)
+            rows.append(emit_report(
+                "table3_spmv_realworld", f"{name}+rowsplit", rep2, max_deg=64,
             ))
     return rows
 
 
-def run(full: bool = False):
+def run(full: bool = False, quick: bool = False):
     return (
-        fig4_grain(full) + fig5_replication(full) + fig6_scaling(full)
-        + table3_realworld(full)
+        fig4_grain(full, quick) + fig5_replication(full, quick)
+        + fig6_scaling(full, quick) + table3_realworld(full, quick)
     )

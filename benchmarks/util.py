@@ -1,4 +1,5 @@
-"""Benchmark harness utilities: warmed, blocked wall-clock timing + CSV rows."""
+"""Benchmark harness utilities: warmed, blocked wall-clock timing + the
+unified RunReport row schema every suite emits."""
 from __future__ import annotations
 
 import time
@@ -20,7 +21,24 @@ def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
 
 
 def emit(bench: str, case: str, seconds: float, **derived) -> dict:
-    row = {"bench": bench, "case": case, "us_per_call": seconds * 1e6, **derived}
+    """Free-form row (kernel micro-benches and model-only sweeps). Carries
+    the same core keys as the RunReport schema so JSON rows stay comparable."""
+    row = {
+        "bench": bench, "case": case, "seconds": seconds,
+        "us_per_call": seconds * 1e6, **derived,
+    }
     extras = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{bench},{case},{row['us_per_call']:.1f},{extras}")
+    return row
+
+
+def emit_report(bench: str, case: str, report, **derived) -> dict:
+    """Unified row from an ``engine.RunReport``: op, strategy_*, substrate,
+    seconds, traffic counts, effective bandwidth, op metrics."""
+    row = {"bench": bench, "case": case, **report.to_dict(), **derived}
+    keys = ("op", "substrate", "migrations", "remote_writes", "effective_gbps")
+    extras = ",".join(f"{k}={row[k]}" for k in keys if k in row)
+    if derived:
+        extras += "," + ",".join(f"{k}={v}" for k, v in derived.items())
     print(f"{bench},{case},{row['us_per_call']:.1f},{extras}")
     return row

@@ -1,5 +1,6 @@
 """Graph500-style BFS run: build, search (both strategies), validate,
-report TEPS + the paper's effective-bandwidth metric (paper §5.2).
+report the unified RunReport (TEPS + the paper's effective-bandwidth
+metric, §5.2) per root.
 
     PYTHONPATH=src python examples/bfs_graph500.py --scale 14 --nodelets 8
 """
@@ -11,10 +12,8 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core import (
-    Comm, MigratoryStrategy, bfs, bfs_effective_bandwidth, bfs_traffic, teps,
-    validate_parents,
-)
+from repro.core import Comm, MigratoryStrategy, bfs_effective_bandwidth, validate_parents
+from repro.engine import BFSInputs, BFSOp, run
 from repro.sparse import edges_to_csr, erdos_renyi_edges, partition_graph, rmat_edges
 
 if __name__ == "__main__":
@@ -24,6 +23,7 @@ if __name__ == "__main__":
     ap.add_argument("--kind", choices=["er", "rmat"], default="er")
     ap.add_argument("--nodelets", type=int, default=8)
     ap.add_argument("--roots", type=int, default=4)
+    ap.add_argument("--substrate", default="local", help="local | mesh")
     args = ap.parse_args()
 
     n = 1 << args.scale
@@ -38,16 +38,17 @@ if __name__ == "__main__":
     rng = np.random.default_rng(0)
     roots = rng.integers(0, n, size=args.roots)
     for root in roots:
-        t0 = time.perf_counter()
-        parents = np.asarray(bfs(pg, int(root)))
-        dt = time.perf_counter() - t0
-        stats = bfs_traffic(pg, int(root), MigratoryStrategy(comm=Comm.REMOTE_WRITE))
-        mig = bfs_traffic(pg, int(root), MigratoryStrategy(comm=Comm.MIGRATE))
-        ok = validate_parents(pg, int(root), parents)
+        inputs = BFSInputs(pg, int(root))
+        parents, push = run(
+            BFSOp(), inputs, MigratoryStrategy(comm=Comm.REMOTE_WRITE),
+            args.substrate,
+        )
+        _, mig = run(BFSOp(), inputs, MigratoryStrategy(comm=Comm.MIGRATE), args.substrate)
+        ok = validate_parents(pg, int(root), np.asarray(parents))
         print(
-            f"root={root}: {teps(stats.edges_traversed, dt) / 1e6:.2f} MTEPS "
-            f"({bfs_effective_bandwidth(args.scale, dt, args.edge_factor) / 1e6:.0f} MB/s eff), "
-            f"rounds={stats.rounds}, valid={ok}, "
-            f"traffic push={stats.traffic.total_bytes / 1e6:.1f}MB vs "
+            f"root={root}: {push.metrics['mteps']:.2f} MTEPS "
+            f"({bfs_effective_bandwidth(args.scale, push.seconds, args.edge_factor) / 1e6:.0f} MB/s eff), "
+            f"rounds={push.metrics['rounds']}, valid={ok}, "
+            f"traffic push={push.traffic.total_bytes / 1e6:.1f}MB vs "
             f"migrate={mig.traffic.total_bytes / 1e6:.1f}MB"
         )

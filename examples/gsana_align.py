@@ -1,46 +1,57 @@
 """GSANA graph alignment end-to-end: generate a DBLP-like pair, bucketize on
-the 2-D plane, run PAIR similarity with the HCB layout, report recall +
-the paper's layout/scheme comparison (paper §5.3).
+the 2-D plane, run PAIR similarity with the HCB layout through the engine,
+report recall + the paper's layout/scheme comparison (paper §5.3).
 
     PYTHONPATH=src python examples/gsana_align.py --n 2048
 """
 import argparse
 import sys
-import time
 
 sys.path.insert(0, "src")
 
 from repro.core import (
-    Scheme, bucketize, compute_similarity, generate_alignment_pair,
-    gsana_effective_bw, layout_blk, layout_hcb, pick_grid, plan_stats,
-    recall_at_k,
+    Layout, MigratoryStrategy, Scheme, bucketize, generate_alignment_pair,
+    layout_blk, layout_hcb, pick_grid, plan_stats,
 )
+from repro.engine import GSANAInputs, GSANAOp, run
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2048)
     ap.add_argument("--nodelets", type=int, default=8)
     ap.add_argument("--k", type=int, default=4)
+    ap.add_argument("--substrate", default="local", help="local | mesh | pallas")
     args = ap.parse_args()
 
     vs1, vs2, pi = generate_alignment_pair(args.n, seed=0)
     grid = pick_grid(args.n, 32)
     cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
-    b1, b2 = bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap)
+    inputs = GSANAInputs(
+        vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+        k=args.k, nodelets=args.nodelets, ground_truth=pi,
+    )
     print(f"|V|={args.n} grid={grid}x{grid} bucket_cap={cap}")
 
-    t0 = time.perf_counter()
-    cand, score = compute_similarity(vs1, vs2, b1, b2, k=args.k, scheme=Scheme.PAIR)
-    dt = time.perf_counter() - t0
-    print(f"similarity: {dt:.2f}s  recall@{args.k}={recall_at_k(cand, pi):.3f}  "
-          f"model-BW={gsana_effective_bw(vs1, vs2, b1, b2, dt) / 1e6:.0f} MB/s")
+    (cand, score), rep = run(
+        GSANAOp(), inputs,
+        MigratoryStrategy(layout=Layout.HCB, scheme=Scheme.PAIR),
+        args.substrate,
+    )
+    print(f"similarity[{rep.substrate}]: {rep.seconds:.2f}s  "
+          f"recall@{args.k}={rep.metrics['recall_at_k']:.3f}  "
+          f"model-BW={rep.effective_gbps * 1e3:.0f} MB/s")
 
-    p = args.nodelets
-    for lname, pl in (
-        ("BLK", layout_blk(b1, b2, vs1.n, vs2.n, p)),
-        ("HCB", layout_hcb(b1, b2, p)),
-    ):
+    for layout in (Layout.BLK, Layout.HCB):
+        placement = (
+            layout_hcb(inputs.b1, inputs.b2, args.nodelets)
+            if layout == Layout.HCB
+            else layout_blk(inputs.b1, inputs.b2, vs1.n, vs2.n, args.nodelets)
+        )
         for scheme in (Scheme.ALL, Scheme.PAIR):
-            st = plan_stats(vs1, vs2, b1, b2, pl, scheme, p)
-            print(f"{lname}-{scheme.value.upper():4s}: migrations={st.traffic.migrations:>9d} "
-                  f"model-makespan={st.makespan:>10.0f} speedup={st.speedup_model:.1f}x")
+            # placement model only — no need to re-execute the similarity
+            ps = plan_stats(vs1, vs2, inputs.b1, inputs.b2, placement, scheme,
+                            args.nodelets)
+            print(f"{layout.value.upper()}-{scheme.value.upper():4s}: "
+                  f"migrations={ps.traffic.migrations:>9d} "
+                  f"model-makespan={ps.makespan:>10.0f} "
+                  f"speedup={ps.speedup_model:.1f}x")

@@ -1,4 +1,5 @@
-"""Quickstart: the paper's three strategies in ~60 lines.
+"""Quickstart: the paper's three strategies through the one engine entry
+point — ``engine.run(op, inputs, strategy, substrate)``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,10 +7,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
-    Comm, MigratoryStrategy, Scheme, bfs, bfs_traffic, bucketize,
-    compute_similarity, gather_result, generate_alignment_pair, layout_blk,
-    layout_hcb, partition_ell, pick_grid, plan_stats, recall_at_k, spmv,
-    spmv_traffic, stripe_vector,
+    Comm, Layout, MigratoryStrategy, Scheme, bucketize, gather_result,
+    generate_alignment_pair, partition_ell, pick_grid,
+)
+from repro.engine import (
+    BFSInputs, BFSOp, GSANAInputs, GSANAOp, SpMVInputs, SpMVOp, run,
 )
 from repro.sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, partition_graph
 
@@ -18,24 +20,22 @@ P = 8  # logical nodelets (one Emu Chick node)
 # --- S1: SpMV — to replicate or not (paper §5.1) ---------------------------
 a = laplacian_2d(32)  # 1024 x 1024 five-point stencil
 x = jnp.asarray(np.random.default_rng(0).standard_normal(1024).astype(np.float32))
-pe = partition_ell(a, P)
+inputs = SpMVInputs(partition_ell(a, P), x)
 
-y_rep = gather_result(spmv(pe, x, MigratoryStrategy(replicate_x=True)), 1024)
-y_str = gather_result(
-    spmv(pe, stripe_vector(x, P), MigratoryStrategy(replicate_x=False)), 1024
+y_rep, rep_report = run(SpMVOp(), inputs, MigratoryStrategy(replicate_x=True))
+y_str, str_report = run(SpMVOp(), inputs, MigratoryStrategy(replicate_x=False))
+assert np.allclose(
+    np.asarray(gather_result(y_rep, 1024)), np.asarray(gather_result(y_str, 1024)),
+    atol=1e-4,
 )
-assert np.allclose(np.asarray(y_rep), np.asarray(y_str), atol=1e-4)
-print("S1 SpMV: replicated-x migrations =",
-      spmv_traffic(pe, MigratoryStrategy(replicate_x=True)).migrations,
-      "| striped-x migrations =",
-      spmv_traffic(pe, MigratoryStrategy(replicate_x=False)).migrations)
+print("S1 SpMV: replicated-x migrations =", rep_report.traffic.migrations,
+      "| striped-x migrations =", str_report.traffic.migrations)
 
 # --- S2: BFS — remote writes beat migrating threads (paper §5.2) -----------
 g = partition_graph(edges_to_csr(erdos_renyi_edges(12, 8), 1 << 12), P)
-parents = bfs(g, root=0)
-mig = bfs_traffic(g, 0, MigratoryStrategy(comm=Comm.MIGRATE))
-push = bfs_traffic(g, 0, MigratoryStrategy(comm=Comm.REMOTE_WRITE))
-print(f"S2 BFS: reached {int((np.asarray(parents) >= 0).sum())}/{1 << 12} vertices; "
+parents, push = run(BFSOp(), BFSInputs(g, 0), MigratoryStrategy(comm=Comm.REMOTE_WRITE))
+_, mig = run(BFSOp(), BFSInputs(g, 0), MigratoryStrategy(comm=Comm.MIGRATE))
+print(f"S2 BFS: reached {push.metrics['reached']}/{1 << 12} vertices; "
       f"traffic migrate={mig.traffic.total_bytes / 1e6:.2f}MB "
       f"remote_write={push.traffic.total_bytes / 1e6:.2f}MB "
       f"({mig.traffic.total_bytes / push.traffic.total_bytes:.0f}x less)")
@@ -44,10 +44,12 @@ print(f"S2 BFS: reached {int((np.asarray(parents) >= 0).sum())}/{1 << 12} vertic
 vs1, vs2, pi = generate_alignment_pair(1024, seed=1)
 grid = pick_grid(1024, 32)
 cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
-b1, b2 = bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap)
-cand, score = compute_similarity(vs1, vs2, b1, b2, k=4, scheme=Scheme.PAIR)
-blk = plan_stats(vs1, vs2, b1, b2, layout_blk(b1, b2, 1024, 1024, P), Scheme.PAIR, P)
-hcb = plan_stats(vs1, vs2, b1, b2, layout_hcb(b1, b2, P), Scheme.PAIR, P)
-print(f"S3 GSANA: recall@4={recall_at_k(cand, pi):.3f}; migrations "
+gi = GSANAInputs(
+    vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+    k=4, nodelets=P, ground_truth=pi,
+)
+(cand, score), blk = run(GSANAOp(), gi, MigratoryStrategy(layout=Layout.BLK, scheme=Scheme.PAIR))
+_, hcb = run(GSANAOp(), gi, MigratoryStrategy(layout=Layout.HCB, scheme=Scheme.PAIR))
+print(f"S3 GSANA: recall@4={blk.metrics['recall_at_k']:.3f}; migrations "
       f"BLK={blk.traffic.migrations} -> HCB={hcb.traffic.migrations} "
       f"({100 * (1 - hcb.traffic.migrations / blk.traffic.migrations):.0f}% fewer)")

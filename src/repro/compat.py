@@ -1,0 +1,44 @@
+"""jax version compatibility: one import site for APIs that moved.
+
+The framework targets current jax (``jax.shard_map``, ``jax.make_mesh`` with
+``axis_types``) but must also run on the 0.4.x line, where ``shard_map``
+lives in ``jax.experimental`` (with ``check_rep`` instead of ``check_vma``)
+and ``jax.sharding.AxisType`` does not exist. Every mesh/shard_map use in the
+codebase goes through these two helpers.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def shard_map(
+    f: Callable,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+) -> Callable:
+    """``jax.shard_map`` with replication checking off, on any jax version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes)
+    from jax.experimental import mesh_utils  # jax < 0.4.35
+
+    return jax.sharding.Mesh(mesh_utils.create_device_mesh(shape), axes)

@@ -10,12 +10,16 @@ from .strategies import (
     Scheme,
     TrafficStats,
 )
+from .util import ceil_div, round_up
 from .spmv import (
     PartitionedELL,
     effective_bandwidth,
     gather_result,
     partition_ell,
     spmv,
+    spmv_bytes_moved,
+    spmv_local,
+    spmv_mesh,
     spmv_traffic,
     stripe_vector,
     unstripe_vector,
@@ -23,7 +27,10 @@ from .spmv import (
 from .bfs import (
     BFSRunStats,
     bfs,
+    bfs_bytes_moved,
     bfs_effective_bandwidth,
+    bfs_local,
+    bfs_mesh,
     bfs_traffic,
     teps,
     validate_parents,
@@ -32,7 +39,9 @@ from .gsana import (
     Placement,
     PlanStats,
     compute_similarity,
+    compute_similarity_mesh,
     gsana_effective_bw,
+    gsana_rw_bytes,
     layout_blk,
     layout_hcb,
     plan_stats,

@@ -80,6 +80,44 @@ def _bfs_local(adj: jax.Array, root: jax.Array, max_rounds: int) -> jax.Array:
     return parents
 
 
+def _finalize_parents(g: PartitionedGraph, parents: jax.Array) -> jax.Array:
+    """Trim padding and map the internal UNVISITED sentinel to -1."""
+    parents = parents[: g.n_vertices]
+    return jnp.where(parents == UNVISITED, -1, parents)
+
+
+def bfs_local(
+    g: PartitionedGraph,
+    root: int,
+    strategy: MigratoryStrategy | None = None,
+    max_rounds: int | None = None,
+) -> jax.Array:
+    """``local`` substrate: the single-device semantics oracle (both S2
+    strategies compute the same tree here). (n_vertices,) int32, -1 unreached.
+    """
+    del strategy  # both comm strategies share the local oracle
+    max_rounds = max_rounds or g.P * g.v_per_nodelet
+    return _finalize_parents(g, _bfs_local(_adj_global(g), jnp.int32(root), max_rounds))
+
+
+def bfs_mesh(
+    g: PartitionedGraph,
+    root: int,
+    strategy: MigratoryStrategy | None = None,
+    max_rounds: int | None = None,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis_name: str = "nodelet",
+) -> jax.Array:
+    """``mesh`` substrate: the strategy-specific distributed implementation
+    over ``axis_name`` (Alg. 1 pull vs Alg. 2 push)."""
+    strategy = strategy or MigratoryStrategy()
+    max_rounds = max_rounds or g.P * g.v_per_nodelet
+    return _finalize_parents(
+        g, _bfs_distributed(g, root, strategy, mesh, axis_name, max_rounds)
+    )
+
+
 def bfs(
     g: PartitionedGraph,
     root: int,
@@ -89,21 +127,16 @@ def bfs(
     axis_name: str = "nodelet",
     max_rounds: int | None = None,
 ) -> jax.Array:
-    """BFS parent array, (n_vertices,) int32, -1 for unreached.
+    """Deprecated shim — use ``repro.engine.run(BFSOp(), ...)`` instead.
 
-    Without a mesh, runs the single-device oracle. With a mesh, runs the
-    strategy-specific distributed implementation over ``axis_name``.
+    Kept so pre-engine call sites keep working: forwards to the engine's
+    substrate resolution (``local`` without a mesh, ``mesh`` with one).
     """
-    strategy = strategy or MigratoryStrategy()
-    n = g.n_vertices
-    n_pad = g.P * g.v_per_nodelet
-    max_rounds = max_rounds or n_pad
-    if mesh is None:
-        parents = _bfs_local(_adj_global(g), jnp.int32(root), max_rounds)
-    else:
-        parents = _bfs_distributed(g, root, strategy, mesh, axis_name, max_rounds)
-    parents = parents[:n]
-    return jnp.where(parents == UNVISITED, -1, parents)
+    from ..engine.substrate import substrate_for_mesh
+
+    return substrate_for_mesh(mesh, axis_name).bfs(
+        g, root, strategy or MigratoryStrategy(), max_rounds
+    )
 
 
 def _bfs_distributed(g, root, strategy, mesh, axis_name, max_rounds):
@@ -183,10 +216,9 @@ def _bfs_distributed(g, root, strategy, mesh, axis_name, max_rounds):
         )
         return parents
 
-    f = jax.shard_map(
-        body, mesh=mesh, in_specs=(P_(axis_name),), out_specs=P_(axis_name),
-        check_vma=False,
-    )
+    from ..compat import shard_map
+
+    f = shard_map(body, mesh, in_specs=(P_(axis_name),), out_specs=P_(axis_name))
     return f(adj_g)
 
 
@@ -247,9 +279,15 @@ def teps(n_edges_traversed: int, seconds: float) -> float:
     return n_edges_traversed / max(seconds, 1e-12)
 
 
+def bfs_bytes_moved(n_edges: int) -> int:
+    """Paper §5.2 unit of useful work: every traversed edge reads+writes one
+    8-byte word (2 * 8 bytes per edge)."""
+    return n_edges * 2 * 8
+
+
 def bfs_effective_bandwidth(scale: int, seconds: float, edge_factor: int = 16) -> float:
     """Paper §5.2: BW = 16 * 2^scale * 2 * 8 / time = TEPS * 16."""
-    return edge_factor * (1 << scale) * 2 * 8 / max(seconds, 1e-12)
+    return bfs_bytes_moved(edge_factor * (1 << scale)) / max(seconds, 1e-12)
 
 
 def validate_parents(g: PartitionedGraph, root: int, parents: np.ndarray) -> bool:

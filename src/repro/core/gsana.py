@@ -92,16 +92,14 @@ def similarity_block(
 
 
 # -- parallel similarity computation (ALL / PAIR) ------------------------------
+#
+# Per-task closures are shared by the local (vmap over all tasks) and mesh
+# (shard_map over per-nodelet task slices) substrates, so both produce
+# bit-identical numbers — only the execution placement differs.
 
 
-@partial(jax.jit, static_argnames=("k",))
-def compute_similarity_all(
-    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, nb: jax.Array, k: int
-):
-    """ALL scheme (Alg. 3+4): one task per bucket B ∈ QT2.
-
-    Returns (cand (G², cap, k) global u ids, score (G², cap, k)).
-    """
+def _all_task(vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, nb, k: int):
+    """One ALL task (Alg. 3+4): bucket B ∈ QT2 vs all its neighbor buckets."""
     cap1 = b1.cap
 
     def task(bid):
@@ -113,19 +111,13 @@ def compute_similarity_all(
         sc, loc = jax.lax.top_k(s, k)
         return jnp.where(sc > NEG, u_idx[loc], -1), sc
 
-    return jax.vmap(task)(jnp.arange(b2.grid * b2.grid))
+    return task
 
 
-@partial(jax.jit, static_argnames=("k",))
-def compute_similarity_pair(
-    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, nb: jax.Array, k: int
-):
-    """PAIR scheme (Alg. 3+5): one task per ⟨B, B'⟩ bucket pair, then a merge
-    of the per-pair top-k lists (Alg. 5's Merge). Same results as ALL."""
+def _pair_task(vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, nb, kk: int):
+    """One PAIR task (Alg. 3+5): a single ⟨B, B'⟩ bucket pair."""
 
-    kk = min(k, b1.cap)  # per-pair priority-list width (Alg. 5)
-
-    def pair_task(bid, j):
+    def task(bid, j):
         v_idx = b2.vid[bid]
         nbs = nb[bid, j]
         u_idx = jnp.where(nbs >= 0, b1.vid[jnp.maximum(nbs, 0)], -1)
@@ -133,10 +125,11 @@ def compute_similarity_pair(
         sc, loc = jax.lax.top_k(s, kk)
         return jnp.where(sc > NEG, u_idx[loc], -1), sc
 
-    grid2 = b2.grid * b2.grid
-    bids = jnp.repeat(jnp.arange(grid2), 9)
-    js = jnp.tile(jnp.arange(9), grid2)
-    cands, scores = jax.vmap(pair_task)(bids, js)  # (G²*9, cap2, kk)
+    return task
+
+
+def _merge_pair_topk(cands, scores, grid2: int, k: int):
+    """Alg. 5's Merge: per-pair top-k lists -> per-bucket top-k."""
     kk = scores.shape[-1]
     cands = cands.reshape(grid2, 9, -1, kk).transpose(0, 2, 1, 3).reshape(grid2, -1, 9 * kk)
     scores = scores.reshape(grid2, 9, -1, kk).transpose(0, 2, 1, 3).reshape(grid2, -1, 9 * kk)
@@ -145,18 +138,35 @@ def compute_similarity_pair(
     return jnp.where(sc > NEG, cand, -1), sc
 
 
-def compute_similarity(
-    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, k: int = 4,
-    scheme: Scheme = Scheme.PAIR,
+@partial(jax.jit, static_argnames=("k",))
+def compute_similarity_all(
+    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, nb: jax.Array, k: int
 ):
-    """Top-k alignment candidates for every v ∈ V2. Returns per-vertex arrays
-    (n2, k) cand / score (scatter from bucket-major to vertex-major)."""
-    nb = jnp.asarray(neighbor_buckets(b2.grid))
-    if scheme == Scheme.ALL:
-        cand_b, score_b = compute_similarity_all(vs1, vs2, b1, b2, nb, k)
-    else:
-        cand_b, score_b = compute_similarity_pair(vs1, vs2, b1, b2, nb, k)
-    n2 = vs2.n
+    """ALL scheme: one task per bucket B ∈ QT2.
+
+    Returns (cand (G², cap, k) global u ids, score (G², cap, k)).
+    """
+    task = _all_task(vs1, vs2, b1, b2, nb, k)
+    return jax.vmap(task)(jnp.arange(b2.grid * b2.grid))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def compute_similarity_pair(
+    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, nb: jax.Array, k: int
+):
+    """PAIR scheme: one task per ⟨B, B'⟩ bucket pair + merge. Same results
+    as ALL."""
+    kk = min(k, b1.cap)  # per-pair priority-list width (Alg. 5)
+    task = _pair_task(vs1, vs2, b1, b2, nb, kk)
+    grid2 = b2.grid * b2.grid
+    bids = jnp.repeat(jnp.arange(grid2), 9)
+    js = jnp.tile(jnp.arange(9), grid2)
+    cands, scores = jax.vmap(task)(bids, js)  # (G²*9, cap2, kk)
+    return _merge_pair_topk(cands, scores, grid2, k)
+
+
+def _scatter_vertex_major(cand_b, score_b, b2: Buckets, n2: int, k: int):
+    """Bucket-major (G², cap, k) results -> per-vertex (n2, k) arrays."""
     vid = b2.vid.reshape(-1)
     ok = vid >= 0
     cand = jnp.zeros((n2, k), dtype=jnp.int32).at[jnp.where(ok, vid, 0)].set(
@@ -166,6 +176,67 @@ def compute_similarity(
         jnp.where(ok[:, None], score_b.reshape(-1, k), NEG), mode="drop"
     )
     return cand, score
+
+
+def compute_similarity(
+    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, k: int = 4,
+    scheme: Scheme = Scheme.PAIR,
+):
+    """``local`` substrate: top-k alignment candidates for every v ∈ V2.
+    Returns per-vertex arrays (n2, k) cand / score."""
+    nb = jnp.asarray(neighbor_buckets(b2.grid))
+    if scheme == Scheme.ALL:
+        cand_b, score_b = compute_similarity_all(vs1, vs2, b1, b2, nb, k)
+    else:
+        cand_b, score_b = compute_similarity_pair(vs1, vs2, b1, b2, nb, k)
+    return _scatter_vertex_major(cand_b, score_b, b2, vs2.n, k)
+
+
+def compute_similarity_mesh(
+    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, k: int = 4,
+    scheme: Scheme = Scheme.PAIR, *, mesh: jax.sharding.Mesh,
+    axis_name: str = "nodelet",
+):
+    """``mesh`` substrate: the same task set sharded over ``axis_name``.
+
+    Bucket metadata is replicated (the shared QT plane); each nodelet runs
+    its slice of the task list — compute moves to tasks, which is why the
+    scheme/layout choice shows up in the *traffic model*, not in collectives.
+    Tasks are padded to a multiple of the axis size with repeats of task 0
+    (sliced off afterwards). Results are bit-identical to the local substrate.
+    """
+    from jax.sharding import PartitionSpec as P_
+
+    from ..compat import shard_map
+    from .util import round_up
+
+    nb = jnp.asarray(neighbor_buckets(b2.grid))
+    p = mesh.shape[axis_name]
+    grid2 = b2.grid * b2.grid
+    if scheme == Scheme.ALL:
+        task = _all_task(vs1, vs2, b1, b2, nb, k)
+        n_tasks = round_up(grid2, p)
+        ids = jnp.minimum(jnp.arange(n_tasks, dtype=jnp.int32), grid2 - 1)
+        f = shard_map(
+            lambda s: jax.vmap(task)(s), mesh, in_specs=P_(axis_name),
+            out_specs=P_(axis_name),
+        )
+        cand_b, score_b = f(ids)
+        cand_b, score_b = cand_b[:grid2], score_b[:grid2]
+    else:
+        kk = min(k, b1.cap)
+        task = _pair_task(vs1, vs2, b1, b2, nb, kk)
+        n_pairs = grid2 * 9
+        pad = round_up(n_pairs, p) - n_pairs
+        bids = jnp.pad(jnp.repeat(jnp.arange(grid2), 9), (0, pad))
+        js = jnp.pad(jnp.tile(jnp.arange(9), grid2), (0, pad))
+        f = shard_map(
+            lambda b, j: jax.vmap(task)(b, j), mesh,
+            in_specs=(P_(axis_name), P_(axis_name)), out_specs=P_(axis_name),
+        )
+        cands, scores = f(bids, js)
+        cand_b, score_b = _merge_pair_topk(cands[:n_pairs], scores[:n_pairs], grid2, k)
+    return _scatter_vertex_major(cand_b, score_b, b2, vs2.n, k)
 
 
 def recall_at_k(cand: jax.Array, pi: np.ndarray) -> float:
@@ -323,11 +394,11 @@ def plan_stats(
     )
 
 
-def gsana_effective_bw(
-    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, seconds: float,
+def gsana_rw_bytes(
+    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets,
     word_bytes: int = 8,
-) -> float:
-    """Paper §5.3 bandwidth: Σ_tasks (|B| + |B||B'| + ΣΣ RW(σ)) × sizeof(u) / t."""
+) -> int:
+    """Paper §5.3 useful-work volume: Σ_tasks (|B| + |B||B'| + ΣΣ RW(σ)) × sizeof(u)."""
     grid = b2.grid
     nb = neighbor_buckets(grid)
     c1 = np.asarray(b1.count, dtype=np.int64)
@@ -352,4 +423,12 @@ def gsana_effective_bw(
                 na1[u_ids][None, :], na2[v_ids][:, None],
             ).sum()
             words += int(c2[b]) + int(c2[b]) * int(c1[bp]) + int(rw)
-    return words * word_bytes / max(seconds, 1e-12)
+    return words * word_bytes
+
+
+def gsana_effective_bw(
+    vs1: VertexSet, vs2: VertexSet, b1: Buckets, b2: Buckets, seconds: float,
+    word_bytes: int = 8,
+) -> float:
+    """Paper §5.3 bandwidth: the RW-model volume over wall time."""
+    return gsana_rw_bytes(vs1, vs2, b1, b2, word_bytes) / max(seconds, 1e-12)

@@ -15,6 +15,10 @@ vector ``x`` is either
 of ``grain`` rows with ``lax.map`` (sequential across chunks, vector within),
 the Pallas kernel uses it as rows-per-program, and the distributed path uses
 it as the rows-per-shard block factor.
+
+This module holds the *algorithm* (one function per substrate:
+:func:`spmv_local`, :func:`spmv_mesh`); substrate selection lives in
+:mod:`repro.engine` (DESIGN.md §1). :func:`spmv` is a deprecated shim.
 """
 from __future__ import annotations
 
@@ -27,6 +31,7 @@ import numpy as np
 
 from ..sparse.csr import CSR
 from .strategies import MigratoryStrategy, TrafficStats
+from .util import ceil_div, round_up
 
 
 @jax.tree_util.register_pytree_node_class
@@ -69,7 +74,7 @@ def partition_ell(a: CSR, p: int, k: int | None = None, pad_rows_to: int = 1) ->
     k = k or max(kmax, 1)
     if kmax > k:
         raise ValueError(f"max row degree {kmax} > k={k}; use split_long_rows first")
-    rp = -(-(-(-n // p)) // pad_rows_to) * pad_rows_to
+    rp = round_up(ceil_div(n, p), pad_rows_to)
     cols = np.full((p, rp, k), -1, dtype=np.int32)
     vals = np.zeros((p, rp, k), dtype=data.dtype)
     for r in range(n):
@@ -82,7 +87,7 @@ def partition_ell(a: CSR, p: int, k: int | None = None, pad_rows_to: int = 1) ->
 def stripe_vector(x: jax.Array, p: int) -> jax.Array:
     """(N,) -> (P, N_p) striped layout, x[j] at (j % p, j // p). Pads with 0."""
     n = x.shape[0]
-    npp = -(-n // p)
+    npp = ceil_div(n, p)
     xp = jnp.pad(x, (0, npp * p - n))
     return xp.reshape(npp, p).T
 
@@ -105,7 +110,7 @@ def _spmv_local(a: PartitionedELL, x_full: jax.Array, grain: int) -> jax.Array:
     chunks of ``grain`` rows (the task structure the Emu sees)."""
     P, rp, k = a.cols.shape
     g = max(1, min(grain, rp))
-    n_chunks = -(-rp // g)
+    n_chunks = ceil_div(rp, g)
     pad = n_chunks * g - rp
     cols = jnp.pad(a.cols, ((0, 0), (0, pad), (0, 0)), constant_values=-1)
     vals = jnp.pad(a.vals, ((0, 0), (0, pad), (0, 0)))
@@ -119,28 +124,29 @@ def _spmv_local(a: PartitionedELL, x_full: jax.Array, grain: int) -> jax.Array:
     return y.reshape(P, n_chunks * g)[:, :rp]
 
 
-def spmv(
+def spmv_local(
+    a: PartitionedELL, x: jax.Array, strategy: MigratoryStrategy
+) -> jax.Array:
+    """``local`` substrate: single-device vmap emulation with the distributed
+    path's semantics. ``x``: full (N,) if ``strategy.replicate_x`` else
+    striped (P, N_p). Returns y in striped (P, R_p) layout."""
+    grain = strategy.dynamic_grain(a.rows_per_nodelet)
+    x_full = x if strategy.replicate_x else unstripe_vector(x, a.shape[1])
+    return _spmv_local(a, x_full, grain)
+
+
+def spmv_mesh(
     a: PartitionedELL,
     x: jax.Array,
     strategy: MigratoryStrategy,
-    *,
-    mesh: jax.sharding.Mesh | None = None,
+    mesh: jax.sharding.Mesh,
     axis_name: str = "nodelet",
 ) -> jax.Array:
-    """y = A @ x with S1 strategy. Returns y in striped (P, R_p) layout.
-
-    ``x``: full (N,) if ``strategy.replicate_x`` else striped (P, N_p).
-    With ``mesh`` the nodelet dimension is sharded over ``axis_name`` and the
+    """``mesh`` substrate: nodelet planes sharded over ``axis_name``. The
     non-replicated path pulls ``x`` with an ``all_gather`` (the migrate
-    analogue); otherwise a single-device vmap emulation with identical
-    semantics is used.
-    """
-    grain = strategy.dynamic_grain(a.rows_per_nodelet)
-    if mesh is None:
-        x_full = x if strategy.replicate_x else unstripe_vector(x, a.shape[1])
-        return _spmv_local(a, x_full, grain)
-
-    from jax.sharding import NamedSharding, PartitionSpec as P_
+    analogue). Same input/output conventions as :func:`spmv_local`."""
+    from ..compat import shard_map
+    from jax.sharding import PartitionSpec as P_
 
     n = a.shape[1]
 
@@ -161,10 +167,26 @@ def spmv(
 
         in_specs = (P_(axis_name), P_(axis_name), P_(axis_name))
 
-    f = jax.shard_map(
-        body, mesh=mesh, in_specs=in_specs, out_specs=P_(axis_name), check_vma=False
-    )
+    f = shard_map(body, mesh, in_specs=in_specs, out_specs=P_(axis_name))
     return f(a.cols, a.vals, x)
+
+
+def spmv(
+    a: PartitionedELL,
+    x: jax.Array,
+    strategy: MigratoryStrategy,
+    *,
+    mesh: jax.sharding.Mesh | None = None,
+    axis_name: str = "nodelet",
+) -> jax.Array:
+    """Deprecated shim — use ``repro.engine.run(SpMVOp(), ...)`` instead.
+
+    Kept so pre-engine call sites keep working: forwards to the engine's
+    substrate resolution (``local`` without a mesh, ``mesh`` with one).
+    """
+    from ..engine.substrate import substrate_for_mesh
+
+    return substrate_for_mesh(mesh, axis_name).spmv(a, x, strategy)
 
 
 def gather_result(y_striped: jax.Array, n: int) -> jax.Array:
@@ -184,12 +206,14 @@ def spmv_traffic(a: PartitionedELL, strategy: MigratoryStrategy) -> TrafficStats
     return TrafficStats(migrations=int(remote.sum()), remote_writes=0)
 
 
-def effective_bandwidth(a: PartitionedELL, n: int, seconds: float, dtype_bytes: int = 4) -> float:
-    """Paper §5.1 metric: (sizeof(A) + sizeof(x) + sizeof(y)) / time.
-
-    sizeof(A) counts true nonzeros (value + column index), not padding.
+def spmv_bytes_moved(a: PartitionedELL, n: int, dtype_bytes: int = 4) -> int:
+    """Bytes the paper's §5.1 bandwidth formula charges one SpMV with:
+    sizeof(A) (true nonzeros: value + column index) + sizeof(x) + sizeof(y).
     """
     nnz = int((np.asarray(a.cols) >= 0).sum())
-    bytes_a = nnz * (dtype_bytes + 4)
-    bytes_xy = (n + a.shape[0]) * dtype_bytes
-    return (bytes_a + bytes_xy) / max(seconds, 1e-12)
+    return nnz * (dtype_bytes + 4) + (n + a.shape[0]) * dtype_bytes
+
+
+def effective_bandwidth(a: PartitionedELL, n: int, seconds: float, dtype_bytes: int = 4) -> float:
+    """Paper §5.1 metric: (sizeof(A) + sizeof(x) + sizeof(y)) / time."""
+    return spmv_bytes_moved(a, n, dtype_bytes) / max(seconds, 1e-12)

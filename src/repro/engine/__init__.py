@@ -1,0 +1,47 @@
+"""Unified MigratoryOp engine: one substrate-dispatched entry point for the
+paper's three irregular algorithms, with built-in traffic & bandwidth
+accounting (DESIGN.md §1).
+
+    from repro.engine import run, SpMVOp, SpMVInputs
+    y, report = run(SpMVOp(), SpMVInputs(a, x), strategy, substrate="mesh")
+    print(report.to_json())
+
+Ops implement :class:`MigratoryOp`; backends implement
+:class:`Substrate` and register with :func:`register_substrate`.
+"""
+from .api import (
+    ExecutionPlan,
+    MigratoryOp,
+    OpNotSupportedError,
+    RunReport,
+    strategy_dict,
+)
+from .ops import (
+    OPS,
+    BFSInputs,
+    BFSOp,
+    GSANAInputs,
+    GSANAOp,
+    SpMVInputs,
+    SpMVOp,
+)
+from .runner import execute, resolve_op, run
+from .substrate import (
+    LocalSubstrate,
+    MeshSubstrate,
+    PallasSubstrate,
+    Substrate,
+    get_substrate,
+    list_substrates,
+    register_substrate,
+    substrate_for_mesh,
+)
+
+__all__ = [
+    "BFSInputs", "BFSOp", "ExecutionPlan", "GSANAInputs", "GSANAOp",
+    "LocalSubstrate", "MeshSubstrate", "MigratoryOp", "OPS",
+    "OpNotSupportedError", "PallasSubstrate", "RunReport", "SpMVInputs",
+    "SpMVOp", "Substrate", "execute", "get_substrate", "list_substrates",
+    "register_substrate", "resolve_op", "run", "strategy_dict",
+    "substrate_for_mesh",
+]

@@ -1,0 +1,126 @@
+"""Engine API types: the ``MigratoryOp`` protocol, ``ExecutionPlan``, and the
+unified ``RunReport`` record (DESIGN.md §1).
+
+The paper's thesis is that one set of strategies (S1 replication, S2
+migrate-vs-remote-write, S3 layout) applies uniformly to SpMV, BFS, and
+graph alignment. The engine makes that uniformity structural: every
+distributed op is a :class:`MigratoryOp` planned onto a
+:class:`~repro.engine.substrate.Substrate`, and every run yields one
+serializable :class:`RunReport` combining wall time, the paper's traffic
+model, and effective bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Protocol, runtime_checkable
+
+from ..core.strategies import MigratoryStrategy, TrafficStats
+
+
+class OpNotSupportedError(NotImplementedError):
+    """Raised when a substrate cannot execute an op (e.g. BFS on pallas)."""
+
+
+def strategy_dict(strategy: MigratoryStrategy) -> dict[str, Any]:
+    """Flatten a strategy into plain-JSON form for reports."""
+    return {
+        "comm": strategy.comm.value,
+        "replicate_x": strategy.replicate_x,
+        "layout": strategy.layout.value,
+        "scheme": strategy.scheme.value,
+        "grain": strategy.grain,
+    }
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """A strategy + substrate bound to concrete inputs, ready to execute.
+
+    ``run`` is a zero-arg executor returning the op's result; ``meta`` holds
+    static facts about the inputs (sizes, nnz, ...) plus anything the op
+    caches between :meth:`MigratoryOp.traffic` and metric computation.
+    """
+
+    op: str
+    strategy: MigratoryStrategy
+    substrate: str
+    inputs: Any
+    run: Callable[[], Any]
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+@runtime_checkable
+class MigratoryOp(Protocol):
+    """A distributed operation the engine knows how to run and account for."""
+
+    name: str
+
+    def plan(self, inputs: Any, strategy: MigratoryStrategy, substrate) -> ExecutionPlan:
+        """Bind inputs + strategy to a substrate-specific executor."""
+
+    def traffic(self, plan: ExecutionPlan) -> TrafficStats:
+        """Paper-model communication traffic for this plan."""
+
+    def bytes_moved(self, plan: ExecutionPlan) -> int:
+        """Bytes the paper's effective-bandwidth formula charges one run."""
+
+    def metrics(self, plan: ExecutionPlan, result: Any, seconds: float) -> dict[str, Any]:
+        """Op-specific derived metrics (MTEPS, recall, modeled makespan, ...)."""
+
+
+@dataclasses.dataclass
+class RunReport:
+    """One run, one record: unifies wall time, TrafficStats, the per-op stats
+    (BFS rounds / GSANA plan model), and effective bandwidth."""
+
+    op: str
+    strategy: dict[str, Any]
+    substrate: str
+    seconds: float
+    traffic: TrafficStats
+    bytes_moved: int
+    effective_gbps: float
+    metrics: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict[str, Any]:
+        """Flat, JSON-ready form — the unified benchmark row schema."""
+        return {
+            "op": self.op,
+            **{f"strategy_{k}": v for k, v in self.strategy.items()},
+            "substrate": self.substrate,
+            "seconds": self.seconds,
+            "us_per_call": self.seconds * 1e6,
+            "migrations": self.traffic.migrations,
+            "remote_writes": self.traffic.remote_writes,
+            "collective_bytes": self.traffic.collective_bytes,
+            "traffic_bytes": self.traffic.total_bytes,
+            "bytes_moved": self.bytes_moved,
+            "effective_gbps": self.effective_gbps,
+            **self.metrics,
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), default=str)
+
+    @classmethod
+    def from_parts(
+        cls,
+        op: str,
+        strategy: MigratoryStrategy,
+        substrate: str,
+        seconds: float,
+        traffic: TrafficStats,
+        bytes_moved: int,
+        metrics: dict[str, Any] | None = None,
+    ) -> "RunReport":
+        return cls(
+            op=op,
+            strategy=strategy_dict(strategy),
+            substrate=substrate,
+            seconds=seconds,
+            traffic=traffic,
+            bytes_moved=bytes_moved,
+            effective_gbps=bytes_moved / max(seconds, 1e-12) / 1e9,
+            metrics=metrics or {},
+        )

@@ -1,0 +1,189 @@
+"""MigratoryOp adapters over the core algorithms (DESIGN.md §1).
+
+Each adapter owns three things for its algorithm: how to bind inputs to a
+substrate (``plan``), the paper's traffic model (``traffic``), and the
+paper's useful-bytes accounting (``bytes_moved``), plus derived metrics
+(MTEPS, recall, modeled makespan) for the RunReport.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..core.bfs import bfs_bytes_moved, bfs_traffic, teps
+from ..core.gsana import (
+    gsana_rw_bytes,
+    layout_blk,
+    layout_hcb,
+    plan_stats,
+    recall_at_k,
+)
+from ..core.gsana_data import Buckets, VertexSet
+from ..core.spmv import (
+    PartitionedELL,
+    spmv_bytes_moved,
+    spmv_traffic,
+    stripe_vector,
+)
+from ..core.strategies import Layout, MigratoryStrategy, TrafficStats
+from ..sparse.graph import PartitionedGraph
+from .api import ExecutionPlan
+from .substrate import Substrate
+
+
+# -- SpMV ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SpMVInputs:
+    """``x`` is always the full (N,) vector; the engine stripes it when the
+    strategy keeps it distributed (S1 off)."""
+
+    a: PartitionedELL
+    x: jax.Array
+
+
+class SpMVOp:
+    name = "spmv"
+
+    def plan(self, inputs: SpMVInputs, strategy: MigratoryStrategy, substrate: Substrate):
+        x = inputs.x if strategy.replicate_x else stripe_vector(inputs.x, inputs.a.P)
+        return ExecutionPlan(
+            op=self.name,
+            strategy=strategy,
+            substrate=substrate.name,
+            inputs=inputs,
+            run=lambda: substrate.spmv(inputs.a, x, strategy),
+            meta={"n_cols": inputs.a.shape[1], "n_rows": inputs.a.shape[0]},
+        )
+
+    def traffic(self, plan: ExecutionPlan) -> TrafficStats:
+        return spmv_traffic(plan.inputs.a, plan.strategy)
+
+    def bytes_moved(self, plan: ExecutionPlan) -> int:
+        return spmv_bytes_moved(plan.inputs.a, plan.meta["n_cols"])
+
+    def metrics(self, plan: ExecutionPlan, result: Any, seconds: float) -> dict[str, Any]:
+        return {
+            "grain": plan.strategy.dynamic_grain(plan.inputs.a.rows_per_nodelet),
+            "nodelets": plan.inputs.a.P,
+        }
+
+
+# -- BFS -----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BFSInputs:
+    g: PartitionedGraph
+    root: int
+    max_rounds: int | None = None
+
+
+class BFSOp:
+    name = "bfs"
+
+    def plan(self, inputs: BFSInputs, strategy: MigratoryStrategy, substrate: Substrate):
+        return ExecutionPlan(
+            op=self.name,
+            strategy=strategy,
+            substrate=substrate.name,
+            inputs=inputs,
+            run=lambda: substrate.bfs(inputs.g, inputs.root, strategy, inputs.max_rounds),
+        )
+
+    def _stats(self, plan: ExecutionPlan):
+        """The numpy traffic replay, computed once per plan (O(edges))."""
+        if "run_stats" not in plan.meta:
+            plan.meta["run_stats"] = bfs_traffic(
+                plan.inputs.g, plan.inputs.root, plan.strategy
+            )
+        return plan.meta["run_stats"]
+
+    def traffic(self, plan: ExecutionPlan) -> TrafficStats:
+        return self._stats(plan).traffic
+
+    def bytes_moved(self, plan: ExecutionPlan) -> int:
+        return bfs_bytes_moved(self._stats(plan).edges_traversed)
+
+    def metrics(self, plan: ExecutionPlan, result: Any, seconds: float) -> dict[str, Any]:
+        stats = self._stats(plan)
+        reached = int((np.asarray(result) >= 0).sum()) if result is not None else 0
+        return {
+            "rounds": stats.rounds,
+            "edges_traversed": stats.edges_traversed,
+            "mteps": teps(stats.edges_traversed, seconds) / 1e6,
+            "reached": reached,
+        }
+
+
+# -- GSANA ---------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class GSANAInputs:
+    vs1: VertexSet
+    vs2: VertexSet
+    b1: Buckets
+    b2: Buckets
+    k: int = 4
+    nodelets: int = 8
+    threads_per_nodelet: int = 32
+    migration_penalty: float = 0.3
+    ground_truth: np.ndarray | None = None  # optional π for recall@k
+
+
+class GSANAOp:
+    name = "gsana"
+
+    def plan(self, inputs: GSANAInputs, strategy: MigratoryStrategy, substrate: Substrate):
+        return ExecutionPlan(
+            op=self.name,
+            strategy=strategy,
+            substrate=substrate.name,
+            inputs=inputs,
+            run=lambda: substrate.gsana(
+                inputs.vs1, inputs.vs2, inputs.b1, inputs.b2, inputs.k, strategy
+            ),
+        )
+
+    def _plan_stats(self, plan: ExecutionPlan):
+        """S3 placement/traffic model for (layout x scheme), cached per plan."""
+        if "plan_stats" not in plan.meta:
+            i = plan.inputs
+            if plan.strategy.layout == Layout.HCB:
+                placement = layout_hcb(i.b1, i.b2, i.nodelets)
+            else:
+                placement = layout_blk(i.b1, i.b2, i.vs1.n, i.vs2.n, i.nodelets)
+            plan.meta["plan_stats"] = plan_stats(
+                i.vs1, i.vs2, i.b1, i.b2, placement, plan.strategy.scheme,
+                i.nodelets, threads_per_nodelet=i.threads_per_nodelet,
+                migration_penalty=i.migration_penalty,
+            )
+        return plan.meta["plan_stats"]
+
+    def traffic(self, plan: ExecutionPlan) -> TrafficStats:
+        return self._plan_stats(plan).traffic
+
+    def bytes_moved(self, plan: ExecutionPlan) -> int:
+        i = plan.inputs
+        return gsana_rw_bytes(i.vs1, i.vs2, i.b1, i.b2)
+
+    def metrics(self, plan: ExecutionPlan, result: Any, seconds: float) -> dict[str, Any]:
+        ps = self._plan_stats(plan)
+        out = {
+            "total_comparisons": ps.total_comparisons,
+            "model_makespan": ps.makespan,
+            "model_speedup": ps.speedup_model,
+            "rw_words": ps.rw_total,
+        }
+        if plan.inputs.ground_truth is not None and result is not None:
+            cand, _ = result
+            out["recall_at_k"] = recall_at_k(cand, plan.inputs.ground_truth)
+        return out
+
+
+OPS = {"spmv": SpMVOp, "bfs": BFSOp, "gsana": GSANAOp}

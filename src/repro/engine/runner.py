@@ -1,0 +1,78 @@
+"""The single entry point: ``engine.run(op, inputs, strategy, substrate)``.
+
+    result, report = run(SpMVOp(), SpMVInputs(a, x), strategy, substrate="mesh")
+
+One call plans the op onto a substrate, executes (optionally warmed and
+repeated for stable timing), and returns the result together with a
+:class:`~repro.engine.api.RunReport` unifying wall time, the paper's traffic
+model, and effective bandwidth.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+
+from ..core.strategies import MigratoryStrategy
+from .api import ExecutionPlan, MigratoryOp, RunReport
+from .ops import OPS
+from .substrate import Substrate, get_substrate
+
+
+def resolve_op(op: "MigratoryOp | str") -> MigratoryOp:
+    if isinstance(op, str):
+        try:
+            return OPS[op]()
+        except KeyError:
+            raise ValueError(f"unknown op {op!r}; known: {sorted(OPS)}") from None
+    return op
+
+
+def execute(plan: ExecutionPlan, *, iters: int = 1, warmup: int = 0):
+    """Run a plan, returning (result, median wall seconds). With the default
+    ``iters=1, warmup=0`` the single timed call includes compilation."""
+    for _ in range(warmup):
+        jax.block_until_ready(plan.run())
+    times = []
+    result = None
+    for _ in range(max(1, iters)):
+        t0 = time.perf_counter()
+        result = jax.block_until_ready(plan.run())
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return result, times[len(times) // 2]
+
+
+def run(
+    op: "MigratoryOp | str",
+    inputs: Any,
+    strategy: MigratoryStrategy | None = None,
+    substrate: "Substrate | str" = "local",
+    *,
+    iters: int = 1,
+    warmup: int = 0,
+) -> tuple[Any, RunReport]:
+    """Execute ``op`` on ``substrate`` under ``strategy``; return
+    ``(result, RunReport)``.
+
+    ``op``: a MigratoryOp instance or name ("spmv" | "bfs" | "gsana").
+    ``substrate``: a Substrate instance or name ("local" | "mesh" | "pallas").
+    ``iters``/``warmup``: benchmark-style timing (median of ``iters`` after
+    ``warmup`` unmeasured calls); the defaults time a single cold call.
+    """
+    op = resolve_op(op)
+    sub = get_substrate(substrate)
+    strategy = strategy or MigratoryStrategy()
+    plan = op.plan(inputs, strategy, sub)
+    result, seconds = execute(plan, iters=iters, warmup=warmup)
+    report = RunReport.from_parts(
+        op=op.name,
+        strategy=strategy,
+        substrate=sub.name,
+        seconds=seconds,
+        traffic=op.traffic(plan),
+        bytes_moved=op.bytes_moved(plan),
+        metrics=op.metrics(plan, result, seconds),
+    )
+    return result, report

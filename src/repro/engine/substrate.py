@@ -1,0 +1,199 @@
+"""Substrates: where a MigratoryOp's plan executes (DESIGN.md §1).
+
+Three built-in backends, mirroring the realizations the paper compares:
+
+- ``local``  — single-device vmap emulation with the distributed semantics
+  (the correctness oracle; what the Emu sees as one node).
+- ``mesh``   — ``shard_map`` over a 1-D nodelet axis (the Chick's nodelets
+  as TPU shards): replication, all_gather pulls, all_to_all pushes.
+- ``pallas`` — routes the compute hot loops to the Pallas kernels
+  (``kernels/spmv``, ``kernels/topk_sim``) where shapes allow.
+
+New backends (multi-host, CPU collectives, ...) register with
+:func:`register_substrate` and immediately serve every op.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from ..core.bfs import bfs_local, bfs_mesh
+from ..core.gsana import NEG, compute_similarity, compute_similarity_mesh
+from ..core.spmv import spmv_local, spmv_mesh, unstripe_vector
+from ..core.strategies import MigratoryStrategy, Scheme
+from .api import OpNotSupportedError
+
+
+class Substrate:
+    """Execution backend for MigratoryOps. Subclasses implement the ops they
+    support; unimplemented ops raise :class:`OpNotSupportedError`."""
+
+    name: str = "abstract"
+
+    def supports(self, op_name: str) -> bool:
+        return getattr(type(self), op_name, None) is not getattr(Substrate, op_name)
+
+    # -- op entry points (algorithm code lives in repro.core.*) ---------------
+
+    def spmv(self, a, x, strategy: MigratoryStrategy) -> jax.Array:
+        raise OpNotSupportedError(f"substrate {self.name!r} does not run spmv")
+
+    def bfs(self, g, root, strategy: MigratoryStrategy, max_rounds=None) -> jax.Array:
+        raise OpNotSupportedError(f"substrate {self.name!r} does not run bfs")
+
+    def gsana(self, vs1, vs2, b1, b2, k: int, strategy: MigratoryStrategy):
+        raise OpNotSupportedError(f"substrate {self.name!r} does not run gsana")
+
+
+class LocalSubstrate(Substrate):
+    """Single-device emulation — identical semantics to the mesh paths."""
+
+    name = "local"
+
+    def spmv(self, a, x, strategy):
+        return spmv_local(a, x, strategy)
+
+    def bfs(self, g, root, strategy, max_rounds=None):
+        return bfs_local(g, root, strategy, max_rounds)
+
+    def gsana(self, vs1, vs2, b1, b2, k, strategy):
+        return compute_similarity(vs1, vs2, b1, b2, k, strategy.scheme)
+
+
+class MeshSubstrate(Substrate):
+    """``shard_map`` over a nodelet axis. With no explicit mesh, builds a
+    1-D nodelet mesh matching the input's partition count (requires that
+    many jax devices)."""
+
+    name = "mesh"
+
+    def __init__(self, mesh: jax.sharding.Mesh | None = None, axis_name: str = "nodelet"):
+        self.mesh = mesh
+        self.axis_name = axis_name
+
+    def _mesh_for(self, p: int) -> jax.sharding.Mesh:
+        if self.mesh is not None:
+            return self.mesh
+        from ..launch.mesh import make_nodelet_mesh
+
+        if len(jax.devices()) < p:
+            raise OpNotSupportedError(
+                f"mesh substrate needs {p} devices for {p} nodelets, "
+                f"have {len(jax.devices())} (pass an explicit mesh or use 'local')"
+            )
+        return make_nodelet_mesh(p)
+
+    def spmv(self, a, x, strategy):
+        return spmv_mesh(a, x, strategy, self._mesh_for(a.P), self.axis_name)
+
+    def bfs(self, g, root, strategy, max_rounds=None):
+        return bfs_mesh(
+            g, root, strategy, max_rounds,
+            mesh=self._mesh_for(g.P), axis_name=self.axis_name,
+        )
+
+    def gsana(self, vs1, vs2, b1, b2, k, strategy):
+        # task distribution over however many devices the host mesh offers
+        mesh = self.mesh
+        if mesh is None:
+            from ..launch.mesh import make_nodelet_mesh
+
+            n_dev = len(jax.devices())
+            if n_dev < 2:
+                raise OpNotSupportedError(
+                    "mesh substrate needs >1 device to distribute gsana tasks "
+                    "(pass an explicit mesh or use 'local')"
+                )
+            mesh = make_nodelet_mesh(n_dev)
+        return compute_similarity_mesh(
+            vs1, vs2, b1, b2, k, strategy.scheme, mesh=mesh, axis_name=self.axis_name,
+        )
+
+
+class PallasSubstrate(Substrate):
+    """Routes hot loops to the Pallas kernels. ``interpret=True`` runs the
+    kernels in interpret mode (CPU-correct); on TPU pass ``interpret=False``.
+    BFS has no kernel (its hot loop is the collective pattern itself)."""
+
+    name = "pallas"
+
+    def __init__(self, interpret: bool = True):
+        self.interpret = interpret
+
+    def spmv(self, a, x, strategy):
+        from ..kernels.spmv.ops import spmv as spmv_kernel
+
+        x_full = x if strategy.replicate_x else unstripe_vector(x, a.shape[1])
+        p, rp, k = a.cols.shape
+        grain = strategy.dynamic_grain(rp)
+        # nodelet planes -> one (P*R_p, K) row block; kernel grid = row chunks
+        y = spmv_kernel(
+            a.cols.reshape(p * rp, k), a.vals.reshape(p * rp, k), x_full,
+            grain=max(1, min(grain, p * rp)), interpret=self.interpret,
+        )
+        return y.reshape(p, rp)
+
+    def gsana(self, vs1, vs2, b1, b2, k, strategy):
+        import jax.numpy as jnp
+        import numpy as np
+
+        from ..core.gsana import DEFAULT_VOCAB, _merge_pair_topk, _scatter_vertex_major  # noqa: PLC0415
+        from ..core.gsana_data import neighbor_buckets
+        from ..kernels.topk_sim.ops import topk_sim_pairs
+
+        if strategy.scheme != Scheme.PAIR:
+            raise OpNotSupportedError(
+                "pallas gsana kernel implements the PAIR task shape only"
+            )
+        grid2 = b2.grid * b2.grid
+        nb = neighbor_buckets(b2.grid)
+        pair_b2 = jnp.asarray(np.repeat(np.arange(grid2), 9))
+        pair_b1 = jnp.asarray(nb.reshape(-1))
+        scores, u_ids = topk_sim_pairs(
+            vs1, vs2, b1, b2, pair_b2, pair_b1,
+            vocab=DEFAULT_VOCAB, k=min(k, b1.cap), interpret=self.interpret,
+        )
+        scores = jnp.where(jnp.isfinite(scores), scores, NEG)
+        cand_b, score_b = _merge_pair_topk(u_ids, scores, grid2, k)
+        return _scatter_vertex_major(cand_b, score_b, b2, vs2.n, k)
+
+
+# -- registry ------------------------------------------------------------------
+
+_REGISTRY: dict[str, Callable[[], Substrate]] = {}
+
+
+def register_substrate(name: str, factory: Callable[[], Substrate]) -> None:
+    _REGISTRY[name] = factory
+
+
+def list_substrates() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def get_substrate(substrate: "Substrate | str") -> Substrate:
+    """Resolve a substrate instance from a name or pass an instance through."""
+    if isinstance(substrate, Substrate):
+        return substrate
+    try:
+        return _REGISTRY[substrate]()
+    except KeyError:
+        raise ValueError(
+            f"unknown substrate {substrate!r}; registered: {list_substrates()}"
+        ) from None
+
+
+def substrate_for_mesh(
+    mesh: jax.sharding.Mesh | None, axis_name: str = "nodelet"
+) -> Substrate:
+    """Legacy-shim resolution: a mesh means the mesh substrate, no mesh means
+    local. The one place the old ``mesh=None`` convention is interpreted."""
+    if mesh is None:
+        return LocalSubstrate()
+    return MeshSubstrate(mesh, axis_name)
+
+
+register_substrate("local", LocalSubstrate)
+register_substrate("mesh", MeshSubstrate)
+register_substrate("pallas", PallasSubstrate)

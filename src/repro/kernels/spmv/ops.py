@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ...core.util import round_up
 from .kernel import spmv_ell_pallas
 from .ref import spmv_ell_reference
 
@@ -26,7 +27,7 @@ def spmv(
     if not use_kernel:
         return spmv_ell_reference(cols, vals, x)
     g = max(1, min(grain, r))
-    r_pad = -(-r // g) * g
+    r_pad = round_up(r, g)
     if r_pad != r:
         cols = jnp.pad(cols, ((0, r_pad - r), (0, 0)), constant_values=-1)
         vals = jnp.pad(vals, ((0, r_pad - r), (0, 0)))

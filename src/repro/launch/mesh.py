@@ -1,29 +1,29 @@
 """Production mesh builders (multi-pod dry-run spec).
 
 Functions, not module-level constants: importing this module never touches
-jax device state.
+jax device state. All builders go through :mod:`repro.compat` so they work
+on both current jax and the 0.4.x line.
 """
 from __future__ import annotations
 
 import jax
+
+from ..compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever this host offers, as a 1-D 'data' mesh (smoke/e2e runs)."""
-    n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((len(jax.devices()),), ("data",))
 
 
 def make_nodelet_mesh(p: int = 8) -> jax.sharding.Mesh:
     """Emu-like mesh for the core irregular algorithms: one axis of nodelets
     (8 = one Chick node, 64 = the 8-node Chick)."""
-    return jax.make_mesh((p,), ("nodelet",), axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((p,), ("nodelet",))

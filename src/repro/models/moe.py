@@ -33,8 +33,26 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
+from ..core.strategies import Comm, MigratoryStrategy
+from ..core.util import round_up
 from .config import ModelConfig
 from .layers import Ctx, _dt
+
+
+def dispatch_from_strategy(
+    strategy: MigratoryStrategy | None, *, num_experts: int, data_axis: int
+) -> str | None:
+    """Map a paper strategy onto an MoE dispatch mode (the engine's
+    strategy-to-substrate idea applied to token routing, DESIGN.md §4):
+    S2 remote_write -> ep_push (all_to_all packets), S2 migrate -> ep_pull
+    (all_gather the token set), and the S1-flavored ``tp`` replication
+    fallback whenever expert parallelism cannot divide the data axis."""
+    if strategy is None:
+        return None
+    if data_axis > 1 and num_experts % data_axis == 0:
+        return "ep_pull" if strategy.comm == Comm.MIGRATE else "ep_push"
+    return "tp"
 
 
 def moe_params(cfg: ModelConfig, key, stack: tuple[int, ...] = ()) -> dict:
@@ -101,17 +119,32 @@ def _local_combine(cfg, out_buf, gates, ef, pos, keep, t, d):
     return jnp.sum((vals * gates.reshape(-1)[:, None]).reshape(t, k, d), axis=1)
 
 
-def moe_sublayer(ctx: Ctx, p: dict, x: jax.Array, *, dispatch: str | None = None) -> jax.Array:
-    """x: (B, S, D) -> (B, S, D). Dispatch mode defaults by divisibility."""
+def moe_sublayer(
+    ctx: Ctx,
+    p: dict,
+    x: jax.Array,
+    *,
+    dispatch: str | None = None,
+    strategy: MigratoryStrategy | None = None,
+) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). Dispatch mode: explicit ``dispatch`` wins,
+    else derived from ``strategy`` (engine-style), else the config/default
+    (the default REMOTE_WRITE strategy, i.e. ep_push where divisible)."""
     cfg = ctx.cfg
     b, s, d = x.shape
     mesh = ctx.mesh
     ms = mesh.shape.get("model", 1) if mesh is not None else 1
     ds = mesh.shape.get("data", 1) if mesh is not None else 1
     if dispatch is None:
+        dispatch = dispatch_from_strategy(
+            strategy, num_experts=cfg.num_experts, data_axis=ds
+        )
+    if dispatch is None:
         dispatch = cfg.moe_dispatch
     if dispatch is None:
-        dispatch = "ep_push" if (ds > 1 and cfg.num_experts % ds == 0) else "tp"
+        dispatch = dispatch_from_strategy(
+            MigratoryStrategy(), num_experts=cfg.num_experts, data_axis=ds
+        )
     if mesh is None or ms == 1:
         # single-shard semantics path (smoke tests)
         xt = x.reshape(b * s, d)
@@ -133,7 +166,7 @@ def moe_sublayer(ctx: Ctx, p: dict, x: jax.Array, *, dispatch: str | None = None
 
 def _capacity(cfg: ModelConfig, tokens: int, experts: int) -> int:
     c = int(cfg.capacity_factor * tokens * cfg.experts_per_token / experts)
-    return max(8, -(-c // 8) * 8)
+    return max(8, round_up(c, 8))
 
 
 def _moe_tp(ctx: Ctx, p: dict, x: jax.Array, batch_axes) -> jax.Array:
@@ -171,9 +204,9 @@ def _moe_tp(ctx: Ctx, p: dict, x: jax.Array, batch_axes) -> jax.Array:
             out = chunk_fn(xt)
         return out.reshape(bl, sl, d)
 
-    return jax.shard_map(
+    return shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(
             P(batch_axes, None, None),
             P(),  # router replicated
@@ -182,7 +215,6 @@ def _moe_tp(ctx: Ctx, p: dict, x: jax.Array, batch_axes) -> jax.Array:
             P(None, "model", None),  # w_down: F sliced on input dim
         ),
         out_specs=P(batch_axes, None, None),
-        check_vma=False,
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
 
@@ -283,9 +315,9 @@ def _moe_ep(ctx: Ctx, p: dict, x: jax.Array, batch_axes, *, push: bool) -> jax.A
             out = jax.lax.all_gather(out, "model", tiled=True)
         return out.reshape(bl, sl, d)
 
-    return jax.shard_map(
+    return shard_map(
         body,
-        mesh=mesh,
+        mesh,
         in_specs=(
             P(batch_axes, None, None),
             P(),
@@ -294,7 +326,6 @@ def _moe_ep(ctx: Ctx, p: dict, x: jax.Array, batch_axes, *, push: bool) -> jax.A
             P("data", None, None),
         ),
         out_specs=P(batch_axes, None, None),
-        check_vma=False,
     )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
 
 

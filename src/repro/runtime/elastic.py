@@ -46,7 +46,6 @@ def plan_remesh(
 
 
 def make_elastic_mesh(plan: ElasticPlan) -> jax.sharding.Mesh:
-    return jax.make_mesh(
-        (plan.data_axis, plan.model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from ..compat import make_mesh
+
+    return make_mesh((plan.data_axis, plan.model_axis), ("data", "model"))

@@ -1,0 +1,51 @@
+"""Optional-hypothesis shim (install the ``test`` extra for property tests).
+
+``hypothesis`` is a test-extra dependency (``pip install .[test]``), not a
+runtime one. Importing it unguarded makes the whole suite fail to collect on
+a bare install, so test modules import ``given``/``settings``/``st`` from
+here instead: with hypothesis present this is a pass-through; without it the
+property tests are collected as skips (the rest of each module still runs).
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:  # test extra not installed
+    HAS_HYPOTHESIS = False
+
+    _SKIP = pytest.mark.skip(
+        reason="hypothesis not installed (pip install '.[test]')"
+    )
+
+    def given(*_args, **_kwargs):  # noqa: D103 - mirrors hypothesis.given
+        def decorate(fn):
+            # drop the property arguments: the test body never runs
+            def skipped():
+                pass  # pragma: no cover
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return _SKIP(skipped)
+
+        return decorate
+
+    def settings(*_args, **_kwargs):  # noqa: D103 - mirrors hypothesis.settings
+        return lambda fn: fn
+
+    class _StrategyStub:
+        """Stands in for ``hypothesis.strategies`` at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+
+def require_hypothesis():
+    """``pytest.importorskip``-style guard for tests that call hypothesis
+    APIs imperatively (rather than through the decorators above)."""
+    return pytest.importorskip("hypothesis")

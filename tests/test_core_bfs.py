@@ -1,7 +1,7 @@
 """Core BFS: S2 remote-write strategy — correctness + traffic ordering."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core import (
     Comm, MigratoryStrategy, bfs, bfs_effective_bandwidth, bfs_traffic, teps,

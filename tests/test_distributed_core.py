@@ -16,8 +16,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from repro.sparse import *
 from repro.core import *
+from repro.launch.mesh import make_nodelet_mesh
 
-mesh = jax.make_mesh((8,), ("nodelet",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_nodelet_mesh(8)
 a = laplacian_2d(16)
 x = jnp.asarray(np.random.default_rng(0).standard_normal(256).astype(np.float32))
 pe = partition_ell(a, 8)

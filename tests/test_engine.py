@@ -1,0 +1,283 @@
+"""Engine: MigratoryOp/Substrate/RunReport — substrate parity, traffic
+accounting parity with the legacy per-algorithm functions, and the report
+schema."""
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Comm,
+    Layout,
+    MigratoryStrategy,
+    Scheme,
+    bfs_traffic,
+    bucketize,
+    ceil_div,
+    effective_bandwidth,
+    gather_result,
+    generate_alignment_pair,
+    partition_ell,
+    pick_grid,
+    plan_stats,
+    layout_hcb,
+    round_up,
+    spmv_traffic,
+)
+from repro.engine import (
+    BFSInputs,
+    BFSOp,
+    GSANAInputs,
+    GSANAOp,
+    OpNotSupportedError,
+    PallasSubstrate,
+    RunReport,
+    SpMVInputs,
+    SpMVOp,
+    get_substrate,
+    list_substrates,
+    register_substrate,
+    run,
+)
+from repro.sparse import (
+    edges_to_csr,
+    erdos_renyi_edges,
+    laplacian_2d,
+    partition_graph,
+    spmv_csr_ref,
+)
+
+
+# -- shared small problems -----------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def spmv_problem():
+    a = laplacian_2d(12)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(144).astype(np.float32))
+    return a, SpMVInputs(partition_ell(a, 8), x)
+
+
+@pytest.fixture(scope="module")
+def bfs_problem():
+    g = edges_to_csr(erdos_renyi_edges(8, 6, seed=2), 256)
+    return BFSInputs(partition_graph(g, 8), 3)
+
+
+@pytest.fixture(scope="module")
+def gsana_problem():
+    vs1, vs2, pi = generate_alignment_pair(384, seed=11)
+    grid = pick_grid(384, 32)
+    cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+    return GSANAInputs(
+        vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+        ground_truth=pi,
+    )
+
+
+# -- util ----------------------------------------------------------------------
+
+
+def test_ceil_div_round_up():
+    assert ceil_div(0, 4) == 0
+    assert ceil_div(1, 4) == 1
+    assert ceil_div(8, 4) == 2
+    assert ceil_div(9, 4) == 3
+    assert round_up(0, 8) == 0
+    assert round_up(1, 8) == 8
+    assert round_up(16, 8) == 16
+    # the quadruple-negation expression it replaced in partition_ell
+    for n, p, pad in [(144, 8, 1), (37, 8, 4), (1000, 64, 8), (5, 3, 2)]:
+        assert round_up(ceil_div(n, p), pad) == -(-(-(-n // p)) // pad) * pad
+
+
+# -- engine.run on the local substrate -----------------------------------------
+
+
+@pytest.mark.parametrize("replicate", [True, False])
+def test_spmv_local_matches_ref_and_legacy_traffic(spmv_problem, replicate):
+    a, inputs = spmv_problem
+    st = MigratoryStrategy(replicate_x=replicate)
+    y, report = run(SpMVOp(), inputs, st, "local")
+    np.testing.assert_allclose(
+        np.asarray(gather_result(y, 144)), np.asarray(spmv_csr_ref(a, inputs.x)),
+        atol=1e-4,
+    )
+    legacy = spmv_traffic(inputs.a, st)
+    assert report.traffic.migrations == legacy.migrations
+    assert report.traffic.remote_writes == legacy.remote_writes
+    # effective bandwidth consistent with the legacy formula at this timing
+    assert report.effective_gbps * 1e9 == pytest.approx(
+        effective_bandwidth(inputs.a, 144, report.seconds), rel=1e-6
+    )
+
+
+@pytest.mark.parametrize("comm", [Comm.MIGRATE, Comm.REMOTE_WRITE])
+def test_bfs_local_matches_legacy_traffic(bfs_problem, comm):
+    st = MigratoryStrategy(comm=comm)
+    parents, report = run(BFSOp(), bfs_problem, st, "local")
+    legacy = bfs_traffic(bfs_problem.g, bfs_problem.root, st)
+    assert report.traffic.migrations == legacy.traffic.migrations
+    assert report.traffic.remote_writes == legacy.traffic.remote_writes
+    assert report.metrics["rounds"] == legacy.rounds
+    assert report.metrics["edges_traversed"] == legacy.edges_traversed
+    assert report.metrics["reached"] == int((np.asarray(parents) >= 0).sum())
+
+
+def test_gsana_local_matches_legacy_plan_stats(gsana_problem):
+    st = MigratoryStrategy(layout=Layout.HCB, scheme=Scheme.PAIR)
+    (cand, score), report = run(GSANAOp(), gsana_problem, st, "local")
+    assert report.metrics["recall_at_k"] > 0.9
+    i = gsana_problem
+    legacy = plan_stats(
+        i.vs1, i.vs2, i.b1, i.b2, layout_hcb(i.b1, i.b2, i.nodelets),
+        Scheme.PAIR, i.nodelets, threads_per_nodelet=i.threads_per_nodelet,
+    )
+    assert report.traffic.migrations == legacy.traffic.migrations
+    assert report.metrics["model_makespan"] == legacy.makespan
+    assert report.metrics["total_comparisons"] == legacy.total_comparisons
+
+
+def test_run_by_op_name(spmv_problem):
+    _, inputs = spmv_problem
+    y, report = run("spmv", inputs, MigratoryStrategy(), "local")
+    assert report.op == "spmv" and report.substrate == "local"
+
+
+# -- pallas substrate ----------------------------------------------------------
+
+
+def test_spmv_pallas_matches_local(spmv_problem):
+    a, inputs = spmv_problem
+    st = MigratoryStrategy()
+    y_local, _ = run(SpMVOp(), inputs, st, "local")
+    y_pallas, report = run(SpMVOp(), inputs, st, "pallas")
+    np.testing.assert_allclose(
+        np.asarray(y_local), np.asarray(y_pallas), atol=1e-4
+    )
+    assert report.substrate == "pallas"
+
+
+def test_gsana_pallas_matches_local(gsana_problem):
+    st = MigratoryStrategy(scheme=Scheme.PAIR)
+    (c_l, s_l), _ = run(GSANAOp(), gsana_problem, st, "local")
+    (c_p, s_p), _ = run(GSANAOp(), gsana_problem, st, "pallas")
+    fin = np.isfinite(np.asarray(s_l))
+    np.testing.assert_allclose(
+        np.asarray(s_l)[fin], np.asarray(s_p)[fin], atol=1e-5
+    )
+
+
+def test_bfs_pallas_unsupported(bfs_problem):
+    with pytest.raises(OpNotSupportedError):
+        run(BFSOp(), bfs_problem, MigratoryStrategy(), "pallas")
+    assert not PallasSubstrate().supports("bfs")
+    assert PallasSubstrate().supports("spmv")
+
+
+# -- registry + report schema --------------------------------------------------
+
+
+def test_substrate_registry():
+    assert {"local", "mesh", "pallas"} <= set(list_substrates())
+    with pytest.raises(ValueError):
+        get_substrate("no-such-substrate")
+    from repro.engine.substrate import _REGISTRY
+
+    register_substrate("local2", type(get_substrate("local")))
+    try:
+        assert "local2" in list_substrates()
+    finally:
+        _REGISTRY.pop("local2", None)
+
+
+def test_report_schema_roundtrip(bfs_problem):
+    _, report = run(BFSOp(), bfs_problem, MigratoryStrategy(), "local")
+    d = json.loads(report.to_json())
+    for key in (
+        "op", "substrate", "seconds", "us_per_call", "migrations",
+        "remote_writes", "traffic_bytes", "bytes_moved", "effective_gbps",
+        "strategy_comm", "strategy_replicate_x", "strategy_layout",
+        "strategy_scheme", "mteps", "rounds",
+    ):
+        assert key in d, key
+    assert d["op"] == "bfs"
+    assert d["strategy_comm"] == "remote_write"
+    assert isinstance(report, RunReport)
+
+
+def test_benchmark_rows_use_unified_schema(spmv_problem):
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.util import emit_report
+
+    _, inputs = spmv_problem
+    _, report = run(SpMVOp(), inputs, MigratoryStrategy(), "local")
+    row = emit_report("bench_x", "case_y", report, extra_key=1)
+    assert row["bench"] == "bench_x" and row["case"] == "case_y"
+    assert row["op"] == "spmv" and row["extra_key"] == 1
+    assert "effective_gbps" in row and "migrations" in row
+
+
+# -- local vs mesh parity (subprocess, 8 forced host devices) ------------------
+
+PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax.numpy as jnp
+from repro.core import Comm, MigratoryStrategy, Scheme, bucketize, \
+    generate_alignment_pair, partition_ell, pick_grid
+from repro.engine import (BFSInputs, BFSOp, GSANAInputs, GSANAOp, SpMVInputs,
+                          SpMVOp, run)
+from repro.sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, \
+    partition_graph
+
+a = laplacian_2d(16)
+x = jnp.asarray(np.random.default_rng(0).standard_normal(256).astype(np.float32))
+si = SpMVInputs(partition_ell(a, 8), x)
+g = edges_to_csr(erdos_renyi_edges(9, 8, seed=1), 512)
+bi = BFSInputs(partition_graph(g, 8), 3)
+vs1, vs2, pi = generate_alignment_pair(384, seed=11)
+grid = pick_grid(384, 32)
+cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+gi = GSANAInputs(vs1, vs2, bucketize(vs1, grid, cap=cap),
+                 bucketize(vs2, grid, cap=cap))
+
+# all four (replicate_x, comm) strategy combinations, all three ops
+for replicate in (True, False):
+    for comm in (Comm.MIGRATE, Comm.REMOTE_WRITE):
+        st = MigratoryStrategy(replicate_x=replicate, comm=comm)
+        yl, rl = run(SpMVOp(), si, st, "local")
+        ym, rm = run(SpMVOp(), si, st, "mesh")
+        assert np.array_equal(np.asarray(yl), np.asarray(ym)), ("spmv", replicate, comm)
+        assert rl.traffic.migrations == rm.traffic.migrations
+
+        pl, _ = run(BFSOp(), bi, st, "local")
+        pm, _ = run(BFSOp(), bi, st, "mesh")
+        assert np.array_equal(np.asarray(pl), np.asarray(pm)), ("bfs", replicate, comm)
+
+for scheme in (Scheme.ALL, Scheme.PAIR):
+    st = MigratoryStrategy(scheme=scheme)
+    (cl, sl), _ = run(GSANAOp(), gi, st, "local")
+    (cm, sm), _ = run(GSANAOp(), gi, st, "mesh")
+    assert np.array_equal(np.asarray(cl), np.asarray(cm)), ("gsana cand", scheme)
+    assert np.array_equal(np.asarray(sl), np.asarray(sm)), ("gsana score", scheme)
+print("ENGINE-PARITY-OK")
+"""
+
+
+@pytest.mark.slow
+def test_local_mesh_parity_subprocess():
+    """ISSUE acceptance: local and mesh substrates produce bit-identical
+    results for SpMV/BFS/GSANA across the strategy grid."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", PARITY_SCRIPT], env=env, capture_output=True,
+        text=True, timeout=900,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
+    assert "ENGINE-PARITY-OK" in r.stdout
