@@ -1,0 +1,103 @@
+"""Autotune sweeps: rank the strategy grid per op x scenario with the
+paper's traffic model, probe the leading cost-distinct candidates through
+the compiled-plan cache, then serve the winner (a cache hit by
+construction).
+
+Emits one RunReport row per autotuned scenario and writes the full ranking
+tables to ``experiments/autotune_ranking.json`` — the CI artifact that shows
+*why* each strategy won (traffic bytes, balance penalty, probe timings).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bucketize, generate_alignment_pair, partition_ell, pick_grid
+from repro.engine import (
+    BFSInputs,
+    GSANAInputs,
+    SpMVInputs,
+    autotune,
+    run as engine_run,
+)
+from repro.sparse import (
+    edges_to_csr,
+    erdos_renyi_edges,
+    laplacian_2d,
+    partition_graph,
+    rmat_edges,
+    skewed_matrix,
+)
+
+from .util import emit_report
+
+RANKING_PATH = Path(__file__).resolve().parents[1] / "experiments" / "autotune_ranking.json"
+
+
+def _spmv(n_grid: int):
+    a = laplacian_2d(n_grid)
+    n = n_grid * n_grid
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
+    return SpMVInputs(partition_ell(a, 8), x)
+
+
+def _spmv_skewed(n: int):
+    a = skewed_matrix(n, 8, min(96, n - 1), seed=1)
+    lens = np.diff(np.asarray(a.indptr))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
+    return SpMVInputs(partition_ell(a, 8, k=int(lens.max())), x)
+
+
+def _bfs(kind: str, scale: int):
+    n = 1 << scale
+    edges = (
+        erdos_renyi_edges(scale, 6, seed=7) if kind == "er" else rmat_edges(scale, 6, seed=7)
+    )
+    return BFSInputs(partition_graph(edges_to_csr(edges, n), 8), 0)
+
+
+def _gsana(n: int):
+    vs1, vs2, pi = generate_alignment_pair(n, seed=3)
+    grid = pick_grid(n, 32)
+    cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+    return GSANAInputs(
+        vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+        ground_truth=pi,
+    )
+
+
+def scenarios(full: bool = False, quick: bool = False):
+    """Two scenario shapes per op (the autotune acceptance grid)."""
+    if quick:
+        sizes = {"spmv": (12, 800), "bfs": (8, 8), "gsana": (192, 256)}
+    elif full:
+        sizes = {"spmv": (48, 8000), "bfs": (12, 12), "gsana": (1024, 2048)}
+    else:
+        sizes = {"spmv": (16, 1500), "bfs": (10, 10), "gsana": (256, 384)}
+    return [
+        ("spmv", f"laplacian_n={sizes['spmv'][0]}", _spmv(sizes["spmv"][0])),
+        ("spmv", f"skewed_n={sizes['spmv'][1]}", _spmv_skewed(sizes["spmv"][1])),
+        ("bfs", f"er_scale={sizes['bfs'][0]}", _bfs("er", sizes["bfs"][0])),
+        ("bfs", f"rmat_scale={sizes['bfs'][1]}", _bfs("rmat", sizes["bfs"][1])),
+        ("gsana", f"n={sizes['gsana'][0]}", _gsana(sizes["gsana"][0])),
+        ("gsana", f"n={sizes['gsana'][1]}", _gsana(sizes["gsana"][1])),
+    ]
+
+
+def run(full: bool = False, quick: bool = False):
+    rows = []
+    ranking_tables = []
+    for op, case, inputs in scenarios(full, quick):
+        tuned = autotune(op, inputs, "local", probe_top_k=2)
+        table = [{"case": case, **row} for row in tuned.table()]
+        ranking_tables.extend(table)
+        # the production run of the winner: a plan-cache hit by construction
+        _, rep = engine_run(op, inputs, tuned.best, "local")
+        rows.append(emit_report("autotune", f"{op}_{case}", rep, n_candidates=len(table)))
+    RANKING_PATH.parent.mkdir(parents=True, exist_ok=True)
+    RANKING_PATH.write_text(json.dumps(ranking_tables, indent=2, default=str))
+    print(f"# wrote {RANKING_PATH} ({len(ranking_tables)} ranking rows)")
+    return rows

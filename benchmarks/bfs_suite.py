@@ -38,7 +38,6 @@ def fig7_strategies(full: bool = False, quick: bool = False):
         for comm in (Comm.MIGRATE, Comm.REMOTE_WRITE):
             _, rep = engine_run(
                 BFSOp(), inputs, MigratoryStrategy(comm=comm), "local",
-                iters=3, warmup=1,
             )
             rows.append(emit_report(
                 "fig7_bfs_strategies", f"scale={scale}_{comm.value}", rep,
@@ -55,7 +54,7 @@ def fig8_balance(full: bool = False, quick: bool = False):
         deg = np.asarray(pg.deg)
         _, rep = engine_run(
             BFSOp(), BFSInputs(pg, 0), MigratoryStrategy(comm=Comm.REMOTE_WRITE),
-            "local", iters=3, warmup=1,
+            "local",
         )
         rows.append(emit_report(
             "fig8_bfs_balance", f"{kind}_scale={scale}", rep,
@@ -108,7 +107,7 @@ def fig9_compare(full: bool = False, quick: bool = False):
         pg = _graph("er", scale)
         _, rep = engine_run(
             BFSOp(), BFSInputs(pg, 0), MigratoryStrategy(comm=Comm.REMOTE_WRITE),
-            "local", iters=3, warmup=1,
+            "local",
         )
         rows.append(emit_report("fig9_bfs_compare", f"push_scale={scale}", rep))
         naive = _bfs_pull_naive(pg, 0)
@@ -121,5 +120,19 @@ def fig9_compare(full: bool = False, quick: bool = False):
     return rows
 
 
+def auto_strategy(full: bool = False, quick: bool = False):
+    """``strategy="auto"``: the autotuner's S2 pick (remote write, §5.2)."""
+    rows = []
+    scale = 10 if quick else (14 if full else 12)
+    for kind in ("er", "rmat"):
+        inputs = BFSInputs(_graph(kind, scale), 0)
+        _, rep = engine_run(BFSOp(), inputs, "auto", "local")
+        rows.append(emit_report("bfs_auto", f"{kind}_scale={scale}", rep))
+    return rows
+
+
 def run(full: bool = False, quick: bool = False):
-    return fig7_strategies(full, quick) + fig8_balance(full, quick) + fig9_compare(full, quick)
+    return (
+        fig7_strategies(full, quick) + fig8_balance(full, quick)
+        + fig9_compare(full, quick) + auto_strategy(full, quick)
+    )

@@ -34,7 +34,7 @@ def fig10_threads(full: bool = False, quick: bool = False):
     for layout in (Layout.BLK, Layout.HCB):
         for scheme in (Scheme.ALL, Scheme.PAIR):
             st = MigratoryStrategy(layout=layout, scheme=scheme)
-            _, rep = engine_run(GSANAOp(), inputs, st, "local", iters=3, warmup=1)
+            _, rep = engine_run(GSANAOp(), inputs, st, "local")
             rows.append(emit_report(
                 "fig10_gsana_threads",
                 f"{layout.value.upper()}-{scheme.value.upper()}_t=256", rep,
@@ -69,7 +69,7 @@ def fig11_layouts(full: bool = False, quick: bool = False):
         for layout in (Layout.BLK, Layout.HCB):
             for scheme in (Scheme.ALL, Scheme.PAIR):
                 st = MigratoryStrategy(layout=layout, scheme=scheme)
-                _, rep = engine_run(GSANAOp(), inputs, st, "local", iters=3, warmup=1)
+                _, rep = engine_run(GSANAOp(), inputs, st, "local")
                 rows.append(emit_report(
                     "fig11_gsana_layouts",
                     f"{layout.value.upper()}-{scheme.value.upper()}_n={n}", rep,
@@ -102,5 +102,18 @@ def fig12_scaling(full: bool = False, quick: bool = False):
     return rows
 
 
+def auto_strategy(full: bool = False, quick: bool = False):
+    """``strategy="auto"``: the autotuner's S3 pick (HCB placement, §5.3)."""
+    rows = []
+    for n in ((512,) if quick else (512, 1024)):
+        inputs = _problem(n)
+        _, rep = engine_run(GSANAOp(), inputs, "auto", "local")
+        rows.append(emit_report("gsana_auto", f"n={n}", rep))
+    return rows
+
+
 def run(full: bool = False, quick: bool = False):
-    return fig10_threads(full, quick) + fig11_layouts(full, quick) + fig12_scaling(full, quick)
+    return (
+        fig10_threads(full, quick) + fig11_layouts(full, quick)
+        + fig12_scaling(full, quick) + auto_strategy(full, quick)
+    )

@@ -1,18 +1,23 @@
 """Benchmark runner: one suite per paper table/figure + kernel micro-benches
-+ the beyond-paper MoE dispatch A/B.
++ the autotune strategy sweeps + the beyond-paper MoE dispatch A/B.
 
     PYTHONPATH=src python -m benchmarks.run [--bench NAME] [--full] [--quick]
 
 Every row follows the unified RunReport schema (op, strategy_*, substrate,
-seconds, effective_gbps, migrations, remote_writes, op metrics) so
-``bench_results.json`` trajectories are comparable across suites and PRs.
-Prints ``bench,case,us_per_call,derived...`` CSV rows and writes
-``experiments/bench_results.json``.
+seconds, cache_hit, compile_seconds, effective_gbps, migrations,
+remote_writes, op metrics) so ``bench_results.json`` trajectories are
+comparable across suites and PRs. Engine suites share the process-wide
+compiled-plan cache, so repeated problem signatures compile once; the final
+``_cache`` row records the run's hit-rate (``--require-cache-hits`` turns a
+zero hit-rate into a CI failure). Prints ``bench,case,us_per_call,derived``
+CSV rows and writes ``experiments/bench_results.json`` (+ the autotune
+ranking table to ``experiments/autotune_ranking.json``).
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 from pathlib import Path
 
 SUITES = {}
@@ -22,12 +27,20 @@ SLOW_SUITES = ("moe_dispatch",)
 
 
 def _register():
-    from . import bfs_suite, gsana_suite, kernels_suite, moe_dispatch, spmv_suite
+    from . import (
+        autotune_suite,
+        bfs_suite,
+        gsana_suite,
+        kernels_suite,
+        moe_dispatch,
+        spmv_suite,
+    )
 
     SUITES.update({
         "spmv": spmv_suite.run,
         "bfs": bfs_suite.run,
         "gsana": gsana_suite.run,
+        "autotune": autotune_suite.run,
         "kernels": kernels_suite.run,
         "moe_dispatch": moe_dispatch.run,
     })
@@ -40,6 +53,10 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--quick", action="store_true",
         help="CI smoke mode: smallest sizes, skip subprocess suites",
+    )
+    ap.add_argument(
+        "--require-cache-hits", action="store_true",
+        help="fail (exit 1) if the compiled-plan cache saw zero hits",
     )
     ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args(argv)
@@ -54,6 +71,17 @@ def main(argv=None) -> None:
     all_rows = []
     for name in names:
         all_rows.extend(SUITES[name](full=args.full, quick=args.quick))
+
+    from repro.engine import default_cache
+
+    cache_stats = default_cache().stats()
+    all_rows.append({"bench": "_cache", "case": "default_cache", **cache_stats})
+    print(
+        f"# plan cache: {cache_stats['entries']} entries, "
+        f"{cache_stats['hits']} hits / {cache_stats['misses']} misses "
+        f"(hit rate {cache_stats['hit_rate']:.0%}), "
+        f"{cache_stats['compile_seconds_total']:.2f}s compiling"
+    )
     out = (
         Path(args.out)
         if args.out
@@ -62,6 +90,9 @@ def main(argv=None) -> None:
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(all_rows, indent=2, default=str))
     print(f"# wrote {out} ({len(all_rows)} rows)")
+    if args.require_cache_hits and cache_stats["hits"] == 0:
+        print("# FAIL: compiled-plan cache saw zero hits", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

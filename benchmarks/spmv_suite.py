@@ -36,7 +36,7 @@ def fig4_grain(full: bool = False, quick: bool = False):
         inputs = _problem(n)
         for grain in grains:
             st = MigratoryStrategy(replicate_x=False, grain=grain)
-            _, rep = engine_run(SpMVOp(), inputs, st, "local", iters=5, warmup=2)
+            _, rep = engine_run(SpMVOp(), inputs, st, "local")
             rows.append(emit_report("fig4_spmv_grain", f"n={n}_grain={grain}", rep))
     return rows
 
@@ -49,7 +49,7 @@ def fig5_replication(full: bool = False, quick: bool = False):
         inputs = _problem(n)
         for grain in grains:
             st = MigratoryStrategy(replicate_x=True, grain=grain)
-            _, rep = engine_run(SpMVOp(), inputs, st, "local", iters=5, warmup=2)
+            _, rep = engine_run(SpMVOp(), inputs, st, "local")
             rows.append(emit_report("fig5_spmv_replication", f"n={n}_grain={grain}", rep))
     return rows
 
@@ -63,7 +63,7 @@ def fig6_scaling(full: bool = False, quick: bool = False):
         for threads in threads_sweep:
             grain = max(1, (inputs.a.rows_per_nodelet * p) // threads)
             st = MigratoryStrategy(replicate_x=True, grain=grain)
-            _, rep = engine_run(SpMVOp(), inputs, st, "local", iters=5, warmup=2)
+            _, rep = engine_run(SpMVOp(), inputs, st, "local")
             rows.append(emit_report(
                 "fig6_spmv_scaling", f"{label}_threads={threads}", rep,
             ))
@@ -83,7 +83,7 @@ def table3_realworld(full: bool = False, quick: bool = False):
         x = jnp.asarray(np.random.default_rng(0).standard_normal(n_eff).astype(np.float32))
         inputs = SpMVInputs(partition_ell(a, 8, k=kmax), x)
         st = MigratoryStrategy(replicate_x=True, grain=None)
-        _, rep = engine_run(SpMVOp(), inputs, st, "local", iters=3, warmup=1)
+        _, rep = engine_run(SpMVOp(), inputs, st, "local")
         rows.append(emit_report(
             "table3_spmv_realworld", name, rep,
             avg_deg=round(float(lens.mean()), 2), max_deg=kmax,
@@ -91,10 +91,22 @@ def table3_realworld(full: bool = False, quick: bool = False):
         if kmax > 500:  # hub mitigation: split long rows (paper future work)
             s, owner = split_long_rows(a, k=64)
             inputs2 = SpMVInputs(partition_ell(s, 8, k=64), x)
-            _, rep2 = engine_run(SpMVOp(), inputs2, st, "local", iters=3, warmup=1)
+            _, rep2 = engine_run(SpMVOp(), inputs2, st, "local")
             rows.append(emit_report(
                 "table3_spmv_realworld", f"{name}+rowsplit", rep2, max_deg=64,
             ))
+    return rows
+
+
+def auto_strategy(full: bool = False, quick: bool = False):
+    """``strategy="auto"``: the traffic-model autotuner's pick, end to end
+    through the engine (the sweep analogue of paper §5.1's conclusion)."""
+    rows = []
+    grids = (GRID_SMALL[0],) if quick else GRID_SMALL[:2]
+    for n in grids:
+        inputs = _problem(n)
+        _, rep = engine_run(SpMVOp(), inputs, "auto", "local")
+        rows.append(emit_report("spmv_auto", f"n={n}", rep))
     return rows
 
 
@@ -102,4 +114,5 @@ def run(full: bool = False, quick: bool = False):
     return (
         fig4_grain(full, quick) + fig5_replication(full, quick)
         + fig6_scaling(full, quick) + table3_realworld(full, quick)
+        + auto_strategy(full, quick)
     )

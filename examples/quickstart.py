@@ -53,3 +53,20 @@ _, hcb = run(GSANAOp(), gi, MigratoryStrategy(layout=Layout.HCB, scheme=Scheme.P
 print(f"S3 GSANA: recall@4={blk.metrics['recall_at_k']:.3f}; migrations "
       f"BLK={blk.traffic.migrations} -> HCB={hcb.traffic.migrations} "
       f"({100 * (1 - hcb.traffic.migrations / blk.traffic.migrations):.0f}% fewer)")
+
+# --- "auto": let the traffic model pick, serve repeats from the plan cache --
+y_auto, auto = run(SpMVOp(), inputs, "auto")  # autotuner: replicate_x wins
+_, again = run(SpMVOp(), inputs, "auto")      # same plan key -> cache hit
+print(f"auto SpMV: strategy={auto.strategy} | compile={auto.compile_seconds*1e3:.0f}ms "
+      f"then cache_hit={again.cache_hit} at {again.seconds*1e6:.0f}us/call")
+
+# --- batched serving: one compile amortized over a request stream ----------
+from repro.engine import EngineService
+
+svc = EngineService(autotune=True)
+for _ in range(8):
+    svc.submit(SpMVOp(), inputs)
+responses = svc.drain()
+stats = svc.stats()
+print(f"EngineService: {stats.requests} requests, {stats.compiles} compile(s), "
+      f"amortization {stats.amortization:.1f} req/compile")

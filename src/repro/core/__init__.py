@@ -9,7 +9,9 @@ from .strategies import (
     MigratoryStrategy,
     Scheme,
     TrafficStats,
+    strategy_grid,
 )
+from .cost import CostEstimate, cost_model_for
 from .util import ceil_div, round_up
 from .spmv import (
     PartitionedELL,

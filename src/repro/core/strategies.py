@@ -49,6 +49,29 @@ class MigratoryStrategy:
             return self.grain
         return max(1, n_rows // target_tasks)
 
+    def cache_key(self) -> tuple:
+        """Hashable identity of the strategy — part of the compiled-plan
+        cache key (engine/cache.py): two runs share an executor only if every
+        strategy axis matches."""
+        return (self.comm.value, self.replicate_x, self.layout.value,
+                self.scheme.value, self.grain)
+
+
+def strategy_grid(
+    comms: tuple[Comm, ...] = (Comm.MIGRATE, Comm.REMOTE_WRITE),
+    replicates: tuple[bool, ...] = (True, False),
+    layouts: tuple[Layout, ...] = (Layout.BLK, Layout.HCB),
+    schemes: tuple[Scheme, ...] = (Scheme.ALL, Scheme.PAIR),
+    grains: tuple[int | None, ...] = (None,),
+) -> list[MigratoryStrategy]:
+    """The full S1 x S2 x S3 x grain candidate cross product, in a
+    deterministic order (the autotuner's search space)."""
+    return [
+        MigratoryStrategy(comm=c, replicate_x=r, layout=l, scheme=s, grain=g)
+        for c in comms for r in replicates for l in layouts for s in schemes
+        for g in grains
+    ]
+
 
 # -- traffic model ------------------------------------------------------------
 # The Emu cost model used by benchmarks to report the paper's metrics on

@@ -1,21 +1,36 @@
 """Unified MigratoryOp engine: one substrate-dispatched entry point for the
 paper's three irregular algorithms, with built-in traffic & bandwidth
-accounting (DESIGN.md §1).
+accounting and an explicit plan -> compile -> execute pipeline
+(DESIGN.md §1).
 
     from repro.engine import run, SpMVOp, SpMVInputs
     y, report = run(SpMVOp(), SpMVInputs(a, x), strategy, substrate="mesh")
-    print(report.to_json())
+    y, report = run("spmv", SpMVInputs(a, x), "auto")   # autotuned strategy
+    print(report.to_json())   # seconds + traffic + cache_hit/compile_seconds
 
-Ops implement :class:`MigratoryOp`; backends implement
-:class:`Substrate` and register with :func:`register_substrate`.
+Ops implement :class:`MigratoryOp`; backends implement :class:`Substrate`
+and register with :func:`register_substrate`. Compiled executors are cached
+per shape/strategy/substrate signature (:mod:`repro.engine.cache`); the
+strategy grid is ranked analytically (:mod:`repro.engine.autotune`); batched
+serving goes through :class:`EngineService` (:mod:`repro.engine.service`).
 """
 from .api import (
     ExecutionPlan,
     MigratoryOp,
     OpNotSupportedError,
     RunReport,
+    args_signature,
+    plan_key,
     strategy_dict,
 )
+from .autotune import (
+    AutotuneResult,
+    autotune,
+    candidate_grid,
+    choose_strategy,
+    rank_strategies,
+)
+from .cache import CompiledPlan, PlanCache, default_cache
 from .ops import (
     OPS,
     BFSInputs,
@@ -25,7 +40,16 @@ from .ops import (
     SpMVInputs,
     SpMVOp,
 )
-from .runner import execute, resolve_op, run
+from .runner import (
+    build_plan,
+    compile_plan,
+    execute,
+    resolve_op,
+    resolve_strategy,
+    run,
+    run_plan,
+)
+from .service import EngineService, ServiceResponse, ServiceStats
 from .substrate import (
     LocalSubstrate,
     MeshSubstrate,
@@ -38,10 +62,14 @@ from .substrate import (
 )
 
 __all__ = [
-    "BFSInputs", "BFSOp", "ExecutionPlan", "GSANAInputs", "GSANAOp",
-    "LocalSubstrate", "MeshSubstrate", "MigratoryOp", "OPS",
-    "OpNotSupportedError", "PallasSubstrate", "RunReport", "SpMVInputs",
-    "SpMVOp", "Substrate", "execute", "get_substrate", "list_substrates",
-    "register_substrate", "resolve_op", "run", "strategy_dict",
+    "AutotuneResult", "BFSInputs", "BFSOp", "CompiledPlan", "EngineService",
+    "ExecutionPlan", "GSANAInputs", "GSANAOp", "LocalSubstrate",
+    "MeshSubstrate", "MigratoryOp", "OPS", "OpNotSupportedError",
+    "PallasSubstrate", "PlanCache", "RunReport", "ServiceResponse",
+    "ServiceStats", "SpMVInputs", "SpMVOp", "Substrate", "args_signature",
+    "autotune", "build_plan", "candidate_grid", "choose_strategy",
+    "compile_plan", "default_cache", "execute", "get_substrate",
+    "list_substrates", "plan_key", "rank_strategies", "register_substrate",
+    "resolve_op", "resolve_strategy", "run", "run_plan", "strategy_dict",
     "substrate_for_mesh",
 ]

@@ -5,15 +5,18 @@ The paper's thesis is that one set of strategies (S1 replication, S2
 migrate-vs-remote-write, S3 layout) applies uniformly to SpMV, BFS, and
 graph alignment. The engine makes that uniformity structural: every
 distributed op is a :class:`MigratoryOp` planned onto a
-:class:`~repro.engine.substrate.Substrate`, and every run yields one
+:class:`~repro.engine.substrate.Substrate`, compiled once per
+shape/strategy/substrate signature (DESIGN.md §1b), and every run yields one
 serializable :class:`RunReport` combining wall time, the paper's traffic
-model, and effective bandwidth.
+model, effective bandwidth, and compile-vs-steady-state accounting.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 from typing import Any, Callable, Protocol, runtime_checkable
+
+import jax
 
 from ..core.strategies import MigratoryStrategy, TrafficStats
 
@@ -33,21 +36,65 @@ def strategy_dict(strategy: MigratoryStrategy) -> dict[str, Any]:
     }
 
 
+def args_signature(args: Any) -> tuple:
+    """Shape/dtype (never value) signature of a plan's argument pytree.
+
+    Two argument sets with equal signatures can share a compiled executor:
+    array leaves contribute ``(shape, dtype)``, non-array leaves their repr
+    (they are compile-time constants), and the treedef pins the container
+    structure (including pytree aux data such as matrix shapes and bucket
+    grids).
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(args)
+    sig = tuple(
+        (tuple(leaf.shape), str(leaf.dtype))
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype")
+        else ("pyleaf", repr(leaf))
+        for leaf in leaves
+    )
+    return (str(treedef), sig)
+
+
+def plan_key(
+    op: str, substrate, strategy: MigratoryStrategy, args: Any,
+    static: tuple = (),
+) -> tuple:
+    """The compiled-plan cache key: op name x substrate fingerprint x full
+    strategy x static scalars x argument shape/dtype signature."""
+    return (
+        op,
+        substrate.cache_fingerprint(),
+        strategy.cache_key(),
+        static,
+        args_signature(args),
+    )
+
+
 @dataclasses.dataclass
 class ExecutionPlan:
-    """A strategy + substrate bound to concrete inputs, ready to execute.
+    """A strategy + substrate bound to concrete inputs, ready to compile.
 
-    ``run`` is a zero-arg executor returning the op's result; ``meta`` holds
-    static facts about the inputs (sizes, nnz, ...) plus anything the op
-    caches between :meth:`MigratoryOp.traffic` and metric computation.
+    ``executor`` is a pure function of ``args`` (the array pytrees) — it
+    closes only over compile-time statics (strategy, substrate, scalar
+    parameters), all of which are pinned by ``key``, so the plan cache may
+    hand the same executor to any later plan with an equal ``key``.
+    ``meta`` holds static facts about the inputs (sizes, nnz, ...) plus
+    anything the op caches between :meth:`MigratoryOp.traffic` and metric
+    computation. ``key=None`` marks a plan as uncacheable.
     """
 
     op: str
     strategy: MigratoryStrategy
     substrate: str
     inputs: Any
-    run: Callable[[], Any]
+    executor: Callable[..., Any]
+    args: tuple = ()
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+    key: tuple | None = None
+
+    def run(self) -> Any:
+        """Execute this plan's own executor on its own arguments."""
+        return self.executor(*self.args)
 
 
 @runtime_checkable
@@ -72,7 +119,8 @@ class MigratoryOp(Protocol):
 @dataclasses.dataclass
 class RunReport:
     """One run, one record: unifies wall time, TrafficStats, the per-op stats
-    (BFS rounds / GSANA plan model), and effective bandwidth."""
+    (BFS rounds / GSANA plan model), effective bandwidth, and the plan
+    cache's compile accounting (``cache_hit``, ``compile_seconds``)."""
 
     op: str
     strategy: dict[str, Any]
@@ -81,24 +129,39 @@ class RunReport:
     traffic: TrafficStats
     bytes_moved: int
     effective_gbps: float
+    cache_hit: bool = False
+    compile_seconds: float = 0.0
     metrics: dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict[str, Any]:
-        """Flat, JSON-ready form — the unified benchmark row schema."""
-        return {
+        """Flat, JSON-ready form — the unified benchmark row schema.
+
+        Op metrics may not shadow schema columns (an op metric named e.g.
+        ``seconds`` would silently corrupt benchmark trajectories).
+        """
+        row = {
             "op": self.op,
             **{f"strategy_{k}": v for k, v in self.strategy.items()},
             "substrate": self.substrate,
             "seconds": self.seconds,
             "us_per_call": self.seconds * 1e6,
+            "cache_hit": self.cache_hit,
+            "compile_seconds": self.compile_seconds,
             "migrations": self.traffic.migrations,
             "remote_writes": self.traffic.remote_writes,
             "collective_bytes": self.traffic.collective_bytes,
             "traffic_bytes": self.traffic.total_bytes,
             "bytes_moved": self.bytes_moved,
             "effective_gbps": self.effective_gbps,
-            **self.metrics,
         }
+        clash = sorted(set(row) & set(self.metrics))
+        if clash:
+            raise ValueError(
+                f"op metrics {clash} collide with RunReport schema columns; "
+                "rename the op metric"
+            )
+        row.update(self.metrics)
+        return row
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict(), default=str)
@@ -113,6 +176,8 @@ class RunReport:
         traffic: TrafficStats,
         bytes_moved: int,
         metrics: dict[str, Any] | None = None,
+        cache_hit: bool = False,
+        compile_seconds: float = 0.0,
     ) -> "RunReport":
         return cls(
             op=op,
@@ -122,5 +187,7 @@ class RunReport:
             traffic=traffic,
             bytes_moved=bytes_moved,
             effective_gbps=bytes_moved / max(seconds, 1e-12) / 1e9,
+            cache_hit=cache_hit,
+            compile_seconds=compile_seconds,
             metrics=metrics or {},
         )

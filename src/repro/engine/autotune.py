@@ -1,0 +1,149 @@
+"""Strategy autotuner: rank the S1 x S2 x S3 x grain grid with the paper's
+traffic model, optionally confirm the top-k with measured probes.
+
+The paper's central claim is that picking the *right* strategy is what makes
+irregular algorithms fast on migratory hardware — and the right choice is
+workload-dependent (Rolinger & Krieger, 1812.05955). The autotuner makes
+that choice a systematized engine feature instead of a caller obligation:
+
+    strategy = choose_strategy("spmv", inputs)          # analytic, no execution
+    result, report = engine.run("spmv", inputs, "auto") # same thing, inline
+
+    tuned = autotune("bfs", inputs, probe_top_k=3)      # + measured probes
+    best = tuned.best                                    # probes warm the plan
+    rows = tuned.table()                                 # cache for the real run
+
+Ranking is purely analytic (core/cost.py): primary key is the modeled
+traffic in bytes — identical to what a measured sweep's RunReports would
+carry — tie-broken by the per-op balance model. ``probe_top_k`` executes
+the leading candidates through the compiled-plan cache, so the eventual
+production run of the winner is a cache hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from ..core.cost import CostEstimate, cost_model_for
+from ..core.strategies import MigratoryStrategy, strategy_grid
+from .api import RunReport, strategy_dict
+from .cache import PlanCache
+from .runner import resolve_op, run
+from .substrate import Substrate
+
+# grain values worth distinguishing for row-grained ops (None = dynamic)
+GRAIN_CANDIDATES = (None, 16, 64, 256)
+
+
+def candidate_grid(op_name: str) -> list[MigratoryStrategy]:
+    """The autotuner's search space for one op: the full strategy cross
+    product, with the grain axis populated only where grain matters."""
+    grains = GRAIN_CANDIDATES if op_name == "spmv" else (None,)
+    return strategy_grid(grains=grains)
+
+
+@dataclasses.dataclass
+class RankedCandidate:
+    """One grid point: its analytic estimate + optional measured probe."""
+
+    rank: int
+    estimate: CostEstimate
+    probe: RunReport | None = None
+
+    def to_row(self) -> dict[str, Any]:
+        row = {
+            "rank": self.rank,
+            **{f"strategy_{k}": v for k, v in strategy_dict(self.estimate.strategy).items()},
+            "traffic_bytes": self.estimate.traffic_bytes,
+            "balance_penalty": self.estimate.balance_penalty,
+            **self.estimate.detail,
+        }
+        if self.probe is not None:
+            row["probe_seconds"] = self.probe.seconds
+            row["probe_compile_seconds"] = self.probe.compile_seconds
+            row["probe_cache_hit"] = self.probe.cache_hit
+        return row
+
+
+@dataclasses.dataclass
+class AutotuneResult:
+    op: str
+    substrate: str
+    best: MigratoryStrategy
+    candidates: list[RankedCandidate]
+
+    def table(self) -> list[dict[str, Any]]:
+        """The ranking table (JSON rows) — the CI artifact."""
+        return [
+            {"op": self.op, "substrate": self.substrate,
+             "chosen": c.estimate.strategy == self.best, **c.to_row()}
+            for c in self.candidates
+        ]
+
+
+def rank_strategies(
+    op, inputs, candidates: list[MigratoryStrategy] | None = None
+) -> list[CostEstimate]:
+    """Analytically rank candidate strategies for ``op`` on ``inputs``
+    (best first). No execution, no compilation — shapes and static
+    structure only."""
+    op = resolve_op(op)
+    model = cost_model_for(op.name, inputs)
+    cands = candidates if candidates is not None else candidate_grid(op.name)
+    return sorted((model(st) for st in cands), key=lambda e: e.rank_key())
+
+
+def choose_strategy(op, inputs) -> MigratoryStrategy:
+    """The traffic-model-optimal strategy — what ``strategy="auto"`` runs."""
+    return rank_strategies(op, inputs)[0].strategy
+
+
+def autotune(
+    op,
+    inputs,
+    substrate: "Substrate | str" = "local",
+    *,
+    probe_top_k: int = 0,
+    iters: int = 3,
+    warmup: int = 1,
+    cache: PlanCache | None = None,
+    override_margin: float = 0.2,
+) -> AutotuneResult:
+    """Rank the grid; optionally execute the top ``probe_top_k`` candidates
+    through the plan cache and let measured seconds pick among them.
+
+    A probe overrides the traffic-model pick only when it is decisively
+    faster (by ``override_margin``): on substrates where a strategy axis is
+    execution-inert (e.g. S2 on the single-device local oracle) probe
+    timings are pure noise, and the model's choice stands. Probes compile
+    each probed candidate's plan, so the subsequent production run of
+    ``result.best`` is a cache hit.
+    """
+    op = resolve_op(op)
+    estimates = rank_strategies(op, inputs)
+    candidates = [RankedCandidate(rank=i + 1, estimate=e) for i, e in enumerate(estimates)]
+    best = candidates[0].estimate.strategy
+    if probe_top_k > 0:
+        # probe only cost-distinct candidates: grid points whose estimates tie
+        # exactly differ in axes the op never reads, so one probe covers them
+        probed: list[RankedCandidate] = []
+        seen_costs: set[tuple] = set()
+        for cand in candidates:
+            cost_sig = (cand.estimate.traffic_bytes, cand.estimate.balance_penalty)
+            if cost_sig in seen_costs:
+                continue
+            seen_costs.add(cost_sig)
+            _, report = run(
+                op, inputs, cand.estimate.strategy, substrate,
+                iters=iters, warmup=warmup, cache=cache,
+            )
+            cand.probe = report
+            probed.append(cand)
+            if len(probed) >= probe_top_k:
+                break
+        fastest = min(probed, key=lambda c: c.probe.seconds)
+        model_pick = probed[0]  # rank 1 is always probed first
+        if fastest.probe.seconds < model_pick.probe.seconds * (1.0 - override_margin):
+            best = fastest.estimate.strategy
+    sub_name = substrate.name if isinstance(substrate, Substrate) else substrate
+    return AutotuneResult(op=op.name, substrate=sub_name, best=best, candidates=candidates)

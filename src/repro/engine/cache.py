@@ -1,0 +1,124 @@
+"""Compiled-plan cache: jit an executor once per plan key, reuse it for every
+later plan with the same shape/dtype/strategy/substrate signature
+(DESIGN.md §1b).
+
+The engine's plan -> compile -> execute pipeline looks executors up here.
+A *miss* hands back the plan's own executor and marks the entry pending; the
+runner times the executor's first call (trace + compile + first run on this
+signature) and records it via :meth:`PlanCache.note_compiled`. A *hit* hands
+back the already-warm executor, so the call skips tracing entirely and the
+run's ``RunReport`` carries ``cache_hit=True, compile_seconds=0.0`` —
+benchmarks and the :class:`~repro.engine.service.EngineService` use this to
+separate compile cost from steady-state throughput.
+
+Caching an executor closure is sound because :func:`~repro.engine.api.plan_key`
+pins everything the closure captures: the op, the substrate fingerprint
+(mesh identity / interpret flag included), every strategy axis, the op's
+static scalars, and the argument pytree signature. Only array *values* vary
+across reuses — exactly what the executors are polymorphic over.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable
+
+from .api import ExecutionPlan
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One cached executor + its compile accounting."""
+
+    executor: Callable[..., Any]
+    compiled: bool = False  # first call completed (jax traced + compiled)
+    compile_seconds: float = 0.0
+    hits: int = 0
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """A plan resolved through the cache, ready to execute.
+
+    ``cache_hit`` is True iff an executor that already completed its first
+    (compiling) call was reused — the run will be pure steady state.
+    """
+
+    plan: ExecutionPlan
+    executor: Callable[..., Any]
+    cache_hit: bool
+    entry: CacheEntry | None
+
+    def __call__(self) -> Any:
+        return self.executor(*self.plan.args)
+
+
+class PlanCache:
+    """LRU cache of compiled executors keyed by ``ExecutionPlan.key``."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._entries: collections.OrderedDict[tuple, CacheEntry] = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.uncacheable = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __bool__(self) -> bool:
+        return True  # an empty cache is still a cache, not a None stand-in
+
+    def get(self, plan: ExecutionPlan) -> CompiledPlan:
+        """Resolve a plan's executor. Keyless plans bypass the cache."""
+        if plan.key is None:
+            self.uncacheable += 1
+            return CompiledPlan(plan, plan.executor, cache_hit=False, entry=None)
+        entry = self._entries.get(plan.key)
+        if entry is not None:
+            self._entries.move_to_end(plan.key)
+            if entry.compiled:
+                entry.hits += 1
+                self.hits += 1
+                return CompiledPlan(plan, entry.executor, cache_hit=True, entry=entry)
+            # entry exists but its first call never ran: still a cold path
+            self.misses += 1
+            return CompiledPlan(plan, entry.executor, cache_hit=False, entry=entry)
+        entry = CacheEntry(executor=plan.executor)
+        self._entries[plan.key] = entry
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+        self.misses += 1
+        return CompiledPlan(plan, entry.executor, cache_hit=False, entry=entry)
+
+    def note_compiled(self, compiled: CompiledPlan, seconds: float) -> None:
+        """Record the timed first call of a miss (trace + compile + run)."""
+        if compiled.entry is not None and not compiled.entry.compiled:
+            compiled.entry.compiled = True
+            compiled.entry.compile_seconds = seconds
+
+    def stats(self) -> dict[str, Any]:
+        """Aggregate counters — the benchmark/CI cache health record."""
+        lookups = self.hits + self.misses
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "uncacheable": self.uncacheable,
+            "hit_rate": self.hits / lookups if lookups else 0.0,
+            "compile_seconds_total": sum(
+                e.compile_seconds for e in self._entries.values()
+            ),
+        }
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = self.misses = self.uncacheable = 0
+
+
+_DEFAULT_CACHE = PlanCache()
+
+
+def default_cache() -> PlanCache:
+    """The process-wide cache ``engine.run`` uses when none is passed."""
+    return _DEFAULT_CACHE

@@ -30,7 +30,7 @@ from ..core.spmv import (
 )
 from ..core.strategies import Layout, MigratoryStrategy, TrafficStats
 from ..sparse.graph import PartitionedGraph
-from .api import ExecutionPlan
+from .api import ExecutionPlan, plan_key
 from .substrate import Substrate
 
 
@@ -51,13 +51,16 @@ class SpMVOp:
 
     def plan(self, inputs: SpMVInputs, strategy: MigratoryStrategy, substrate: Substrate):
         x = inputs.x if strategy.replicate_x else stripe_vector(inputs.x, inputs.a.P)
+        args = (inputs.a, x)
         return ExecutionPlan(
             op=self.name,
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
-            run=lambda: substrate.spmv(inputs.a, x, strategy),
+            executor=lambda a, xv: substrate.spmv(a, xv, strategy),
+            args=args,
             meta={"n_cols": inputs.a.shape[1], "n_rows": inputs.a.shape[0]},
+            key=plan_key(self.name, substrate, strategy, args),
         )
 
     def traffic(self, plan: ExecutionPlan) -> TrafficStats:
@@ -87,12 +90,18 @@ class BFSOp:
     name = "bfs"
 
     def plan(self, inputs: BFSInputs, strategy: MigratoryStrategy, substrate: Substrate):
+        args = (inputs.g,)
         return ExecutionPlan(
             op=self.name,
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
-            run=lambda: substrate.bfs(inputs.g, inputs.root, strategy, inputs.max_rounds),
+            executor=lambda g: substrate.bfs(g, inputs.root, strategy, inputs.max_rounds),
+            args=args,
+            key=plan_key(
+                self.name, substrate, strategy, args,
+                static=(inputs.root, inputs.max_rounds),
+            ),
         )
 
     def _stats(self, plan: ExecutionPlan):
@@ -140,13 +149,18 @@ class GSANAOp:
     name = "gsana"
 
     def plan(self, inputs: GSANAInputs, strategy: MigratoryStrategy, substrate: Substrate):
+        args = (inputs.vs1, inputs.vs2, inputs.b1, inputs.b2)
         return ExecutionPlan(
             op=self.name,
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
-            run=lambda: substrate.gsana(
-                inputs.vs1, inputs.vs2, inputs.b1, inputs.b2, inputs.k, strategy
+            executor=lambda vs1, vs2, b1, b2: substrate.gsana(
+                vs1, vs2, b1, b2, inputs.k, strategy
+            ),
+            args=args,
+            key=plan_key(
+                self.name, substrate, strategy, args, static=(inputs.k,),
             ),
         )
 

@@ -1,11 +1,17 @@
-"""The single entry point: ``engine.run(op, inputs, strategy, substrate)``.
+"""The engine's plan -> compile -> execute pipeline behind ``engine.run``.
 
     result, report = run(SpMVOp(), SpMVInputs(a, x), strategy, substrate="mesh")
 
-One call plans the op onto a substrate, executes (optionally warmed and
-repeated for stable timing), and returns the result together with a
-:class:`~repro.engine.api.RunReport` unifying wall time, the paper's traffic
-model, and effective bandwidth.
+The stages are individually exposed (DESIGN.md §1):
+
+- :func:`build_plan`  — bind op + inputs + strategy to a substrate executor
+  (``strategy="auto"`` routes through the traffic-model autotuner).
+- :func:`compile_plan` — resolve the executor through a
+  :class:`~repro.engine.cache.PlanCache`; a hit reuses the jitted executor.
+- :func:`execute` / :func:`run` — timed execution. Defaults
+  (``iters=3, warmup=1``) report *steady-state* medians with compile cost
+  split into ``RunReport.compile_seconds``; pass ``iters=1, warmup=0`` to
+  time a single cold call (compile included in ``seconds`` on a cache miss).
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ import jax
 
 from ..core.strategies import MigratoryStrategy
 from .api import ExecutionPlan, MigratoryOp, RunReport
+from .cache import CompiledPlan, PlanCache, default_cache
 from .ops import OPS
 from .substrate import Substrate, get_substrate
 
@@ -29,50 +36,133 @@ def resolve_op(op: "MigratoryOp | str") -> MigratoryOp:
     return op
 
 
-def execute(plan: ExecutionPlan, *, iters: int = 1, warmup: int = 0):
-    """Run a plan, returning (result, median wall seconds). With the default
-    ``iters=1, warmup=0`` the single timed call includes compilation."""
-    for _ in range(warmup):
-        jax.block_until_ready(plan.run())
-    times = []
+def resolve_strategy(
+    op: MigratoryOp, inputs: Any, strategy: "MigratoryStrategy | str | None"
+) -> MigratoryStrategy:
+    """None -> paper defaults; ``"auto"`` -> traffic-model autotuner pick."""
+    if strategy is None:
+        return MigratoryStrategy()
+    if isinstance(strategy, str):
+        if strategy != "auto":
+            raise ValueError(f"unknown strategy {strategy!r}; expected 'auto'")
+        from .autotune import choose_strategy
+
+        return choose_strategy(op, inputs)
+    return strategy
+
+
+def build_plan(
+    op: "MigratoryOp | str",
+    inputs: Any,
+    strategy: "MigratoryStrategy | str | None" = None,
+    substrate: "Substrate | str" = "local",
+) -> ExecutionPlan:
+    """Stage 1: plan. Resolve op/strategy/substrate and bind the inputs."""
+    op = resolve_op(op)
+    sub = get_substrate(substrate)
+    return op.plan(inputs, resolve_strategy(op, inputs, strategy), sub)
+
+
+def compile_plan(plan: ExecutionPlan, cache: PlanCache | None = None) -> CompiledPlan:
+    """Stage 2: compile. Resolve the plan's executor through the cache."""
+    return (default_cache() if cache is None else cache).get(plan)
+
+
+def _timed_call(compiled: CompiledPlan, times: list[float]) -> Any:
+    t0 = time.perf_counter()
+    result = jax.block_until_ready(compiled())
+    times.append(time.perf_counter() - t0)
+    return result
+
+
+def execute(
+    compiled: "CompiledPlan | ExecutionPlan",
+    *,
+    iters: int = 3,
+    warmup: int = 1,
+    cache: PlanCache | None = None,
+) -> tuple[Any, float, float]:
+    """Stage 3: execute. Returns ``(result, seconds, compile_seconds)``.
+
+    ``seconds`` is the median of ``iters`` timed calls after ``warmup``
+    unmeasured ones. On a cache miss the first call traces + compiles; it is
+    recorded as ``compile_seconds`` and doubles as the first warmup call —
+    or, with ``warmup=0``, lands inside the timed set so a single cold call
+    is timed compile-inclusive (the pre-cache engine's behavior).
+    """
+    if isinstance(compiled, ExecutionPlan):
+        compiled = compile_plan(compiled, cache)
+    timed: list[float] = []
+    compile_seconds = 0.0
     result = None
-    for _ in range(max(1, iters)):
-        t0 = time.perf_counter()
-        result = jax.block_until_ready(plan.run())
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return result, times[len(times) // 2]
+    n_warm = warmup
+    if not compiled.cache_hit:
+        first: list[float] = []
+        result = _timed_call(compiled, first)
+        compile_seconds = first[0]
+        (default_cache() if cache is None else cache).note_compiled(compiled, compile_seconds)
+        if warmup > 0:
+            n_warm = warmup - 1  # the compiling call was the first warmup
+        else:
+            timed.append(compile_seconds)  # cold-timing mode
+    for _ in range(n_warm):
+        result = _timed_call(compiled, [])
+    for _ in range(max(1, iters) - len(timed)):
+        result = _timed_call(compiled, timed)
+    timed.sort()
+    return result, timed[len(timed) // 2], compile_seconds
+
+
+def run_plan(
+    plan: ExecutionPlan,
+    op: MigratoryOp,
+    *,
+    iters: int = 3,
+    warmup: int = 1,
+    cache: PlanCache | None = None,
+) -> tuple[Any, RunReport]:
+    """Compile + execute an already-built plan and assemble its RunReport."""
+    compiled = compile_plan(plan, cache)
+    result, seconds, compile_seconds = execute(
+        compiled, iters=iters, warmup=warmup, cache=cache
+    )
+    report = RunReport.from_parts(
+        op=op.name,
+        strategy=plan.strategy,
+        substrate=plan.substrate,
+        seconds=seconds,
+        traffic=op.traffic(plan),
+        bytes_moved=op.bytes_moved(plan),
+        metrics=op.metrics(plan, result, seconds),
+        cache_hit=compiled.cache_hit,
+        compile_seconds=compile_seconds,
+    )
+    return result, report
 
 
 def run(
     op: "MigratoryOp | str",
     inputs: Any,
-    strategy: MigratoryStrategy | None = None,
+    strategy: "MigratoryStrategy | str | None" = None,
     substrate: "Substrate | str" = "local",
     *,
-    iters: int = 1,
-    warmup: int = 0,
+    iters: int = 3,
+    warmup: int = 1,
+    cache: PlanCache | None = None,
 ) -> tuple[Any, RunReport]:
     """Execute ``op`` on ``substrate`` under ``strategy``; return
     ``(result, RunReport)``.
 
     ``op``: a MigratoryOp instance or name ("spmv" | "bfs" | "gsana").
+    ``strategy``: a MigratoryStrategy, ``None`` (paper defaults), or
+    ``"auto"`` (traffic-model autotuner, engine/autotune.py).
     ``substrate``: a Substrate instance or name ("local" | "mesh" | "pallas").
-    ``iters``/``warmup``: benchmark-style timing (median of ``iters`` after
-    ``warmup`` unmeasured calls); the defaults time a single cold call.
+    ``iters``/``warmup``: the defaults time steady state (median of 3 after
+    1 warmup) with compile split out; ``iters=1, warmup=0`` times one cold
+    call, compile included on a cache miss.
+    ``cache``: plan cache override (default: the process-wide cache).
     """
     op = resolve_op(op)
     sub = get_substrate(substrate)
-    strategy = strategy or MigratoryStrategy()
-    plan = op.plan(inputs, strategy, sub)
-    result, seconds = execute(plan, iters=iters, warmup=warmup)
-    report = RunReport.from_parts(
-        op=op.name,
-        strategy=strategy,
-        substrate=sub.name,
-        seconds=seconds,
-        traffic=op.traffic(plan),
-        bytes_moved=op.bytes_moved(plan),
-        metrics=op.metrics(plan, result, seconds),
-    )
-    return result, report
+    plan = op.plan(inputs, resolve_strategy(op, inputs, strategy), sub)
+    return run_plan(plan, op, iters=iters, warmup=warmup, cache=cache)

@@ -34,6 +34,11 @@ class Substrate:
     def supports(self, op_name: str) -> bool:
         return getattr(type(self), op_name, None) is not getattr(Substrate, op_name)
 
+    def cache_fingerprint(self) -> tuple:
+        """Hashable identity for the compiled-plan cache: two substrate
+        instances with equal fingerprints are interchangeable executors."""
+        return (self.name,)
+
     # -- op entry points (algorithm code lives in repro.core.*) ---------------
 
     def spmv(self, a, x, strategy: MigratoryStrategy) -> jax.Array:
@@ -71,6 +76,15 @@ class MeshSubstrate(Substrate):
     def __init__(self, mesh: jax.sharding.Mesh | None = None, axis_name: str = "nodelet"):
         self.mesh = mesh
         self.axis_name = axis_name
+
+    def cache_fingerprint(self) -> tuple:
+        mesh_id = None
+        if self.mesh is not None:
+            mesh_id = (
+                tuple(self.mesh.shape.items()),
+                tuple(str(d) for d in self.mesh.devices.flat),
+            )
+        return (self.name, self.axis_name, mesh_id)
 
     def _mesh_for(self, p: int) -> jax.sharding.Mesh:
         if self.mesh is not None:
@@ -120,6 +134,9 @@ class PallasSubstrate(Substrate):
 
     def __init__(self, interpret: bool = True):
         self.interpret = interpret
+
+    def cache_fingerprint(self) -> tuple:
+        return (self.name, self.interpret)
 
     def spmv(self, a, x, strategy):
         from ..kernels.spmv.ops import spmv as spmv_kernel

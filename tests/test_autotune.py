@@ -1,0 +1,174 @@
+"""Autotuner: analytic strategy ranking vs exhaustive measured sweeps.
+
+ISSUE 2 acceptance: the autotuner picks the traffic-model-optimal strategy
+for SpMV/BFS/GSANA on at least two scenario shapes each, cross-checked by
+running *every* candidate in the grid through the engine and comparing the
+chosen strategy's measured traffic against the sweep minimum.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    Comm,
+    Layout,
+    MigratoryStrategy,
+    bucketize,
+    cost_model_for,
+    generate_alignment_pair,
+    partition_ell,
+    pick_grid,
+)
+from repro.engine import (
+    BFSInputs,
+    GSANAInputs,
+    PlanCache,
+    SpMVInputs,
+    autotune,
+    candidate_grid,
+    choose_strategy,
+    rank_strategies,
+    run,
+)
+from repro.sparse import (
+    edges_to_csr,
+    erdos_renyi_edges,
+    laplacian_2d,
+    partition_graph,
+    rmat_edges,
+    skewed_matrix,
+)
+
+
+def _spmv_inputs(kind: str) -> SpMVInputs:
+    if kind == "laplacian":
+        a = laplacian_2d(10)
+        n = 100
+    else:
+        a = skewed_matrix(400, 6, 48, seed=1)
+        n = 400
+    lens = np.diff(np.asarray(a.indptr))
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(n).astype(np.float32))
+    return SpMVInputs(partition_ell(a, 8, k=int(lens.max())), x)
+
+
+def _bfs_inputs(kind: str) -> BFSInputs:
+    scale = 8
+    n = 1 << scale
+    edges = (
+        erdos_renyi_edges(scale, 6, seed=7) if kind == "er" else rmat_edges(scale, 6, seed=7)
+    )
+    return BFSInputs(partition_graph(edges_to_csr(edges, n), 8), 0)
+
+
+def _gsana_inputs(n: int) -> GSANAInputs:
+    vs1, vs2, pi = generate_alignment_pair(n, seed=3)
+    grid = pick_grid(n, 32)
+    cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+    return GSANAInputs(
+        vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+        ground_truth=pi,
+    )
+
+
+SCENARIOS = [
+    ("spmv", "laplacian"),
+    ("spmv", "skewed"),
+    ("bfs", "er"),
+    ("bfs", "rmat"),
+    ("gsana", "n128"),
+    ("gsana", "n192"),
+]
+
+
+def _inputs_for(op: str, case: str):
+    if op == "spmv":
+        return _spmv_inputs(case)
+    if op == "bfs":
+        return _bfs_inputs(case)
+    return _gsana_inputs(128 if case == "n128" else 192)
+
+
+@pytest.mark.parametrize("op,case", SCENARIOS)
+def test_choose_strategy_matches_exhaustive_measured_sweep(op, case):
+    """The analytic pick must achieve the minimum *measured* traffic over an
+    exhaustive engine sweep of the full candidate grid."""
+    inputs = _inputs_for(op, case)
+    chosen = choose_strategy(op, inputs)
+    cache = PlanCache()
+    measured = {}
+    for st in candidate_grid(op):
+        _, rep = run(op, inputs, st, "local", iters=1, warmup=0, cache=cache)
+        measured[st] = rep
+    min_traffic = min(r.traffic.total_bytes for r in measured.values())
+    assert chosen in measured
+    assert measured[chosen].traffic.total_bytes == min_traffic
+
+
+def test_spmv_picks_replication():
+    """Paper §5.1: replicating x eliminates migrations on both shapes."""
+    for case in ("laplacian", "skewed"):
+        st = choose_strategy("spmv", _spmv_inputs(case))
+        assert st.replicate_x is True
+
+
+def test_bfs_picks_remote_write():
+    """Paper §5.2: small write packets beat migrate's context ping-pong."""
+    for case in ("er", "rmat"):
+        st = choose_strategy("bfs", _bfs_inputs(case))
+        assert st.comm == Comm.REMOTE_WRITE
+
+
+def test_gsana_picks_hcb():
+    """Paper §5.3: Hilbert placement co-locates buckets with their
+    neighborhoods; among traffic ties the lower modeled makespan wins."""
+    for n in (128, 192):
+        inputs = _gsana_inputs(n)
+        st = choose_strategy("gsana", inputs)
+        assert st.layout == Layout.HCB
+        model = cost_model_for("gsana", inputs)
+        chosen = model(st)
+        ties = [
+            e for e in (model(c) for c in candidate_grid("gsana"))
+            if e.traffic_bytes == chosen.traffic_bytes
+        ]
+        assert chosen.balance_penalty == min(e.balance_penalty for e in ties)
+
+
+def test_rank_strategies_sorted_and_consistent():
+    inputs = _spmv_inputs("laplacian")
+    ranked = rank_strategies("spmv", inputs)
+    keys = [e.rank_key() for e in ranked]
+    assert keys == sorted(keys)
+    assert ranked[0].strategy == choose_strategy("spmv", inputs)
+
+
+def test_run_with_auto_strategy():
+    inputs = _spmv_inputs("laplacian")
+    _, rep = run("spmv", inputs, "auto", "local", cache=PlanCache())
+    assert rep.strategy["replicate_x"] is True
+    assert rep.traffic.migrations == 0
+    with pytest.raises(ValueError, match="unknown strategy"):
+        run("spmv", inputs, "fastest", "local")
+
+
+def test_autotune_probes_warm_the_cache():
+    """Probing the top-k compiles their plans, so the production run of the
+    winner is a cache hit — the compile is amortized away."""
+    inputs = _bfs_inputs("er")
+    cache = PlanCache()
+    tuned = autotune("bfs", inputs, "local", probe_top_k=2, cache=cache)
+    probed = [c for c in tuned.candidates if c.probe is not None]
+    assert len(probed) == 2
+    assert all(not c.probe.cache_hit for c in probed)
+    _, rep = run("bfs", inputs, tuned.best, "local", cache=cache)
+    assert rep.cache_hit
+    # the ranking table carries every candidate and marks the winner
+    table = tuned.table()
+    assert len(table) == len(candidate_grid("bfs"))
+    assert sum(row["chosen"] for row in table) >= 1
+
+
+def test_unknown_op_cost_model_raises():
+    with pytest.raises(ValueError, match="no cost model"):
+        cost_model_for("attention", None)

@@ -1,0 +1,73 @@
+"""runtime/elastic.py::plan_remesh — dedicated coverage (ISSUE 2 satellite):
+power-of-two data-axis shrink, the model-axis-too-big error, and the
+microbatch (gradient-accumulation) fallback when activations outgrow HBM.
+"""
+import pytest
+
+from repro.runtime.elastic import ElasticPlan, plan_remesh
+
+
+def test_data_axis_shrinks_to_power_of_two():
+    # 400 healthy / 16-way model axis: 25 data slots -> largest pow2 is 16
+    p = plan_remesh(n_healthy=400, model_axis=16, global_batch=256, prev_data_axis=16)
+    assert (p.data_axis, p.model_axis) == (16, 16)
+    assert p.per_device_batch_factor == 1.0
+    assert p.microbatches == 1
+    # 6 healthy / 2-way model: 3 data slots -> pow2 shrink to 2
+    p = plan_remesh(n_healthy=6, model_axis=2, global_batch=256, prev_data_axis=4)
+    assert p.data_axis == 2
+    assert p.per_device_batch_factor == 2.0
+
+
+@pytest.mark.parametrize("n_healthy,model_axis", [(8, 16), (1, 2), (15, 16)])
+def test_model_axis_too_big_raises(n_healthy, model_axis):
+    """The model axis is sacred (TP state layout): fewer devices than the
+    model axis cannot be remeshed."""
+    with pytest.raises(ValueError, match="cannot preserve model axis"):
+        plan_remesh(n_healthy, model_axis, global_batch=256, prev_data_axis=model_axis)
+
+
+def test_exact_model_axis_survivors_is_valid():
+    # exactly model_axis devices left: a 1-wide data axis, all batch on it
+    p = plan_remesh(n_healthy=16, model_axis=16, global_batch=256, prev_data_axis=8)
+    assert p.data_axis == 1
+    assert p.per_device_batch_factor == 8.0
+    assert p.microbatches == 8  # 8/8 = 1.0 <= 1/0.8 headroom
+
+
+def test_microbatch_fallback_keeps_global_batch():
+    """Shrinking data 16 -> 8 doubles per-device batch; with 0.8 HBM
+    headroom that exceeds budget, so microbatching splits it."""
+    p = plan_remesh(n_healthy=200, model_axis=16, global_batch=256, prev_data_axis=16)
+    assert p.data_axis == 8
+    assert p.per_device_batch_factor == 2.0
+    # factor/micro must fit inside 1/headroom = 1.25
+    assert p.microbatches == 2
+    assert p.per_device_batch_factor / p.microbatches <= 1.25
+
+
+def test_headroom_controls_microbatching():
+    # full headroom (1.0): any growth must be fully microbatched away
+    p = plan_remesh(
+        n_healthy=8, model_axis=2, global_batch=64, prev_data_axis=16,
+        hbm_headroom_frac=1.0,
+    )
+    assert p.data_axis == 4
+    assert p.per_device_batch_factor == 4.0
+    assert p.microbatches == 4
+    # generous headroom: no microbatching needed for the same shrink
+    p2 = plan_remesh(
+        n_healthy=8, model_axis=2, global_batch=64, prev_data_axis=16,
+        hbm_headroom_frac=0.2,
+    )
+    assert p2.microbatches == 1
+
+
+def test_growth_is_also_planned():
+    """More survivors than before (recovery): data axis grows, per-device
+    batch shrinks below 1 — never microbatched."""
+    p = plan_remesh(n_healthy=64, model_axis=2, global_batch=256, prev_data_axis=8)
+    assert p.data_axis == 32
+    assert p.per_device_batch_factor == 0.25
+    assert p.microbatches == 1
+    assert isinstance(p, ElasticPlan)

@@ -202,7 +202,7 @@ def test_report_schema_roundtrip(bfs_problem):
         "op", "substrate", "seconds", "us_per_call", "migrations",
         "remote_writes", "traffic_bytes", "bytes_moved", "effective_gbps",
         "strategy_comm", "strategy_replicate_x", "strategy_layout",
-        "strategy_scheme", "mteps", "rounds",
+        "strategy_scheme", "mteps", "rounds", "cache_hit", "compile_seconds",
     ):
         assert key in d, key
     assert d["op"] == "bfs"

@@ -1,0 +1,209 @@
+"""Compiled-plan cache + the plan -> compile -> execute pipeline.
+
+ISSUE 2 acceptance: a repeat ``engine.run`` with identical inputs reports
+``cache_hit=True`` and lower ``seconds`` than the cold call; RunReport
+separates compile from steady state; op metrics cannot shadow schema
+columns.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MigratoryStrategy, TrafficStats, partition_ell
+from repro.engine import (
+    BFSInputs,
+    LocalSubstrate,
+    MeshSubstrate,
+    PallasSubstrate,
+    PlanCache,
+    RunReport,
+    SpMVInputs,
+    SpMVOp,
+    build_plan,
+    compile_plan,
+    default_cache,
+    execute,
+    run,
+)
+from repro.sparse import (
+    edges_to_csr,
+    erdos_renyi_edges,
+    laplacian_2d,
+    partition_graph,
+    spmv_csr_ref,
+)
+
+
+@pytest.fixture(scope="module")
+def spmv_problem():
+    a = laplacian_2d(12)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(144).astype(np.float32))
+    return a, SpMVInputs(partition_ell(a, 8), x)
+
+
+@pytest.fixture(scope="module")
+def bfs_problem():
+    g = edges_to_csr(erdos_renyi_edges(8, 6, seed=2), 256)
+    return BFSInputs(partition_graph(g, 8), 3)
+
+
+# -- the acceptance property ---------------------------------------------------
+
+
+def test_repeat_run_hits_cache_and_is_faster(spmv_problem):
+    """Cold call compiles (timed in ``seconds`` with warmup=0); the repeat
+    reuses the jitted executor and must be strictly faster."""
+    _, inputs = spmv_problem
+    cache = PlanCache()
+    y1, r1 = run("spmv", inputs, None, "local", iters=1, warmup=0, cache=cache)
+    y2, r2 = run("spmv", inputs, None, "local", iters=1, warmup=0, cache=cache)
+    assert not r1.cache_hit and r1.compile_seconds > 0
+    assert r2.cache_hit and r2.compile_seconds == 0.0
+    assert r2.seconds < r1.seconds
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_steady_state_defaults_split_compile(spmv_problem):
+    """CI-smoke defaults (iters=3, warmup=1): the compiling call lands in
+    warmup, so ``seconds`` is steady state and much smaller than compile."""
+    _, inputs = spmv_problem
+    cache = PlanCache()
+    _, rep = run("spmv", inputs, None, "local", cache=cache)
+    assert not rep.cache_hit
+    assert rep.compile_seconds > rep.seconds
+
+
+# -- key semantics -------------------------------------------------------------
+
+
+def test_same_shapes_different_values_share_executor(spmv_problem):
+    """The cache key is shape/dtype-based: value-different inputs reuse the
+    executor and still compute *their own* result."""
+    a, inputs = spmv_problem
+    x2 = jnp.asarray(np.random.default_rng(9).standard_normal(144).astype(np.float32))
+    inputs2 = SpMVInputs(inputs.a, x2)
+    cache = PlanCache()
+    run("spmv", inputs, None, "local", iters=1, warmup=0, cache=cache)
+    y2, r2 = run("spmv", inputs2, None, "local", iters=1, warmup=0, cache=cache)
+    assert r2.cache_hit
+    from repro.core import gather_result
+
+    np.testing.assert_allclose(
+        np.asarray(gather_result(y2, 144)), np.asarray(spmv_csr_ref(a, x2)), atol=1e-4
+    )
+
+
+def test_strategy_and_shape_changes_miss(spmv_problem):
+    _, inputs = spmv_problem
+    cache = PlanCache()
+    run("spmv", inputs, MigratoryStrategy(grain=16), "local", iters=1, warmup=0, cache=cache)
+    # different grain -> different strategy key -> miss
+    _, r2 = run("spmv", inputs, MigratoryStrategy(grain=64), "local", iters=1, warmup=0, cache=cache)
+    assert not r2.cache_hit
+    # different shape -> miss
+    a2 = laplacian_2d(8)
+    x2 = jnp.asarray(np.random.default_rng(1).standard_normal(64).astype(np.float32))
+    _, r3 = run(
+        "spmv", SpMVInputs(partition_ell(a2, 8), x2),
+        MigratoryStrategy(grain=16), "local", iters=1, warmup=0, cache=cache,
+    )
+    assert not r3.cache_hit
+    assert cache.stats()["misses"] == 3 and cache.stats()["hits"] == 0
+
+
+def test_bfs_root_is_static_in_key(bfs_problem):
+    cache = PlanCache()
+    run("bfs", bfs_problem, None, "local", iters=1, warmup=0, cache=cache)
+    other_root = dataclasses.replace(bfs_problem, root=5)
+    _, r2 = run("bfs", other_root, None, "local", iters=1, warmup=0, cache=cache)
+    assert not r2.cache_hit  # the executor closes over the root
+    _, r3 = run("bfs", other_root, None, "local", iters=1, warmup=0, cache=cache)
+    assert r3.cache_hit
+
+
+def test_substrate_fingerprints_distinguish_backends():
+    assert LocalSubstrate().cache_fingerprint() == LocalSubstrate().cache_fingerprint()
+    assert PallasSubstrate(True).cache_fingerprint() != PallasSubstrate(False).cache_fingerprint()
+    assert LocalSubstrate().cache_fingerprint() != MeshSubstrate().cache_fingerprint()
+
+
+# -- pipeline stages -----------------------------------------------------------
+
+
+def test_pipeline_stages_compose(spmv_problem):
+    _, inputs = spmv_problem
+    cache = PlanCache()
+    plan = build_plan("spmv", inputs, None, "local")
+    assert plan.key is not None
+    compiled = compile_plan(plan, cache)
+    assert not compiled.cache_hit
+    result, seconds, compile_seconds = execute(compiled, iters=1, warmup=0, cache=cache)
+    assert compile_seconds > 0 and seconds > 0
+    # a second compile of an equal plan reuses the now-warm entry
+    compiled2 = compile_plan(build_plan("spmv", inputs, None, "local"), cache)
+    assert compiled2.cache_hit
+    assert compiled2.executor is compiled.executor
+
+
+def test_plan_run_method_matches_executor(spmv_problem):
+    _, inputs = spmv_problem
+    plan = build_plan("spmv", inputs, None, "local")
+    np.testing.assert_array_equal(
+        np.asarray(plan.run()), np.asarray(plan.executor(*plan.args))
+    )
+
+
+def test_uncacheable_plan_bypasses_cache(spmv_problem):
+    _, inputs = spmv_problem
+    cache = PlanCache()
+    plan = build_plan("spmv", inputs, None, "local")
+    plan.key = None
+    for _ in range(2):
+        compiled = cache.get(plan)
+        assert not compiled.cache_hit
+    assert cache.stats()["uncacheable"] == 2
+    assert len(cache) == 0
+
+
+def test_cache_stats_clear_and_eviction(spmv_problem):
+    _, inputs = spmv_problem
+    cache = PlanCache(max_entries=1)
+    run("spmv", inputs, MigratoryStrategy(grain=4), "local", iters=1, warmup=0, cache=cache)
+    run("spmv", inputs, MigratoryStrategy(grain=8), "local", iters=1, warmup=0, cache=cache)
+    assert len(cache) == 1  # LRU evicted the first entry
+    # the evicted plan compiles again
+    _, r = run("spmv", inputs, MigratoryStrategy(grain=4), "local", iters=1, warmup=0, cache=cache)
+    assert not r.cache_hit
+    cache.clear()
+    assert len(cache) == 0 and cache.stats()["hits"] == 0
+
+
+def test_default_cache_is_process_wide(spmv_problem):
+    _, inputs = spmv_problem
+    default_cache().clear()
+    run("spmv", inputs, None, "local", iters=1, warmup=0)
+    _, r2 = run("spmv", inputs, None, "local", iters=1, warmup=0)
+    assert r2.cache_hit
+    default_cache().clear()
+
+
+# -- report schema -------------------------------------------------------------
+
+
+def test_report_has_cache_columns(spmv_problem):
+    _, inputs = spmv_problem
+    _, rep = run("spmv", inputs, None, "local", cache=PlanCache())
+    d = rep.to_dict()
+    assert "cache_hit" in d and "compile_seconds" in d
+
+
+def test_op_metric_shadowing_schema_column_raises():
+    rep = RunReport.from_parts(
+        op="spmv", strategy=MigratoryStrategy(), substrate="local",
+        seconds=1.0, traffic=TrafficStats(), bytes_moved=8,
+        metrics={"seconds": 2.0},
+    )
+    with pytest.raises(ValueError, match="collide"):
+        rep.to_dict()

@@ -1,0 +1,137 @@
+"""Batched EngineService: submission-order responses, per-batch compile
+amortization, aggregate throughput stats.
+
+ISSUE 2 acceptance: batched results are bit-identical to sequential
+``engine.run`` calls.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Comm, MigratoryStrategy, Scheme, bucketize, \
+    generate_alignment_pair, partition_ell, pick_grid
+from repro.engine import (
+    BFSInputs,
+    EngineService,
+    GSANAInputs,
+    PlanCache,
+    SpMVInputs,
+    run,
+)
+from repro.sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, partition_graph
+
+
+@pytest.fixture(scope="module")
+def spmv_inputs():
+    a = laplacian_2d(12)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(144).astype(np.float32))
+    return SpMVInputs(partition_ell(a, 8), x)
+
+
+@pytest.fixture(scope="module")
+def bfs_inputs():
+    g = edges_to_csr(erdos_renyi_edges(8, 6, seed=2), 256)
+    return BFSInputs(partition_graph(g, 8), 3)
+
+
+@pytest.fixture(scope="module")
+def gsana_inputs():
+    vs1, vs2, pi = generate_alignment_pair(192, seed=11)
+    grid = pick_grid(192, 32)
+    cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+    return GSANAInputs(
+        vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+    )
+
+
+def test_batched_results_bit_identical_to_sequential(spmv_inputs, bfs_inputs, gsana_inputs):
+    """The acceptance parity: batching changes when executors compile, never
+    what they compute."""
+    requests = [
+        ("spmv", spmv_inputs, MigratoryStrategy()),
+        ("spmv", spmv_inputs, MigratoryStrategy(replicate_x=False)),
+        ("bfs", bfs_inputs, MigratoryStrategy(comm=Comm.MIGRATE)),
+        ("bfs", bfs_inputs, MigratoryStrategy(comm=Comm.REMOTE_WRITE)),
+        ("gsana", gsana_inputs, MigratoryStrategy(scheme=Scheme.PAIR)),
+    ]
+    svc = EngineService()
+    tickets = [svc.submit(op, inp, st) for op, inp, st in requests]
+    responses = svc.drain()
+    assert [r.ticket for r in responses] == tickets
+    for (op, inp, st), resp in zip(requests, responses):
+        seq_result, _ = run(op, inp, st, "local", iters=1, warmup=0, cache=PlanCache())
+        got, want = resp.result, seq_result
+        if isinstance(want, tuple):
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+        else:
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_same_key_batch_compiles_once(spmv_inputs):
+    svc = EngineService()
+    for _ in range(4):
+        svc.submit("spmv", spmv_inputs)
+    a2 = laplacian_2d(8)
+    x2 = jnp.asarray(np.random.default_rng(1).standard_normal(64).astype(np.float32))
+    svc.submit("spmv", SpMVInputs(partition_ell(a2, 8), x2))  # second signature
+    responses = svc.drain()
+    assert len(responses) == 5
+    stats = svc.stats()
+    assert stats.compiles == 2  # one per distinct plan key
+    assert stats.cache_hits == 3
+    assert stats.batches == 2
+    assert stats.amortization == pytest.approx(2.5)
+    hits = [r.report.cache_hit for r in responses[:4]]
+    assert hits == [False, True, True, True]
+
+
+def test_second_drain_serves_from_warm_cache(spmv_inputs):
+    svc = EngineService()
+    svc.submit("spmv", spmv_inputs)
+    svc.drain()
+    svc.submit("spmv", spmv_inputs)
+    (resp,) = svc.drain()
+    assert resp.report.cache_hit
+    assert svc.stats().drains == 2
+
+
+def test_empty_drain_and_queue_len(spmv_inputs):
+    svc = EngineService()
+    assert svc.drain() == []
+    svc.submit("spmv", spmv_inputs)
+    assert len(svc) == 1
+    svc.drain()
+    assert len(svc) == 0
+
+
+def test_autotune_mode_picks_model_optimal(spmv_inputs):
+    svc = EngineService(autotune=True)
+    svc.submit("spmv", spmv_inputs)  # no strategy given -> "auto"
+    (resp,) = svc.drain()
+    assert resp.report.strategy["replicate_x"] is True
+    assert resp.report.traffic.migrations == 0
+
+
+def test_shared_cache_pools_compiles(spmv_inputs):
+    shared = PlanCache()
+    run("spmv", spmv_inputs, None, "local", iters=1, warmup=0, cache=shared)
+    svc = EngineService(cache=shared)
+    svc.submit("spmv", spmv_inputs)
+    (resp,) = svc.drain()
+    assert resp.report.cache_hit  # compiled outside the service, reused inside
+
+
+def test_throughput_report_schema(spmv_inputs):
+    svc = EngineService()
+    svc.submit("spmv", spmv_inputs)
+    svc.drain()
+    report = svc.throughput_report()
+    for key in (
+        "requests", "batches", "drains", "cache_hits", "compiles",
+        "compile_seconds", "run_seconds", "wall_seconds",
+        "requests_per_second", "amortization", "cache",
+    ):
+        assert key in report, key
+    assert report["requests"] == 1
+    assert report["cache"]["entries"] == 1
