@@ -6,6 +6,13 @@ construction).
 Emits one RunReport row per autotuned scenario and writes the full ranking
 tables to ``experiments/autotune_ranking.json`` — the CI artifact that shows
 *why* each strategy won (traffic bytes, balance penalty, probe timings).
+
+Probe measurements persist through the default
+:class:`~repro.engine.probes.ProbeStore`
+(``experiments/autotune_probes.json``, uploaded as a CI artifact next to
+the ranking table): a repeat session reuses stored probe seconds instead of
+re-executing the probes, and the ranking rows mark reused probes with
+``probe_persisted``.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ from repro.engine import (
     GSANAInputs,
     SpMVInputs,
     autotune,
+    default_probe_store,
     run as engine_run,
 )
 from repro.sparse import (
@@ -90,14 +98,18 @@ def scenarios(full: bool = False, quick: bool = False):
 def run(full: bool = False, quick: bool = False):
     rows = []
     ranking_tables = []
+    store = default_probe_store()
     for op, case, inputs in scenarios(full, quick):
-        tuned = autotune(op, inputs, "local", probe_top_k=2)
+        tuned = autotune(op, inputs, "local", probe_top_k=2, probe_store=store)
         table = [{"case": case, **row} for row in tuned.table()]
         ranking_tables.extend(table)
         # the production run of the winner: a plan-cache hit by construction
+        # (when the probe executed this session; a persisted probe skipped it)
         _, rep = engine_run(op, inputs, tuned.best, "local")
         rows.append(emit_report("autotune", f"{op}_{case}", rep, n_candidates=len(table)))
     RANKING_PATH.parent.mkdir(parents=True, exist_ok=True)
     RANKING_PATH.write_text(json.dumps(ranking_tables, indent=2, default=str))
     print(f"# wrote {RANKING_PATH} ({len(ranking_tables)} ranking rows)")
+    print(f"# autotune probes: {store.reused} reused from store, "
+          f"{store.recorded} newly measured -> {store.path}")
     return rows

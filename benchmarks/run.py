@@ -1,5 +1,6 @@
 """Benchmark runner: one suite per paper table/figure + kernel micro-benches
-+ the autotune strategy sweeps + the beyond-paper MoE dispatch A/B.
++ the autotune strategy sweeps + the serving suites (sync-vs-async `serve`,
+8-device `mesh`) + the beyond-paper MoE dispatch A/B.
 
     PYTHONPATH=src python -m benchmarks.run [--bench NAME] [--full] [--quick]
 
@@ -22,8 +23,9 @@ from pathlib import Path
 
 SUITES = {}
 
-# subprocess-heavy suites skipped in --quick smoke runs
-SLOW_SUITES = ("moe_dispatch",)
+# subprocess-heavy suites skipped in --quick smoke runs (still runnable
+# explicitly via --bench NAME; the mesh-8dev CI job does exactly that)
+SLOW_SUITES = ("moe_dispatch", "mesh")
 
 
 def _register():
@@ -32,7 +34,9 @@ def _register():
         bfs_suite,
         gsana_suite,
         kernels_suite,
+        mesh_suite,
         moe_dispatch,
+        serve_suite,
         spmv_suite,
     )
 
@@ -41,8 +45,10 @@ def _register():
         "bfs": bfs_suite.run,
         "gsana": gsana_suite.run,
         "autotune": autotune_suite.run,
+        "serve": serve_suite.run,
         "kernels": kernels_suite.run,
         "moe_dispatch": moe_dispatch.run,
+        "mesh": mesh_suite.run,
     })
 
 
@@ -57,6 +63,11 @@ def main(argv=None) -> None:
     ap.add_argument(
         "--require-cache-hits", action="store_true",
         help="fail (exit 1) if the compiled-plan cache saw zero hits",
+    )
+    ap.add_argument(
+        "--require-overlap", action="store_true",
+        help="fail (exit 1) if the serve suite's async pipeline showed zero "
+        "compile/execute overlap",
     )
     ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args(argv)
@@ -93,6 +104,17 @@ def main(argv=None) -> None:
     if args.require_cache_hits and cache_stats["hits"] == 0:
         print("# FAIL: compiled-plan cache saw zero hits", file=sys.stderr)
         sys.exit(1)
+    if args.require_overlap:
+        async_rows = [
+            r for r in all_rows
+            if r.get("bench") == "serve" and r.get("case") == "async_worker"
+        ]
+        if not async_rows or all(r.get("overlap_ratio", 0) <= 0 for r in async_rows):
+            print(
+                "# FAIL: serve suite showed zero compile/execute overlap",
+                file=sys.stderr,
+            )
+            sys.exit(1)
 
 
 if __name__ == "__main__":

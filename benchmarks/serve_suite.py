@@ -1,0 +1,134 @@
+"""Serving benchmark: the synchronous drain vs the async worker-loop
+pipeline on an identical mixed SpMV/BFS request stream.
+
+Each phase runs **cold in its own subprocess** so both pay their own
+tracing + XLA compiles and neither inherits the other's (or the parent
+bench run's) process-level jax cache — the A/B isolates scheduling: the
+sync drain serializes each plan-key group's compile against its members'
+execution; the async pipeline hides the compile of one group under the
+execution of another. The ``async_worker`` row reports the sustained
+request rate plus ``overlap_ratio`` — the fraction of compile-stage time
+hidden under execution. ISSUE 3 acceptance requires ``overlap_ratio > 0``
+in the ``--quick`` CI smoke (``benchmarks/run.py --require-overlap`` gates
+it). At quick sizes execution is tiny next to compile, so the wall-clock
+win is modest; the overlap ratio is the signal that the pipeline works.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+from .util import emit
+
+SCRIPT = r"""
+import json, sys
+import jax.numpy as jnp
+import numpy as np
+from repro.core import Comm, MigratoryStrategy, partition_ell
+from repro.engine import BFSInputs, EngineService, PlanCache, SpMVInputs
+from repro.sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, partition_graph
+
+phase, out_path = sys.argv[1], sys.argv[2]
+grids = [int(g) for g in sys.argv[3].split(",")]
+scale, per = int(sys.argv[4]), int(sys.argv[5])
+
+rng = np.random.default_rng(0)
+cases = []
+for g in grids:
+    a = laplacian_2d(g)
+    x = jnp.asarray(rng.standard_normal(g * g).astype(np.float32))
+    inputs = SpMVInputs(partition_ell(a, 8), x)
+    for st in (MigratoryStrategy(), MigratoryStrategy(replicate_x=False)):
+        cases.append(("spmv", inputs, st))
+g = edges_to_csr(erdos_renyi_edges(scale, 6, seed=1), 1 << scale)
+cases.append(("bfs", BFSInputs(partition_graph(g, 8), 0),
+              MigratoryStrategy(comm=Comm.REMOTE_WRITE)))
+requests = [case for case in cases for _ in range(per)]
+
+if phase == "sync":
+    svc = EngineService(cache=PlanCache())
+    for op, inputs, st in requests:
+        svc.submit(op, inputs, st)
+    responses = svc.drain()
+else:
+    svc = EngineService(cache=PlanCache(), max_queue_depth=4096,
+                        qos={"bfs": 2.0}, batch_window=0.02)
+    svc.start()
+    futures = [svc.submit(op, inputs, st) for op, inputs, st in requests]
+    responses = [f.result(timeout=600) for f in futures]
+    svc.stop()
+
+assert len(responses) == len(requests)
+with open(out_path, "w") as f:
+    json.dump(svc.stats().to_dict(), f)
+print(f"SERVE-{phase.upper()}-OK")
+"""
+
+
+def _run_phase(phase: str, grids, scale: int, per: int) -> dict:
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
+        out_path = tmp.name
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", SCRIPT, phase, out_path,
+             ",".join(str(g) for g in grids), str(scale), str(per)],
+            env=env, capture_output=True, text=True, timeout=1800,
+        )
+        if proc.returncode != 0 or f"SERVE-{phase.upper()}-OK" not in proc.stdout:
+            raise RuntimeError(
+                f"serve {phase} subprocess failed (rc={proc.returncode}):\n"
+                f"stdout={proc.stdout}\nstderr={proc.stderr}"
+            )
+        return json.loads(Path(out_path).read_text())
+    finally:
+        Path(out_path).unlink(missing_ok=True)
+
+
+def run(full: bool = False, quick: bool = False):
+    if quick:
+        grids, scale, per = (12, 16), 8, 8
+    elif full:
+        grids, scale, per = (32, 48, 64), 11, 32
+    else:
+        grids, scale, per = (16, 24), 9, 12
+    rows = []
+    sync = _run_phase("sync", grids, scale, per)
+    rows.append(emit(
+        "serve", "sync_drain", sync["wall_seconds"],
+        requests=sync["requests"],
+        req_per_s=round(sync["requests_per_second"], 1),
+        compiles=sync["compiles"],
+        cache_hits=sync["cache_hits"],
+    ))
+    a = _run_phase("async", grids, scale, per)
+    rows.append(emit(
+        "serve", "async_worker", a["wall_seconds"],
+        requests=a["requests"],
+        req_per_s=round(a["requests_per_second"], 1),
+        compiles=a["compiles"],
+        cache_hits=a["cache_hits"],
+        overlap_seconds=a["overlap_seconds"],  # unrounded: run.py gates on > 0
+        overlap_ratio=a["overlap_ratio"],
+        busy_seconds=round(a["busy_seconds"], 4),
+        queue_depth_hwm=a["queue_depth_hwm"],
+        rejected=a["rejected"],
+    ))
+    speedup = (
+        sync["wall_seconds"] / a["wall_seconds"] if a["wall_seconds"] > 0 else 0.0
+    )
+    rows.append(emit(
+        "serve", "async_vs_sync", a["wall_seconds"],
+        sync_wall_seconds=round(sync["wall_seconds"], 4),
+        speedup=round(speedup, 3),
+        overlap_ratio=round(a["overlap_ratio"], 4),
+    ))
+    if a["overlap_ratio"] <= 0:
+        print("# WARN: serve async_worker saw zero compile/execute overlap")
+    return rows

@@ -11,8 +11,11 @@ accounting and an explicit plan -> compile -> execute pipeline
 Ops implement :class:`MigratoryOp`; backends implement :class:`Substrate`
 and register with :func:`register_substrate`. Compiled executors are cached
 per shape/strategy/substrate signature (:mod:`repro.engine.cache`); the
-strategy grid is ranked analytically (:mod:`repro.engine.autotune`); batched
-serving goes through :class:`EngineService` (:mod:`repro.engine.service`).
+strategy grid is ranked analytically (:mod:`repro.engine.autotune`) with
+measured probes persisted across sessions (:mod:`repro.engine.probes`);
+serving goes through :class:`EngineService` (:mod:`repro.engine.service`) —
+batched drain or the async worker loop with admission control and an
+overlapped compile/execute pipeline.
 """
 from .api import (
     ExecutionPlan,
@@ -31,6 +34,7 @@ from .autotune import (
     rank_strategies,
 )
 from .cache import CompiledPlan, PlanCache, default_cache
+from .probes import ProbeStore, default_probe_store
 from .ops import (
     OPS,
     BFSInputs,
@@ -48,8 +52,17 @@ from .runner import (
     resolve_strategy,
     run,
     run_plan,
+    single_call,
 )
-from .service import EngineService, ServiceResponse, ServiceStats
+from .service import (
+    AdmissionError,
+    EngineService,
+    ServiceFuture,
+    ServiceRequest,
+    ServiceResponse,
+    ServiceStats,
+    ServiceStopped,
+)
 from .substrate import (
     LocalSubstrate,
     MeshSubstrate,
@@ -62,14 +75,15 @@ from .substrate import (
 )
 
 __all__ = [
-    "AutotuneResult", "BFSInputs", "BFSOp", "CompiledPlan", "EngineService",
-    "ExecutionPlan", "GSANAInputs", "GSANAOp", "LocalSubstrate",
-    "MeshSubstrate", "MigratoryOp", "OPS", "OpNotSupportedError",
-    "PallasSubstrate", "PlanCache", "RunReport", "ServiceResponse",
-    "ServiceStats", "SpMVInputs", "SpMVOp", "Substrate", "args_signature",
-    "autotune", "build_plan", "candidate_grid", "choose_strategy",
-    "compile_plan", "default_cache", "execute", "get_substrate",
-    "list_substrates", "plan_key", "rank_strategies", "register_substrate",
-    "resolve_op", "resolve_strategy", "run", "run_plan", "strategy_dict",
-    "substrate_for_mesh",
+    "AdmissionError", "AutotuneResult", "BFSInputs", "BFSOp", "CompiledPlan",
+    "EngineService", "ExecutionPlan", "GSANAInputs", "GSANAOp",
+    "LocalSubstrate", "MeshSubstrate", "MigratoryOp", "OPS",
+    "OpNotSupportedError", "PallasSubstrate", "PlanCache", "ProbeStore",
+    "RunReport", "ServiceFuture", "ServiceRequest", "ServiceResponse",
+    "ServiceStats", "ServiceStopped", "SpMVInputs", "SpMVOp", "Substrate",
+    "args_signature", "autotune", "build_plan", "candidate_grid",
+    "choose_strategy", "compile_plan", "default_cache", "default_probe_store",
+    "execute", "get_substrate", "list_substrates", "plan_key",
+    "rank_strategies", "register_substrate", "resolve_op", "resolve_strategy",
+    "run", "run_plan", "single_call", "strategy_dict", "substrate_for_mesh",
 ]

@@ -17,7 +17,10 @@ Ranking is purely analytic (core/cost.py): primary key is the modeled
 traffic in bytes — identical to what a measured sweep's RunReports would
 carry — tie-broken by the per-op balance model. ``probe_top_k`` executes
 the leading candidates through the compiled-plan cache, so the eventual
-production run of the winner is a cache hit.
+production run of the winner is a cache hit. Pass a
+:class:`~repro.engine.probes.ProbeStore` to persist measured probe seconds
+to ``experiments/autotune_probes.json`` — repeat sessions reuse the stored
+timing instead of re-probing.
 """
 from __future__ import annotations
 
@@ -26,9 +29,10 @@ from typing import Any
 
 from ..core.cost import CostEstimate, cost_model_for
 from ..core.strategies import MigratoryStrategy, strategy_grid
-from .api import RunReport, strategy_dict
+from .api import ExecutionPlan, RunReport, strategy_dict
 from .cache import PlanCache
-from .runner import resolve_op, run
+from .probes import ProbeStore
+from .runner import build_plan, resolve_op, run
 from .substrate import Substrate
 
 # grain values worth distinguishing for row-grained ops (None = dynamic)
@@ -44,11 +48,14 @@ def candidate_grid(op_name: str) -> list[MigratoryStrategy]:
 
 @dataclasses.dataclass
 class RankedCandidate:
-    """One grid point: its analytic estimate + optional measured probe."""
+    """One grid point: its analytic estimate + optional measured probe.
+    ``probe_persisted`` marks a probe whose seconds came from the
+    :class:`~repro.engine.probes.ProbeStore` instead of a fresh run."""
 
     rank: int
     estimate: CostEstimate
     probe: RunReport | None = None
+    probe_persisted: bool = False
 
     def to_row(self) -> dict[str, Any]:
         row = {
@@ -62,6 +69,7 @@ class RankedCandidate:
             row["probe_seconds"] = self.probe.seconds
             row["probe_compile_seconds"] = self.probe.compile_seconds
             row["probe_cache_hit"] = self.probe.cache_hit
+            row["probe_persisted"] = self.probe_persisted
         return row
 
 
@@ -98,6 +106,25 @@ def choose_strategy(op, inputs) -> MigratoryStrategy:
     return rank_strategies(op, inputs)[0].strategy
 
 
+def _persisted_probe_report(op, plan: ExecutionPlan, seconds: float) -> RunReport:
+    """A RunReport standing in for a probe served from the persisted store:
+    measured seconds from a prior session, analytic traffic from the plan.
+    No execution happened, so the plan cache was not warmed —
+    ``cache_hit=False`` stays truthful; ``probe_persisted`` in the ranking
+    row carries the provenance."""
+    return RunReport.from_parts(
+        op=op.name,
+        strategy=plan.strategy,
+        substrate=plan.substrate,
+        seconds=seconds,
+        traffic=op.traffic(plan),
+        bytes_moved=op.bytes_moved(plan),
+        metrics={},
+        cache_hit=False,
+        compile_seconds=0.0,
+    )
+
+
 def autotune(
     op,
     inputs,
@@ -108,6 +135,7 @@ def autotune(
     warmup: int = 1,
     cache: PlanCache | None = None,
     override_margin: float = 0.2,
+    probe_store: "ProbeStore | None" = None,
 ) -> AutotuneResult:
     """Rank the grid; optionally execute the top ``probe_top_k`` candidates
     through the plan cache and let measured seconds pick among them.
@@ -118,6 +146,11 @@ def autotune(
     timings are pure noise, and the model's choice stands. Probes compile
     each probed candidate's plan, so the subsequent production run of
     ``result.best`` is a cache hit.
+
+    With a ``probe_store``, candidates whose plan key already has a stored
+    measurement skip execution and reuse the persisted seconds (those
+    candidates do *not* warm the plan cache); fresh measurements are
+    recorded and the store is spilled to disk before returning.
     """
     op = resolve_op(op)
     estimates = rank_strategies(op, inputs)
@@ -133,11 +166,19 @@ def autotune(
             if cost_sig in seen_costs:
                 continue
             seen_costs.add(cost_sig)
-            _, report = run(
-                op, inputs, cand.estimate.strategy, substrate,
-                iters=iters, warmup=warmup, cache=cache,
-            )
-            cand.probe = report
+            plan = build_plan(op, inputs, cand.estimate.strategy, substrate)
+            stored = probe_store.get(plan.key) if probe_store is not None else None
+            if stored is not None:
+                cand.probe = _persisted_probe_report(op, plan, stored)
+                cand.probe_persisted = True
+            else:
+                _, report = run(
+                    op, inputs, cand.estimate.strategy, substrate,
+                    iters=iters, warmup=warmup, cache=cache,
+                )
+                cand.probe = report
+                if probe_store is not None:
+                    probe_store.record(plan.key, report.seconds)
             probed.append(cand)
             if len(probed) >= probe_top_k:
                 break
@@ -145,5 +186,7 @@ def autotune(
         model_pick = probed[0]  # rank 1 is always probed first
         if fastest.probe.seconds < model_pick.probe.seconds * (1.0 - override_margin):
             best = fastest.estimate.strategy
+        if probe_store is not None:
+            probe_store.save()
     sub_name = substrate.name if isinstance(substrate, Substrate) else substrate
     return AutotuneResult(op=op.name, substrate=sub_name, best=best, candidates=candidates)

@@ -16,11 +16,17 @@ pins everything the closure captures: the op, the substrate fingerprint
 (mesh identity / interpret flag included), every strategy axis, the op's
 static scalars, and the argument pytree signature. Only array *values* vary
 across reuses — exactly what the executors are polymorphic over.
+
+The cache is thread-safe: the async :class:`~repro.engine.service.EngineService`
+resolves plans from its compile thread while its execute thread serves cache
+hits, so every entry-table access is taken under one lock. Executor *calls*
+happen outside the lock — only the bookkeeping is serialized.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 from typing import Any, Callable
 
 from .api import ExecutionPlan
@@ -59,61 +65,67 @@ class PlanCache:
     def __init__(self, max_entries: int = 256):
         self.max_entries = max_entries
         self._entries: collections.OrderedDict[tuple, CacheEntry] = collections.OrderedDict()
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
         self.uncacheable = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __bool__(self) -> bool:
         return True  # an empty cache is still a cache, not a None stand-in
 
     def get(self, plan: ExecutionPlan) -> CompiledPlan:
         """Resolve a plan's executor. Keyless plans bypass the cache."""
-        if plan.key is None:
-            self.uncacheable += 1
-            return CompiledPlan(plan, plan.executor, cache_hit=False, entry=None)
-        entry = self._entries.get(plan.key)
-        if entry is not None:
-            self._entries.move_to_end(plan.key)
-            if entry.compiled:
-                entry.hits += 1
-                self.hits += 1
-                return CompiledPlan(plan, entry.executor, cache_hit=True, entry=entry)
-            # entry exists but its first call never ran: still a cold path
+        with self._lock:
+            if plan.key is None:
+                self.uncacheable += 1
+                return CompiledPlan(plan, plan.executor, cache_hit=False, entry=None)
+            entry = self._entries.get(plan.key)
+            if entry is not None:
+                self._entries.move_to_end(plan.key)
+                if entry.compiled:
+                    entry.hits += 1
+                    self.hits += 1
+                    return CompiledPlan(plan, entry.executor, cache_hit=True, entry=entry)
+                # entry exists but its first call never ran: still a cold path
+                self.misses += 1
+                return CompiledPlan(plan, entry.executor, cache_hit=False, entry=entry)
+            entry = CacheEntry(executor=plan.executor)
+            self._entries[plan.key] = entry
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
             self.misses += 1
             return CompiledPlan(plan, entry.executor, cache_hit=False, entry=entry)
-        entry = CacheEntry(executor=plan.executor)
-        self._entries[plan.key] = entry
-        while len(self._entries) > self.max_entries:
-            self._entries.popitem(last=False)
-        self.misses += 1
-        return CompiledPlan(plan, entry.executor, cache_hit=False, entry=entry)
 
     def note_compiled(self, compiled: CompiledPlan, seconds: float) -> None:
         """Record the timed first call of a miss (trace + compile + run)."""
-        if compiled.entry is not None and not compiled.entry.compiled:
-            compiled.entry.compiled = True
-            compiled.entry.compile_seconds = seconds
+        with self._lock:
+            if compiled.entry is not None and not compiled.entry.compiled:
+                compiled.entry.compiled = True
+                compiled.entry.compile_seconds = seconds
 
     def stats(self) -> dict[str, Any]:
         """Aggregate counters — the benchmark/CI cache health record."""
-        lookups = self.hits + self.misses
-        return {
-            "entries": len(self._entries),
-            "hits": self.hits,
-            "misses": self.misses,
-            "uncacheable": self.uncacheable,
-            "hit_rate": self.hits / lookups if lookups else 0.0,
-            "compile_seconds_total": sum(
-                e.compile_seconds for e in self._entries.values()
-            ),
-        }
+        with self._lock:
+            lookups = self.hits + self.misses
+            return {
+                "entries": len(self._entries),
+                "hits": self.hits,
+                "misses": self.misses,
+                "uncacheable": self.uncacheable,
+                "hit_rate": self.hits / lookups if lookups else 0.0,
+                "compile_seconds_total": sum(
+                    e.compile_seconds for e in self._entries.values()
+                ),
+            }
 
     def clear(self) -> None:
-        self._entries.clear()
-        self.hits = self.misses = self.uncacheable = 0
+        with self._lock:
+            self._entries.clear()
+            self.hits = self.misses = self.uncacheable = 0
 
 
 _DEFAULT_CACHE = PlanCache()

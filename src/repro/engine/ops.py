@@ -91,12 +91,15 @@ class BFSOp:
 
     def plan(self, inputs: BFSInputs, strategy: MigratoryStrategy, substrate: Substrate):
         args = (inputs.g,)
+        # close over the scalars, not `inputs`: the plan cache keeps the
+        # executor closure alive, and it must not pin the graph arrays
+        root, max_rounds = inputs.root, inputs.max_rounds
         return ExecutionPlan(
             op=self.name,
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
-            executor=lambda g: substrate.bfs(g, inputs.root, strategy, inputs.max_rounds),
+            executor=lambda g: substrate.bfs(g, root, strategy, max_rounds),
             args=args,
             key=plan_key(
                 self.name, substrate, strategy, args,
@@ -150,13 +153,16 @@ class GSANAOp:
 
     def plan(self, inputs: GSANAInputs, strategy: MigratoryStrategy, substrate: Substrate):
         args = (inputs.vs1, inputs.vs2, inputs.b1, inputs.b2)
+        # close over the scalar k, not `inputs`: cached executors must not
+        # pin the vertex-set/bucket arrays of the first-compiling request
+        k = inputs.k
         return ExecutionPlan(
             op=self.name,
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
             executor=lambda vs1, vs2, b1, b2: substrate.gsana(
-                vs1, vs2, b1, b2, inputs.k, strategy
+                vs1, vs2, b1, b2, k, strategy
             ),
             args=args,
             key=plan_key(

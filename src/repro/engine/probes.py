@@ -1,0 +1,109 @@
+"""Measured-probe persistence for the autotuner (ROADMAP "measured-probe
+persistence") — the on-disk sibling of the in-process compiled-plan cache.
+
+``autotune(..., probe_top_k=k)`` executes the leading candidates to let
+measured seconds override the traffic model. Those measurements are pure
+re-derivable state, so a :class:`ProbeStore` spills them as
+``(plan key -> median measured seconds)`` JSON at
+``experiments/autotune_probes.json`` and reloads them lazily on first use:
+a repeat session (or a repeat scenario within one session) skips the probe
+execution entirely and reuses the stored timing. CI uploads the file as an
+artifact next to the autotune ranking table.
+
+Plan keys are exactly the compiled-plan cache keys
+(:func:`~repro.engine.api.plan_key`): op x substrate fingerprint x strategy
+x static scalars x argument shape/dtype signature — everything a probe
+timing depends on besides the machine itself. Keys are stored as their
+``repr`` (they are tuples of primitives and strings, so the repr is stable
+across sessions). Stored probes can misjudge across *machines*; the
+autotuner's ``override_margin`` guard applies to them the same way it does
+to noisy fresh probes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from pathlib import Path
+
+DEFAULT_PROBES_PATH = (
+    Path(__file__).resolve().parents[3] / "experiments" / "autotune_probes.json"
+)
+_SCHEMA_VERSION = 1
+
+
+class ProbeStore:
+    """Persistent ``(plan key -> measured seconds)`` map, loaded lazily and
+    spilled atomically. Thread-safe; read-only filesystems degrade to an
+    in-memory store (save() becomes a no-op)."""
+
+    def __init__(self, path: "str | os.PathLike"):
+        self.path = Path(path)
+        self._lock = threading.RLock()
+        self._data: "dict[str, float] | None" = None
+        self.reused = 0  # probes served from the store this session
+        self.recorded = 0  # fresh measurements added this session
+
+    @staticmethod
+    def encode_key(key: tuple) -> str:
+        return repr(key)
+
+    def _load_locked(self) -> "dict[str, float]":
+        if self._data is None:
+            try:
+                raw = json.loads(self.path.read_text())
+                self._data = {
+                    str(k): float(v) for k, v in raw.get("probes", {}).items()
+                }
+            except (OSError, ValueError, AttributeError):
+                self._data = {}
+        return self._data
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._load_locked())
+
+    def get(self, key: "tuple | None") -> "float | None":
+        """Stored seconds for a plan key, or None (uncacheable/unseen)."""
+        if key is None:
+            return None
+        with self._lock:
+            seconds = self._load_locked().get(self.encode_key(key))
+            if seconds is not None:
+                self.reused += 1
+            return seconds
+
+    def record(self, key: "tuple | None", seconds: float) -> None:
+        if key is None:
+            return
+        with self._lock:
+            self._load_locked()[self.encode_key(key)] = float(seconds)
+            self.recorded += 1
+
+    def save(self) -> None:
+        """Atomic spill (tmp file + rename); silently skipped where the
+        experiments directory is not writable."""
+        with self._lock:
+            payload = {"version": _SCHEMA_VERSION, "probes": dict(self._load_locked())}
+        try:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            tmp = self.path.with_suffix(".json.tmp")
+            tmp.write_text(json.dumps(payload, indent=2, sort_keys=True))
+            tmp.replace(self.path)
+        except OSError:
+            pass
+
+
+_default_store: "ProbeStore | None" = None
+_default_store_lock = threading.Lock()
+
+
+def default_probe_store() -> ProbeStore:
+    """The process-wide store at ``experiments/autotune_probes.json``
+    (``REPRO_PROBES_PATH`` overrides the location)."""
+    global _default_store
+    with _default_store_lock:
+        if _default_store is None:
+            path = os.environ.get("REPRO_PROBES_PATH", str(DEFAULT_PROBES_PATH))
+            _default_store = ProbeStore(path)
+        return _default_store

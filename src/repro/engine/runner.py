@@ -113,6 +113,24 @@ def execute(
     return result, timed[len(timed) // 2], compile_seconds
 
 
+def single_call(
+    plan: ExecutionPlan, op: MigratoryOp, *, cache: PlanCache | None = None
+) -> tuple[Any, RunReport]:
+    """One timed call through the cache — the unit of work of the async
+    service's two pipeline stages (DESIGN.md §1d).
+
+    On a *cold* plan this call is the **compile** stage: the single timed
+    call traces + compiles, and the report carries
+    ``cache_hit=False, seconds == compile_seconds``. On a *warm* plan it is
+    the **execute** stage: a pure steady-state call with
+    ``cache_hit=True, compile_seconds=0.0``. The split lets the service
+    overlap the compile of one plan-key group with the execution of another
+    while each request still runs exactly the call sequence the synchronous
+    path would have run — parity is structural, not incidental.
+    """
+    return run_plan(plan, op, iters=1, warmup=0, cache=cache)
+
+
 def run_plan(
     plan: ExecutionPlan,
     op: MigratoryOp,

@@ -1,36 +1,71 @@
-"""Batched EngineService: a submit/drain request queue over the engine
-pipeline — the first concrete step toward the production-serving north star
-(ROADMAP).
+"""EngineService: the serving front-end over the plan/compile/execute
+pipeline, in two modes (DESIGN.md §1d).
+
+**Batch mode** (the default, PR 2's API): ``submit()`` returns an int ticket
+and nothing runs until ``drain()`` executes everything, grouped by plan key
+so each group compiles at most once.
 
     svc = EngineService()
-    t1 = svc.submit("spmv", inputs_a)            # enqueue, nothing runs
-    t2 = svc.submit("spmv", inputs_b)            # same shapes -> same plan key
-    responses = svc.drain()                      # one compile, two executions
-    print(svc.stats().to_dict())                 # aggregate throughput record
+    t = svc.submit("spmv", inputs)               # -> int ticket
+    responses = svc.drain()                      # one compile per plan key
 
-``drain()`` builds every pending request's :class:`ExecutionPlan`, groups
-requests by compiled-plan cache key, and runs each group back-to-back so a
-batch of same-signature requests pays for at most one compile (the first
-request traces + compiles; the rest are cache hits). Results are
-bit-identical to sequential ``engine.run`` calls — batching changes *when*
-executors compile, never what they compute (the service parity test pins
-this). Responses come back in submission order.
+**Worker-loop mode** (the serving path): ``start()`` spawns a two-stage
+pipeline — a *compile* thread that pops plan-key groups off the admission
+queue, schedules them by QoS weight, and runs each group's first (possibly
+compiling) call, feeding a bounded queue to an *execute* thread that serves
+the group's remaining cache-hit calls. While the execute thread works
+through group N, the compile thread is already tracing/compiling group N+1,
+so compile and execute wall time overlap instead of adding — the
+compile-N+1-while-executing-N structure of the migratory-thread model
+(keep work in flight against memory; never serialize on data movement).
 
-The service owns a private :class:`PlanCache` by default so its hit-rate
-statistics reflect its own traffic; pass a shared cache to pool compiled
-executors with other engine users.
+    svc = EngineService(max_queue_depth=256, admission="block",
+                        qos={"bfs": 2.0})
+    svc.start()
+    fut = svc.submit("spmv", inputs)             # -> ServiceFuture, non-blocking
+    resp = fut.result(timeout=60)                # ServiceResponse
+    svc.stop()                                   # drains by default
+    print(svc.stats().overlap_ratio)             # compile hidden under execute
+
+Admission control: ``max_queue_depth`` bounds the request queue;
+``admission="block"`` applies backpressure to submitters (requires a running
+worker to make progress), ``admission="reject"`` raises
+:class:`AdmissionError` immediately (counted in ``ServiceStats.rejected``).
+``qos`` maps op names to scheduling weights — within each queue snapshot,
+higher-weight groups run first (ordering, not preemption).
+
+Results are **bit-identical** to sequential ``engine.run`` in both modes:
+each request still executes the same cached-executor call the synchronous
+path would have run; concurrency changes *when* plans compile, never what
+they compute (``tests/test_service_async.py`` pins this under concurrent
+mixed-op submission).
 """
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
+import threading
 import time
+from collections import deque
 from typing import Any
 
 from ..core.strategies import MigratoryStrategy
 from .api import RunReport
 from .cache import PlanCache
-from .runner import build_plan, resolve_op, run_plan
+from .runner import build_plan, resolve_op, single_call
 from .substrate import Substrate
+
+_STOP = object()  # execute-loop shutdown sentinel
+
+
+class AdmissionError(RuntimeError):
+    """submit() refused: the queue is full under the 'reject' policy (or
+    'block' with no worker running to ever free space)."""
+
+
+class ServiceStopped(RuntimeError):
+    """The service shut down: raised by submissions after stop() and by
+    futures whose queued request was cancelled by stop(drain=False)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,9 +84,109 @@ class ServiceResponse:
     report: RunReport
 
 
+class ServiceFuture:
+    """Handle for one worker-loop submission — what async ``submit`` returns.
+
+    ``result(timeout)`` blocks until the request is served and returns its
+    :class:`ServiceResponse`; it re-raises the request's exception if the
+    run failed or the service dropped it (:class:`ServiceStopped`).
+    """
+
+    def __init__(self, ticket: int):
+        self.ticket = ticket
+        self._done = threading.Event()
+        self._response: ServiceResponse | None = None
+        self._exception: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: "float | None" = None) -> ServiceResponse:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.ticket} not served within {timeout}s")
+        if self._exception is not None:
+            raise self._exception
+        return self._response
+
+    def exception(self, timeout: "float | None" = None) -> "BaseException | None":
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.ticket} not served within {timeout}s")
+        return self._exception
+
+    def _resolve(self, response: ServiceResponse) -> None:
+        self._response = response
+        self._done.set()
+
+    def _reject(self, exc: BaseException) -> None:
+        self._exception = exc
+        self._done.set()
+
+
+@dataclasses.dataclass
+class _WorkItem:
+    """One admitted worker-loop request moving through the pipeline."""
+
+    request: ServiceRequest
+    future: ServiceFuture
+    op: Any = None
+    plan: Any = None
+
+
+def _union_seconds(spans: "list[tuple[float, float]]") -> float:
+    """Total covered time of possibly-overlapping (t0, t1) spans."""
+    total = 0.0
+    cur_start = cur_end = None
+    for t0, t1 in sorted(spans):
+        if cur_end is None or t0 > cur_end:
+            if cur_end is not None:
+                total += cur_end - cur_start
+            cur_start, cur_end = t0, t1
+        else:
+            cur_end = max(cur_end, t1)
+    if cur_end is not None:
+        total += cur_end - cur_start
+    return total
+
+
+def _intersection_seconds(
+    a: "list[tuple[float, float]]", b: "list[tuple[float, float]]"
+) -> float:
+    """Total time spans from ``a`` and ``b`` ran simultaneously. Each list is
+    internally non-overlapping (one pipeline thread produced each), so a
+    two-pointer sweep is exact."""
+    a, b = sorted(a), sorted(b)
+    i = j = 0
+    total = 0.0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if hi > lo:
+            total += hi - lo
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
 @dataclasses.dataclass
 class ServiceStats:
-    """Aggregate throughput accounting across every drain so far."""
+    """Aggregate serving counters across the service's lifetime, both modes.
+
+    Timing semantics (the ``to_dict()`` schema):
+
+    - ``wall_seconds`` — observable serving window. Batch mode: summed
+      ``drain()`` wall time (unchanged from PR 2). Worker mode: first
+      admission -> latest completion, so idle time between bursts counts —
+      it is the denominator of sustained ``requests_per_second``.
+    - ``busy_seconds`` — time at least one pipeline stage was doing work
+      (union of compile-stage and execute-stage spans; equals wall time in
+      batch mode, where drain() is always busy). ``wall - busy`` is idle.
+    - ``overlap_seconds`` — time the compile stage of one plan-key group ran
+      simultaneously with the execute stage of another;
+      ``overlap_ratio = overlap_seconds / total compile-stage seconds`` is
+      the fraction of compile time hidden under execution (0 in batch mode).
+    """
 
     requests: int = 0
     batches: int = 0
@@ -60,7 +195,14 @@ class ServiceStats:
     compiles: int = 0
     compile_seconds: float = 0.0
     run_seconds: float = 0.0  # steady-state execution seconds (compile excluded)
-    wall_seconds: float = 0.0  # end-to-end drain wall time
+    wall_seconds: float = 0.0  # serving window (see class docstring)
+    busy_seconds: float = 0.0  # >=1 pipeline stage active (see class docstring)
+    queue_depth_hwm: int = 0  # high-water mark of the admission queue
+    rejected: int = 0  # admission-control rejections
+    cancelled: int = 0  # queued requests dropped by stop(drain=False)
+    errors: int = 0  # requests whose plan/execute raised
+    overlap_seconds: float = 0.0
+    overlap_ratio: float = 0.0
 
     @property
     def requests_per_second(self) -> float:
@@ -81,29 +223,112 @@ class ServiceStats:
             "compile_seconds": self.compile_seconds,
             "run_seconds": self.run_seconds,
             "wall_seconds": self.wall_seconds,
+            "busy_seconds": self.busy_seconds,
+            "queue_depth_hwm": self.queue_depth_hwm,
+            "rejected": self.rejected,
+            "cancelled": self.cancelled,
+            "errors": self.errors,
+            "overlap_seconds": self.overlap_seconds,
+            "overlap_ratio": self.overlap_ratio,
             "requests_per_second": self.requests_per_second,
             "amortization": self.amortization,
         }
 
 
 class EngineService:
-    """Synchronous batched front-end over the plan/compile/execute pipeline."""
+    """Serving front-end over the plan/compile/execute pipeline.
+
+    Constructed services are in batch mode; ``start()`` switches to the
+    worker loop (module docstring). Admission-control and QoS knobs apply to
+    both modes; ``batch_window`` is the micro-batching window — after the
+    first request of a burst arrives, the worker waits this long before
+    snapshotting the queue so bursts group into fewer, larger plan-key
+    groups; ``pipeline_depth`` bounds the compiled-group queue between the
+    two stages (backpressure on the compile thread).
+    """
 
     def __init__(
         self,
         cache: PlanCache | None = None,
         substrate: "Substrate | str" = "local",
         autotune: bool = False,
+        *,
+        max_queue_depth: "int | None" = None,
+        admission: str = "block",
+        qos: "dict[str, float] | None" = None,
+        batch_window: float = 0.0,
+        pipeline_depth: int = 2,
     ):
+        if admission not in ("block", "reject"):
+            raise ValueError(
+                f"admission must be 'block' or 'reject', got {admission!r}"
+            )
         self.cache = cache if cache is not None else PlanCache()
         self.default_substrate = substrate
         self.autotune = autotune
+        self.max_queue_depth = max_queue_depth
+        self.admission = admission
+        # validate weights here: a bad value must fail the constructor, not
+        # the scheduler inside the worker thread
+        self.qos = {name: float(weight) for name, weight in (qos or {}).items()}
+        self.batch_window = batch_window
+        self.pipeline_depth = max(1, pipeline_depth)
         self._pending: list[ServiceRequest] = []
         self._next_ticket = 0
         self._stats = ServiceStats()
+        # worker-loop state: one lock, three conditions on it
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)  # worker: items arrived
+        self._space = threading.Condition(self._lock)  # submitters: space freed
+        self._idle = threading.Condition(self._lock)  # flush(): all resolved
+        self._queue: deque[_WorkItem] = deque()
+        self._inflight = 0  # admitted worker requests not yet resolved
+        self._running = False
+        self._stopping = False
+        self._threads: list[threading.Thread] = []
+        self._exec_queue: queue_mod.Queue = queue_mod.Queue(maxsize=self.pipeline_depth)
+        self._compile_spans: list[tuple[float, float]] = []
+        self._exec_spans: list[tuple[float, float]] = []
+        # long-run safety: spans periodically fold into these accumulators so
+        # a service alive for millions of requests stays O(1) in memory
+        self._overlap_acc = 0.0
+        self._busy_acc = 0.0
+        self._compile_busy_acc = 0.0
+        self._drain_wall = 0.0
+        self._t_first: "float | None" = None
+        self._t_last: "float | None" = None
 
     def __len__(self) -> int:
-        return len(self._pending)
+        """Unserved requests: batch-pending plus worker-admitted in flight."""
+        with self._lock:
+            return len(self._pending) + self._inflight
+
+    # -- admission -------------------------------------------------------------
+
+    def qos_weight(self, op_name: str) -> float:
+        return float(self.qos.get(op_name, 1.0))
+
+    def _admit_locked(self) -> None:
+        if self._stopping:
+            raise ServiceStopped("service stopped; no new submissions")
+        if self.max_queue_depth is None:
+            return
+        while (
+            len(self._queue) if self._running else len(self._pending)
+        ) >= self.max_queue_depth:
+            if self.admission == "reject" or not self._running:
+                self._stats.rejected += 1
+                reason = (
+                    "policy is 'reject'"
+                    if self.admission == "reject"
+                    else "'block' needs a running worker to free space; call start()"
+                )
+                raise AdmissionError(
+                    f"queue full ({self.max_queue_depth} requests); {reason}"
+                )
+            self._space.wait(timeout=0.1)
+            if self._stopping:
+                raise ServiceStopped("service stopped while blocked on admission")
 
     def submit(
         self,
@@ -111,77 +336,356 @@ class EngineService:
         inputs: Any,
         strategy: "MigratoryStrategy | str | None" = None,
         substrate: "Substrate | str | None" = None,
-    ) -> int:
-        """Enqueue one request; returns its ticket (the drain-response id)."""
-        ticket = self._next_ticket
-        self._next_ticket += 1
+    ) -> "int | ServiceFuture":
+        """Enqueue one request. Batch mode returns its int ticket (serve via
+        ``drain()``); worker-loop mode returns a :class:`ServiceFuture`.
+        Full queues block or raise per the admission policy."""
         if strategy is None and self.autotune:
             strategy = "auto"
-        self._pending.append(
-            ServiceRequest(
+        with self._lock:
+            self._admit_locked()
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            req = ServiceRequest(
                 ticket=ticket,
                 op=op,
                 inputs=inputs,
                 strategy=strategy,
                 substrate=substrate if substrate is not None else self.default_substrate,
             )
-        )
-        return ticket
+            if self._running:
+                future = ServiceFuture(ticket)
+                self._queue.append(_WorkItem(req, future))
+                self._inflight += 1
+                if self._t_first is None:
+                    self._t_first = time.perf_counter()
+                self._stats.queue_depth_hwm = max(
+                    self._stats.queue_depth_hwm, len(self._queue)
+                )
+                self._work.notify()
+                return future
+            self._pending.append(req)
+            self._stats.queue_depth_hwm = max(
+                self._stats.queue_depth_hwm, len(self._pending)
+            )
+            return ticket
 
-    def drain(self) -> list[ServiceResponse]:
-        """Run every pending request, batching same-plan-key requests so each
-        batch compiles at most once. Responses in submission order."""
-        pending, self._pending = self._pending, []
+    # -- lifecycle -------------------------------------------------------------
+
+    def start(self) -> "EngineService":
+        """Spawn the worker loop; subsequent ``submit()`` calls return
+        futures. Restartable after ``stop()``."""
+        with self._lock:
+            if self._running:
+                raise RuntimeError("service already started")
+            if self._pending:
+                raise RuntimeError(
+                    "drain() pending batch-mode requests before start()"
+                )
+            self._running = True
+            self._stopping = False
+            self._exec_queue = queue_mod.Queue(maxsize=self.pipeline_depth)
+            self._threads = [
+                threading.Thread(
+                    target=self._worker_loop, name="engine-service-compile", daemon=True
+                ),
+                threading.Thread(
+                    target=self._execute_loop, name="engine-service-execute", daemon=True
+                ),
+            ]
+            threads = list(self._threads)
+        for t in threads:
+            t.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: "float | None" = None) -> None:
+        """Graceful shutdown. ``drain=True`` serves everything already
+        admitted first; ``drain=False`` cancels still-queued requests (their
+        futures raise :class:`ServiceStopped`; groups already in the
+        pipeline complete). Idempotent; ``start()`` again to restart. If
+        ``timeout`` expires with workers still running, raises TimeoutError
+        and leaves the service in the stopping state — call ``stop()``
+        again; it never marks a still-running service as stopped."""
+        with self._lock:
+            if not self._running:
+                return
+            self._stopping = True
+            if not drain:
+                while self._queue:
+                    item = self._queue.popleft()
+                    item.future._reject(
+                        ServiceStopped("service stopped before this request ran")
+                    )
+                    self._inflight -= 1
+                    self._stats.cancelled += 1
+                self._idle.notify_all()
+            self._work.notify_all()
+            self._space.notify_all()
+            threads = list(self._threads)
+        for t in threads:
+            t.join(timeout)
+        alive = [t.name for t in threads if t.is_alive()]
+        if alive:
+            # a later start() must not spawn a second pipeline racing this one
+            raise TimeoutError(
+                f"stop() timed out with worker thread(s) still running: {alive}; "
+                "call stop() again"
+            )
+        with self._lock:
+            self._running = False
+            self._threads = []
+            # _stopping stays True: submit() after stop raises ServiceStopped
+            # until start() is called again.
+
+    def __enter__(self) -> "EngineService":
+        return self.start()
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop()
+
+    def flush(self, timeout: "float | None" = None) -> None:
+        """Block until every admitted worker-loop request has resolved."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while self._queue or self._inflight:
+                if deadline is not None and time.monotonic() >= deadline:
+                    raise TimeoutError("flush timed out with work still in flight")
+                self._idle.wait(timeout=0.1)
+
+    # -- the pipeline ----------------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        """Stage-1 thread: snapshot the queue, schedule plan-key groups by
+        QoS, run each group's compile call, feed the execute stage."""
+        try:
+            while True:
+                with self._lock:
+                    while not self._queue and not self._stopping:
+                        self._work.wait(timeout=0.1)
+                    if not self._queue:
+                        if self._stopping:
+                            break
+                        continue
+                if self.batch_window > 0:
+                    time.sleep(self.batch_window)  # let the burst accumulate
+                with self._lock:
+                    snapshot = list(self._queue)
+                    self._queue.clear()
+                    self._space.notify_all()
+                try:
+                    dispatched: set[int] = set()
+                    for group in self._plan_groups(snapshot):
+                        self._compile_group(group)
+                        self._exec_queue.put(group)  # bounded: backpressure
+                        dispatched.update(id(item) for item in group)
+                except Exception as exc:
+                    # defensive: a scheduler bug must not strand futures —
+                    # reject the snapshot's undispatched requests (the
+                    # execute stage owns the dispatched ones) and keep going
+                    for item in snapshot:
+                        if id(item) not in dispatched and not item.future.done():
+                            self._finish_error(item, exc)
+        finally:
+            self._exec_queue.put(_STOP)
+
+    def _execute_loop(self) -> None:
+        """Stage-2 thread: serve each group's remaining (cache-hit) calls
+        while the compile thread works on the next group."""
+        while True:
+            group = self._exec_queue.get()
+            if group is _STOP:
+                return
+            rest = group[1:]
+            if not rest:
+                continue
+            t0 = time.perf_counter()
+            for item in rest:
+                self._run_item(item)
+            t1 = time.perf_counter()
+            with self._lock:
+                self._exec_spans.append((t0, t1))
+                self._note_span_end_locked(t1)
+                self._maybe_fold_spans_locked()
+
+    def _plan_groups(self, items: "list[_WorkItem]") -> "list[list[_WorkItem]]":
+        """The scheduler: bind every request's plan, group by compiled-plan
+        key, order groups by QoS weight (higher first) then arrival."""
+        groups: dict[Any, list[_WorkItem]] = {}
+        auto_memo: dict[tuple, Any] = {}
+        for item in items:
+            req = item.request
+            try:
+                op = resolve_op(req.op)
+                strategy = req.strategy
+                if isinstance(strategy, str) and strategy == "auto":
+                    memo_key = (op.name, id(req.inputs))
+                    if memo_key not in auto_memo:
+                        from .autotune import choose_strategy
+
+                        auto_memo[memo_key] = choose_strategy(op, req.inputs)
+                    strategy = auto_memo[memo_key]
+                plan = build_plan(op, req.inputs, strategy, req.substrate)
+            except Exception as exc:  # plan failures resolve that future only
+                self._finish_error(item, exc)
+                continue
+            item.op, item.plan = op, plan
+            gkey = plan.key if plan.key is not None else ("__unkeyed__", req.ticket)
+            groups.setdefault(gkey, []).append(item)
+        return sorted(
+            groups.values(),
+            key=lambda g: (-self.qos_weight(g[0].op.name), g[0].request.ticket),
+        )
+
+    def _compile_group(self, group: "list[_WorkItem]") -> None:
+        """Pipeline compile stage: the group's first request runs its
+        (possibly compiling) call; the group's later members are cache hits
+        by construction and run in the execute stage."""
+        t0 = time.perf_counter()
+        self._run_item(group[0])
+        t1 = time.perf_counter()
+        with self._lock:
+            self._compile_spans.append((t0, t1))
+            self._note_span_end_locked(t1)
+            self._stats.batches += 1
+            self._maybe_fold_spans_locked()
+
+    def _note_span_end_locked(self, t1: float) -> None:
+        """Extend the wall window to the span end: _run_item stamped _t_last
+        before the span closed, and busy (span union) must stay <= wall."""
+        if self._t_last is None or t1 > self._t_last:
+            self._t_last = t1
+
+    _SPAN_FOLD_THRESHOLD = 8192
+
+    def _maybe_fold_spans_locked(self) -> None:
+        """Fold recorded spans into scalar accumulators once the buffers grow
+        large, bounding memory and stats() cost for long-lived services (at
+        the cost of ignoring overlap straddling a fold boundary — one group
+        out of thousands)."""
+        if len(self._compile_spans) + len(self._exec_spans) <= self._SPAN_FOLD_THRESHOLD:
+            return
+        self._overlap_acc += _intersection_seconds(self._compile_spans, self._exec_spans)
+        self._busy_acc += _union_seconds(self._compile_spans + self._exec_spans)
+        self._compile_busy_acc += sum(t1 - t0 for t0, t1 in self._compile_spans)
+        self._compile_spans.clear()
+        self._exec_spans.clear()
+
+    def _run_item(self, item: _WorkItem) -> None:
+        try:
+            result, report = single_call(item.plan, item.op, cache=self.cache)
+        except Exception as exc:
+            self._finish_error(item, exc)
+            return
+        item.future._resolve(ServiceResponse(item.request.ticket, result, report))
+        with self._lock:
+            self._account_locked(report)
+            self._finish_locked()
+
+    def _finish_error(self, item: _WorkItem, exc: BaseException) -> None:
+        item.future._reject(exc)
+        with self._lock:
+            self._stats.errors += 1
+            self._finish_locked()
+
+    def _finish_locked(self) -> None:
+        self._inflight -= 1
+        self._t_last = time.perf_counter()
+        self._idle.notify_all()
+
+    def _account_locked(self, report: RunReport) -> None:
+        self._stats.requests += 1
+        self._stats.cache_hits += int(report.cache_hit)
+        self._stats.compiles += int(not report.cache_hit)
+        self._stats.compile_seconds += report.compile_seconds
+        # a cold request's single timed call IS the compile call;
+        # count only its steady-state remainder as run time
+        self._stats.run_seconds += report.seconds - report.compile_seconds
+
+    # -- batch mode ------------------------------------------------------------
+
+    def drain(self) -> "list[ServiceResponse]":
+        """Batch mode: run every pending request, batching same-plan-key
+        requests so each batch compiles at most once. Responses in
+        submission order. In worker-loop mode use the futures (or
+        ``flush()``) instead."""
+        with self._lock:
+            if self._running:
+                raise RuntimeError(
+                    "drain() is the batch-mode API; the worker loop is running — "
+                    "use the futures returned by submit(), or flush()"
+                )
+            pending, self._pending = self._pending, []
         if not pending:
             return []
         t_wall = time.perf_counter()
-        # stage 1 for every request: build plans, group by cache key
-        built = []
-        groups: dict[Any, list[int]] = {}
-        # "auto" memo: requests sharing the exact same inputs object resolve
-        # the cost model once (strategy choice is value-dependent, so the
-        # memo is keyed on object identity, valid for this drain's lifetime)
-        auto_memo: dict[tuple, Any] = {}
-        for i, req in enumerate(pending):
-            op = resolve_op(req.op)
-            strategy = req.strategy
-            if isinstance(strategy, str) and strategy == "auto":
-                memo_key = (op.name, id(req.inputs))
-                if memo_key not in auto_memo:
-                    from .autotune import choose_strategy
-
-                    auto_memo[memo_key] = choose_strategy(op, req.inputs)
-                strategy = auto_memo[memo_key]
-            plan = build_plan(op, req.inputs, strategy, req.substrate)
-            built.append((req, op, plan))
-            # keyless plans get singleton groups (ticket-unique key)
-            gkey = plan.key if plan.key is not None else ("__unkeyed__", req.ticket)
-            groups.setdefault(gkey, []).append(i)
-        # stages 2+3 per group: first request compiles, the rest reuse
-        responses: list[ServiceResponse] = []
-        for members in groups.values():
-            for i in members:
-                req, op, plan = built[i]
-                result, report = run_plan(
-                    plan, op, iters=1, warmup=0, cache=self.cache
-                )
-                responses.append(ServiceResponse(req.ticket, result, report))
-                self._stats.requests += 1
-                self._stats.cache_hits += int(report.cache_hit)
-                self._stats.compiles += int(not report.cache_hit)
-                self._stats.compile_seconds += report.compile_seconds
-                # a cold request's single timed call IS the compile call;
-                # count only its steady-state remainder as run time
-                self._stats.run_seconds += report.seconds - report.compile_seconds
-        self._stats.batches += len(groups)
-        self._stats.drains += 1
-        self._stats.wall_seconds += time.perf_counter() - t_wall
+        items = [
+            _WorkItem(req, ServiceFuture(req.ticket)) for req in pending
+        ]
+        with self._lock:
+            self._inflight += len(items)  # balanced by _finish_locked per item
+        try:
+            groups = self._plan_groups(items)
+            # fail fast, like the pre-worker-loop drain: a plan that would
+            # not bind raises before any group spends compile/execute time
+            bad = next(
+                (i for i in items if i.future._exception is not None), None
+            )
+            if bad is not None:
+                raise bad.future._exception
+            responses: list[ServiceResponse] = []
+            for group in groups:
+                with self._lock:
+                    self._stats.batches += 1
+                for item in group:
+                    self._run_item(item)
+                    if item.future._exception is not None:
+                        raise item.future._exception
+                    responses.append(item.future._response)
+        finally:
+            with self._lock:
+                # items skipped by a fail-fast raise never reached
+                # _finish_locked; balance their admission count
+                for item in items:
+                    if not item.future.done():
+                        self._inflight -= 1
+                self._stats.drains += 1
+                self._drain_wall += time.perf_counter() - t_wall
         responses.sort(key=lambda r: r.ticket)
         return responses
 
+    # -- reporting -------------------------------------------------------------
+
     def stats(self) -> ServiceStats:
-        return self._stats
+        """A snapshot of the aggregate counters with the timing/overlap
+        fields recomputed from the recorded stage spans (see
+        :class:`ServiceStats` for semantics). Each call returns a fresh
+        object — safe to keep for before/after comparisons."""
+        with self._lock:
+            worker_wall = (
+                self._t_last - self._t_first
+                if self._t_first is not None and self._t_last is not None
+                else 0.0
+            )
+            overlap_seconds = self._overlap_acc + _intersection_seconds(
+                self._compile_spans, self._exec_spans
+            )
+            compile_busy = self._compile_busy_acc + sum(
+                t1 - t0 for t0, t1 in self._compile_spans
+            )
+            return dataclasses.replace(
+                self._stats,
+                wall_seconds=self._drain_wall + max(0.0, worker_wall),
+                busy_seconds=(
+                    self._drain_wall
+                    + self._busy_acc
+                    + _union_seconds(self._compile_spans + self._exec_spans)
+                ),
+                overlap_seconds=overlap_seconds,
+                overlap_ratio=(
+                    overlap_seconds / compile_busy if compile_busy > 0 else 0.0
+                ),
+            )
 
     def throughput_report(self) -> dict[str, Any]:
         """Aggregate record: service counters + plan-cache health."""
-        return {**self._stats.to_dict(), "cache": self.cache.stats()}
+        return {**self.stats().to_dict(), "cache": self.cache.stats()}

@@ -5,11 +5,19 @@ LM decode path: prefill a batch of prompts, then greedy-decode.
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --reduced \
         --batch 4 --prompt-len 64 --gen 32
 
-Irregular-op path: drive a batched ``EngineService`` with a mixed SpMV/BFS
-request stream (autotuned strategies, shared compiled-plan cache) and print
-the aggregate throughput report — the engine's production-serving smoke.
+Irregular-op path: drive an ``EngineService`` with a mixed SpMV/BFS request
+stream (autotuned strategies, shared compiled-plan cache) and print the
+aggregate throughput report — the engine's production-serving smoke.
+``--ops`` uses the batched drain; ``--ops-async`` starts the worker loop and
+feeds it from a synthetic *open-loop* traffic generator (requests arrive at
+``--ops-rate`` req/s with jitter, independent of service progress — the
+arrival process of real serving), exercising admission control
+(``--ops-admission block|reject``), QoS weighting, and the overlapped
+compile/execute pipeline.
 
     PYTHONPATH=src python -m repro.launch.serve --ops --ops-requests 32
+    PYTHONPATH=src python -m repro.launch.serve --ops-async --ops-rate 100 \
+        --ops-requests 64 --ops-admission reject
 """
 from __future__ import annotations
 
@@ -24,34 +32,43 @@ from ..configs import get_config, reduced_config
 from ..models import Ctx, api
 
 
-def ops_demo(n_requests: int, shapes: tuple[int, ...] = (16, 24), seed: int = 0) -> dict:
-    """Serve a mixed irregular-op workload through the batched EngineService.
-
-    Requests rotate over a few problem signatures, so each drain compiles
-    once per signature and serves the rest from the plan cache.
-    """
+def _ops_workload(shapes: tuple[int, ...], seed: int):
+    """The demo's rotating problem signatures (SpMV pool + one BFS graph)."""
     import numpy as np
 
-    from ..engine import BFSInputs, EngineService, SpMVInputs
+    from ..core import partition_ell
+    from ..engine import BFSInputs, SpMVInputs
     from ..sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, partition_graph
 
     rng = np.random.default_rng(seed)
     spmv_pool = []
     for n in shapes:
-        from ..core import partition_ell
-
         a = laplacian_2d(n)
         x = jnp.asarray(rng.standard_normal(n * n).astype(np.float32))
         spmv_pool.append(SpMVInputs(partition_ell(a, 8), x))
     g = edges_to_csr(erdos_renyi_edges(9, 6, seed=seed), 512)
     bfs_inputs = BFSInputs(partition_graph(g, 8), 0)
 
+    def pick(i: int):
+        if i % 3 == 2:
+            return "bfs", bfs_inputs
+        return "spmv", spmv_pool[i % len(spmv_pool)]
+
+    return pick
+
+
+def ops_demo(n_requests: int, shapes: tuple[int, ...] = (16, 24), seed: int = 0) -> dict:
+    """Serve a mixed irregular-op workload through the batched EngineService.
+
+    Requests rotate over a few problem signatures, so each drain compiles
+    once per signature and serves the rest from the plan cache.
+    """
+    from ..engine import EngineService
+
+    pick = _ops_workload(shapes, seed)
     svc = EngineService(autotune=True)
     for i in range(n_requests):
-        if i % 3 == 2:
-            svc.submit("bfs", bfs_inputs)
-        else:
-            svc.submit("spmv", spmv_pool[i % len(spmv_pool)])
+        svc.submit(*pick(i))
     responses = svc.drain()
     report = svc.throughput_report()
     stats = svc.stats()
@@ -60,6 +77,61 @@ def ops_demo(n_requests: int, shapes: tuple[int, ...] = (16, 24), seed: int = 0)
     print(f"compiles: {stats.compiles} ({stats.compile_seconds*1e3:.0f} ms), "
           f"cache hits: {stats.cache_hits}, "
           f"amortization: {stats.amortization:.1f} req/compile")
+    print(json.dumps(report, default=str))
+    return report
+
+
+def ops_demo_async(
+    n_requests: int,
+    rate: float = 100.0,
+    admission: str = "block",
+    max_queue_depth: int = 64,
+    shapes: tuple[int, ...] = (16, 24),
+    seed: int = 0,
+) -> dict:
+    """Open-loop async serving demo: a synthetic traffic generator submits at
+    ``rate`` req/s (jittered, never waiting for responses — open loop) while
+    the worker pipeline overlaps compiles with execution. BFS requests get a
+    2x QoS weight, so mixed bursts schedule BFS groups first."""
+    import numpy as np
+
+    from ..engine import AdmissionError, EngineService
+
+    pick = _ops_workload(shapes, seed)
+    rng = np.random.default_rng(seed)
+    interval = 1.0 / rate if rate > 0 else 0.0
+    svc = EngineService(
+        autotune=True,
+        max_queue_depth=max_queue_depth,
+        admission=admission,
+        qos={"bfs": 2.0},
+        batch_window=0.02,
+    )
+    svc.start()
+    futures = []
+    try:
+        for i in range(n_requests):
+            try:
+                futures.append(svc.submit(*pick(i)))
+            except AdmissionError:
+                pass  # open loop drops on the floor; counted in stats.rejected
+            if interval:
+                time.sleep(interval * (0.5 + rng.random()))  # jittered arrivals
+        responses = [f.result(timeout=600) for f in futures]
+    finally:
+        svc.stop()
+    report = svc.throughput_report()
+    stats = svc.stats()
+    print(f"served {len(responses)}/{n_requests} requests "
+          f"({stats.rejected} rejected) in {stats.wall_seconds*1e3:.0f} ms "
+          f"({stats.requests_per_second:.0f} req/s sustained)")
+    print(f"compiles: {stats.compiles} ({stats.compile_seconds*1e3:.0f} ms), "
+          f"cache hits: {stats.cache_hits}, "
+          f"amortization: {stats.amortization:.1f} req/compile")
+    print(f"overlap: {stats.overlap_seconds*1e3:.0f} ms "
+          f"({stats.overlap_ratio:.0%} of compile time hidden under execution), "
+          f"busy {stats.busy_seconds*1e3:.0f} / wall {stats.wall_seconds*1e3:.0f} ms, "
+          f"queue hwm {stats.queue_depth_hwm}")
     print(json.dumps(report, default=str))
     return report
 
@@ -73,10 +145,20 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--ops", action="store_true",
-                    help="serve an irregular-op stream via EngineService")
+                    help="serve an irregular-op stream via EngineService (batched drain)")
+    ap.add_argument("--ops-async", action="store_true",
+                    help="serve an open-loop irregular-op stream via the async worker loop")
     ap.add_argument("--ops-requests", type=int, default=24)
+    ap.add_argument("--ops-rate", type=float, default=100.0,
+                    help="open-loop arrival rate (req/s) for --ops-async")
+    ap.add_argument("--ops-admission", choices=("block", "reject"), default="block",
+                    help="admission policy when the async queue is full")
     args = ap.parse_args(argv)
 
+    if args.ops_async:
+        ops_demo_async(args.ops_requests, rate=args.ops_rate,
+                       admission=args.ops_admission)
+        return
     if args.ops:
         ops_demo(args.ops_requests)
         return

@@ -129,9 +129,25 @@ def test_throughput_report_schema(spmv_inputs):
     report = svc.throughput_report()
     for key in (
         "requests", "batches", "drains", "cache_hits", "compiles",
-        "compile_seconds", "run_seconds", "wall_seconds",
+        "compile_seconds", "run_seconds", "wall_seconds", "busy_seconds",
+        "queue_depth_hwm", "rejected", "cancelled", "errors",
+        "overlap_seconds", "overlap_ratio",
         "requests_per_second", "amortization", "cache",
     ):
         assert key in report, key
     assert report["requests"] == 1
     assert report["cache"]["entries"] == 1
+
+
+def test_drain_mode_wall_equals_busy(spmv_inputs):
+    """Batch drains are single-stream: the drain wall is fully busy and no
+    compile/execute overlap is possible."""
+    svc = EngineService()
+    svc.submit("spmv", spmv_inputs)
+    svc.submit("spmv", spmv_inputs)
+    svc.drain()
+    stats = svc.stats()
+    assert stats.wall_seconds > 0
+    assert stats.busy_seconds == pytest.approx(stats.wall_seconds)
+    assert stats.overlap_seconds == 0.0
+    assert stats.overlap_ratio == 0.0

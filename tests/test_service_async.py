@@ -1,0 +1,295 @@
+"""Async EngineService: worker-loop parity under concurrent submission,
+admission control, QoS scheduling, lifecycle, and the wall/busy/overlap
+stats schema.
+
+ISSUE 3 acceptance: concurrent submissions across all 3 ops return
+bit-identical results to sequential ``engine.run`` regardless of submission
+order; bounded queues reject deterministically; shutdown with pending work
+is clean.
+"""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Comm, MigratoryStrategy, Scheme, bucketize, \
+    generate_alignment_pair, partition_ell, pick_grid
+from repro.engine import (
+    AdmissionError,
+    BFSInputs,
+    EngineService,
+    GSANAInputs,
+    PlanCache,
+    ServiceFuture,
+    ServiceStopped,
+    SpMVInputs,
+    run,
+)
+from repro.engine.service import ServiceRequest, _WorkItem
+from repro.sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, partition_graph
+
+
+@pytest.fixture(scope="module")
+def spmv_inputs():
+    a = laplacian_2d(12)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(144).astype(np.float32))
+    return SpMVInputs(partition_ell(a, 8), x)
+
+
+@pytest.fixture(scope="module")
+def bfs_inputs():
+    g = edges_to_csr(erdos_renyi_edges(8, 6, seed=2), 256)
+    return BFSInputs(partition_graph(g, 8), 3)
+
+
+@pytest.fixture(scope="module")
+def gsana_inputs():
+    vs1, vs2, pi = generate_alignment_pair(192, seed=11)
+    grid = pick_grid(192, 32)
+    cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+    return GSANAInputs(
+        vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+    )
+
+
+def _signatures(spmv_inputs, bfs_inputs, gsana_inputs):
+    """The mixed-op request signatures every async test rotates over."""
+    return [
+        ("spmv", spmv_inputs, MigratoryStrategy()),
+        ("spmv", spmv_inputs, MigratoryStrategy(replicate_x=False)),
+        ("bfs", bfs_inputs, MigratoryStrategy(comm=Comm.MIGRATE)),
+        ("bfs", bfs_inputs, MigratoryStrategy(comm=Comm.REMOTE_WRITE)),
+        ("gsana", gsana_inputs, MigratoryStrategy(scheme=Scheme.PAIR)),
+    ]
+
+
+def _assert_same_result(got, want):
+    if isinstance(want, tuple):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_concurrent_mixed_submissions_bit_identical(
+    spmv_inputs, bfs_inputs, gsana_inputs
+):
+    """The acceptance parity: many threads submitting mixed SpMV/BFS/GSANA
+    concurrently get bit-identical results to sequential engine.run, in any
+    submission order."""
+    signatures = _signatures(spmv_inputs, bfs_inputs, gsana_inputs)
+    requests = [signatures[i % len(signatures)] for i in range(20)]
+    svc = EngineService()
+    svc.start()
+    futures: dict[int, ServiceFuture] = {}
+
+    def submitter(idx_chunk):
+        for idx in idx_chunk:
+            op, inputs, st = requests[idx]
+            futures[idx] = svc.submit(op, inputs, st)
+
+    # 4 threads, interleaved index chunks -> scrambled submission order
+    threads = [
+        threading.Thread(target=submitter, args=(range(t, len(requests), 4),))
+        for t in range(4)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    responses = {idx: fut.result(timeout=600) for idx, fut in futures.items()}
+    svc.stop()
+
+    seq_cache = PlanCache()
+    expected = {}
+    for op, inputs, st in signatures:
+        result, _ = run(op, inputs, st, "local", iters=1, warmup=0, cache=seq_cache)
+        expected[(op, id(inputs), st)] = result
+    for idx, (op, inputs, st) in enumerate(requests):
+        _assert_same_result(responses[idx].result, expected[(op, id(inputs), st)])
+
+    stats = svc.stats()
+    assert stats.requests == len(requests)
+    assert stats.compiles == len(signatures)  # one compile per plan key
+    assert stats.cache_hits == len(requests) - len(signatures)
+    assert stats.errors == 0 and stats.rejected == 0
+
+
+def test_futures_resolve_and_len_drops(spmv_inputs):
+    svc = EngineService()
+    svc.start()
+    fut = svc.submit("spmv", spmv_inputs)
+    assert isinstance(fut, ServiceFuture)
+    resp = fut.result(timeout=300)
+    assert fut.done() and fut.exception() is None
+    assert resp.ticket == fut.ticket
+    svc.flush(timeout=60)
+    assert len(svc) == 0
+    svc.stop()
+
+
+def test_admission_reject_bounded_queue(spmv_inputs):
+    """Deterministic rejection: batch mode never consumes, so the third
+    submit must bounce off the depth-2 queue."""
+    svc = EngineService(max_queue_depth=2, admission="reject")
+    svc.submit("spmv", spmv_inputs)
+    svc.submit("spmv", spmv_inputs)
+    with pytest.raises(AdmissionError, match="reject"):
+        svc.submit("spmv", spmv_inputs)
+    stats = svc.stats()
+    assert stats.rejected == 1
+    assert stats.queue_depth_hwm == 2
+    assert len(svc.drain()) == 2
+
+
+def test_admission_block_without_worker_raises(spmv_inputs):
+    """'block' with no worker would deadlock, so it degrades to a
+    rejection that tells the caller to start()."""
+    svc = EngineService(max_queue_depth=1, admission="block")
+    svc.submit("spmv", spmv_inputs)
+    with pytest.raises(AdmissionError, match="start"):
+        svc.submit("spmv", spmv_inputs)
+    svc.drain()
+
+
+def test_admission_block_backpressure_serves_everything(spmv_inputs):
+    """With a running worker, 'block' applies backpressure instead of
+    dropping: every submission eventually lands."""
+    svc = EngineService(max_queue_depth=1, admission="block")
+    svc.start()
+    futures = [svc.submit("spmv", spmv_inputs) for _ in range(6)]
+    responses = [f.result(timeout=300) for f in futures]
+    svc.stop()
+    stats = svc.stats()
+    assert len(responses) == 6
+    assert stats.rejected == 0
+    assert stats.queue_depth_hwm == 1  # the bound held
+
+
+def test_stop_drains_pending_work(spmv_inputs, bfs_inputs):
+    """Clean shutdown with pending work: stop(drain=True) serves everything
+    already admitted before the workers exit."""
+    svc = EngineService(batch_window=0.2)
+    svc.start()
+    futures = [
+        svc.submit(*(("bfs", bfs_inputs) if i % 3 == 2 else ("spmv", spmv_inputs)))
+        for i in range(9)
+    ]
+    svc.stop()  # drain=True default; returns only after the queue is served
+    assert all(f.done() for f in futures)
+    assert all(f.exception() is None for f in futures)
+    assert svc.stats().requests == 9
+    with pytest.raises(ServiceStopped):
+        svc.submit("spmv", spmv_inputs)
+
+
+def test_stop_nodrain_cancels_queued(spmv_inputs):
+    """stop(drain=False) rejects still-queued futures with ServiceStopped
+    instead of hanging them."""
+    svc = EngineService(batch_window=0.5)  # worker sleeps before snapshotting
+    svc.start()
+    futures = [svc.submit("spmv", spmv_inputs) for _ in range(6)]
+    svc.stop(drain=False)  # cancels while the worker is still in its window
+    assert all(f.done() for f in futures)
+    cancelled = [f for f in futures if isinstance(f.exception(), ServiceStopped)]
+    assert len(cancelled) == svc.stats().cancelled
+    assert len(cancelled) >= 1
+    with pytest.raises(ServiceStopped):
+        cancelled[0].result(timeout=1)
+
+
+def test_restart_after_stop(spmv_inputs):
+    svc = EngineService()
+    svc.start()
+    svc.submit("spmv", spmv_inputs).result(timeout=300)
+    svc.stop()
+    svc.start()  # restartable
+    resp = svc.submit("spmv", spmv_inputs).result(timeout=300)
+    assert resp.report.cache_hit  # same service cache across restarts
+    svc.stop()
+
+
+def test_drain_is_batch_mode_only(spmv_inputs):
+    svc = EngineService()
+    svc.start()
+    with pytest.raises(RuntimeError, match="batch-mode"):
+        svc.drain()
+    svc.stop()
+
+
+def test_start_with_pending_batch_requests_raises(spmv_inputs):
+    svc = EngineService()
+    svc.submit("spmv", spmv_inputs)
+    with pytest.raises(RuntimeError, match="drain"):
+        svc.start()
+    svc.drain()
+
+
+def test_bad_knobs_fail_at_construction():
+    """Misconfiguration must raise in the constructor, not inside the
+    worker thread where it would strand futures."""
+    with pytest.raises(ValueError):
+        EngineService(qos={"bfs": "high"})
+    with pytest.raises(ValueError, match="admission"):
+        EngineService(admission="drop")
+
+
+def test_qos_orders_groups(spmv_inputs, bfs_inputs):
+    """Higher QoS weight schedules a later-submitted group first; arrival
+    order breaks ties."""
+    svc = EngineService(qos={"bfs": 2.0})
+    items = [
+        _WorkItem(
+            ServiceRequest(t, op, inputs, MigratoryStrategy(), "local"),
+            ServiceFuture(t),
+        )
+        for t, (op, inputs) in enumerate(
+            [("spmv", spmv_inputs), ("bfs", bfs_inputs), ("spmv", spmv_inputs)]
+        )
+    ]
+    groups = svc._plan_groups(items)
+    assert [g[0].op.name for g in groups] == ["bfs", "spmv"]
+    assert [item.request.ticket for item in groups[1]] == [0, 2]
+
+
+def test_worker_stats_wall_busy_overlap_schema(spmv_inputs, bfs_inputs):
+    """wall_seconds is meaningful in worker mode (admission -> completion
+    window), busy_seconds is the union of stage spans inside it, and the
+    to_dict schema carries every documented field."""
+    svc = EngineService(batch_window=0.05)
+    svc.start()
+    futures = [
+        svc.submit(*(("bfs", bfs_inputs) if i % 2 else ("spmv", spmv_inputs)))
+        for i in range(8)
+    ]
+    for f in futures:
+        f.result(timeout=300)
+    svc.stop()
+    stats = svc.stats()
+    assert stats.wall_seconds > 0
+    assert 0 < stats.busy_seconds <= stats.wall_seconds + 1e-6
+    assert stats.overlap_seconds >= 0.0
+    assert stats.overlap_ratio >= 0.0
+    row = stats.to_dict()
+    for key in (
+        "requests", "batches", "drains", "cache_hits", "compiles",
+        "compile_seconds", "run_seconds", "wall_seconds", "busy_seconds",
+        "queue_depth_hwm", "rejected", "cancelled", "errors",
+        "overlap_seconds", "overlap_ratio", "requests_per_second",
+        "amortization",
+    ):
+        assert key in row, key
+
+
+def test_request_error_resolves_future_not_pipeline(spmv_inputs):
+    """A bad request rejects its own future; the pipeline keeps serving."""
+    svc = EngineService()
+    svc.start()
+    bad = svc.submit("no-such-op", spmv_inputs)
+    good = svc.submit("spmv", spmv_inputs)
+    with pytest.raises(ValueError, match="unknown op"):
+        bad.result(timeout=300)
+    assert good.result(timeout=300).report.op == "spmv"
+    svc.stop()
+    assert svc.stats().errors == 1
