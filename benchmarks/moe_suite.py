@@ -1,0 +1,114 @@
+"""MoE dispatch through the engine (ISSUE 4): the fourth MigratoryOp's
+strategy A/B on the local substrate, the autotuner's ``auto`` pick, and an
+async ``EngineService`` serving phase with the value-keyed dedup cache.
+
+Unlike ``moe_dispatch`` (which lowers the full LM MoE sublayer in a
+subprocess and reads collective bytes out of the HLO), this suite runs the
+*engine-served* ``moe_dispatch`` op in-process at quick-friendly sizes:
+every row is a unified RunReport row (modeled traffic = the roofline
+collective-bytes cost model the autotuner ranks), plus a ``service`` row
+carrying the serving stats (dedup hits, latency percentiles). Writes
+``experiments/moe_bench_results.json``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from .util import emit, emit_report
+
+OUT_PATH = Path(__file__).resolve().parents[1] / "experiments" / "moe_bench_results.json"
+
+
+def _scenarios(full: bool, quick: bool):
+    # (name, tokens, d_model, experts, nodelets)
+    if quick:
+        return [
+            ("t128_e16_p8", 128, 32, 16, 8),
+            ("t96_e6_p4_tp", 96, 16, 6, 4),
+        ]
+    if full:
+        return [
+            ("t1024_e16_p8", 1024, 128, 16, 8),
+            ("t2048_e32_p8", 2048, 128, 32, 8),
+            ("t1536_e6_p8_tp", 1536, 96, 6, 8),
+        ]
+    return [
+        ("t256_e16_p8", 256, 64, 16, 8),
+        ("t512_e8_p4", 512, 64, 8, 4),
+        ("t192_e6_p4_tp", 192, 32, 6, 4),
+    ]
+
+
+def run(full: bool = False, quick: bool = False):
+    from repro.engine import (
+        EngineService,
+        MoEDispatchInputs,
+        PlanCache,
+        candidate_grid,
+        choose_strategy,
+    )
+    from repro.engine import run as engine_run
+
+    rows = []
+    rng = np.random.default_rng(0)
+    service_cases = []
+    for name, t, d, e, p in _scenarios(full, quick):
+        inputs = MoEDispatchInputs(
+            x=jnp.asarray(rng.standard_normal((t, d)).astype(np.float32)),
+            router=jnp.asarray(rng.standard_normal((d, e)).astype(np.float32)),
+            nodelets=p,
+        )
+        for st in candidate_grid("moe_dispatch"):
+            _, rep = engine_run("moe_dispatch", inputs, st, "local")
+            rows.append(emit_report(
+                "moe", f"{name}_{st.comm.value}", rep, scenario=name,
+            ))
+        auto = choose_strategy("moe_dispatch", inputs)
+        _, rep = engine_run("moe_dispatch", inputs, "auto", "local")
+        rows.append(emit_report(
+            "moe", f"{name}_auto", rep, scenario=name,
+            auto_comm=auto.comm.value,
+        ))
+        service_cases.append((name, inputs))
+
+    # serving phase: repeats of each scenario through the async worker loop
+    # with dedup on — repeats after the first completion are answered from
+    # the value-keyed response cache
+    per = 2 if quick else 4
+    svc = EngineService(cache=PlanCache(), dedup=True, batch_window=0.01)
+    svc.start()
+    try:
+        futures = [
+            svc.submit("moe_dispatch", inputs, "auto")
+            for _ in range(per)
+            for _, inputs in service_cases
+        ]
+        for f in futures:
+            f.result(timeout=600)
+    finally:
+        svc.stop()
+    stats = svc.stats().to_dict()
+    rows.append(emit(
+        "moe", "service", stats["wall_seconds"],
+        op="moe_dispatch", substrate="local",
+        requests=stats["requests"],
+        dedup_hits=stats["dedup_hits"],
+        compiles=stats["compiles"],
+        cache_hits=stats["cache_hits"],
+        queue_wait_p95=round(stats["queue_wait_p95"], 6),
+        service_p50=round(stats["service_p50"], 6),
+        service_p95=round(stats["service_p95"], 6),
+        service_p99=round(stats["service_p99"], 6),
+    ))
+    OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
+    OUT_PATH.write_text(json.dumps(rows, indent=2, default=str))
+    print(f"# wrote {OUT_PATH} ({len(rows)} rows)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=True)

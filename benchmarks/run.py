@@ -1,6 +1,8 @@
 """Benchmark runner: one suite per paper table/figure + kernel micro-benches
 + the autotune strategy sweeps + the serving suites (sync-vs-async `serve`,
-8-device `mesh`) + the beyond-paper MoE dispatch A/B.
+8-device `mesh`) + the engine-served MoE dispatch op (`moe`, writes
+`experiments/moe_bench_results.json`) + the beyond-paper HLO-level MoE
+dispatch A/B (`moe_dispatch`).
 
     PYTHONPATH=src python -m benchmarks.run [--bench NAME] [--full] [--quick]
 
@@ -36,6 +38,7 @@ def _register():
         kernels_suite,
         mesh_suite,
         moe_dispatch,
+        moe_suite,
         serve_suite,
         spmv_suite,
     )
@@ -47,6 +50,7 @@ def _register():
         "autotune": autotune_suite.run,
         "serve": serve_suite.run,
         "kernels": kernels_suite.run,
+        "moe": moe_suite.run,
         "moe_dispatch": moe_dispatch.run,
         "mesh": mesh_suite.run,
     })

@@ -106,6 +106,8 @@ def run(full: bool = False, quick: bool = False):
         req_per_s=round(sync["requests_per_second"], 1),
         compiles=sync["compiles"],
         cache_hits=sync["cache_hits"],
+        queue_wait_p95=round(sync["queue_wait_p95"], 6),
+        service_p95=round(sync["service_p95"], 6),
     ))
     a = _run_phase("async", grids, scale, per)
     rows.append(emit(
@@ -119,6 +121,13 @@ def run(full: bool = False, quick: bool = False):
         busy_seconds=round(a["busy_seconds"], 4),
         queue_depth_hwm=a["queue_depth_hwm"],
         rejected=a["rejected"],
+        dedup_hits=a["dedup_hits"],
+        queue_wait_p50=round(a["queue_wait_p50"], 6),
+        queue_wait_p95=round(a["queue_wait_p95"], 6),
+        queue_wait_p99=round(a["queue_wait_p99"], 6),
+        service_p50=round(a["service_p50"], 6),
+        service_p95=round(a["service_p95"], 6),
+        service_p99=round(a["service_p99"], 6),
     ))
     speedup = (
         sync["wall_seconds"] / a["wall_seconds"] if a["wall_seconds"] > 0 else 0.0

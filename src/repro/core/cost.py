@@ -162,6 +162,15 @@ COST_MODELS: dict[str, Callable[[Any], CostModel]] = {
 }
 
 
+def register_cost_model(op_name: str, factory: Callable[[Any], CostModel]) -> None:
+    """Install an op's analytic cost-model factory so ``cost_model_for``
+    serves it. The engine's kernel registry calls this when an
+    :class:`~repro.engine.registry.OpSpec` carries a ``cost_model`` — new
+    ops (e.g. ``moe_dispatch``) become autotunable without editing this
+    module. Re-registering the same op replaces the factory."""
+    COST_MODELS[op_name] = factory
+
+
 def cost_model_for(op_name: str, inputs) -> CostModel:
     """Build the per-strategy estimator for one op's concrete inputs."""
     try:

@@ -9,13 +9,19 @@ accounting and an explicit plan -> compile -> execute pipeline
     print(report.to_json())   # seconds + traffic + cache_hit/compile_seconds
 
 Ops implement :class:`MigratoryOp`; backends implement :class:`Substrate`
-and register with :func:`register_substrate`. Compiled executors are cached
-per shape/strategy/substrate signature (:mod:`repro.engine.cache`); the
+and register with :func:`register_substrate`. Ops and substrates meet only
+in the :class:`KernelRegistry` (:mod:`repro.engine.registry`): kernels are
+``(op, substrate_kind)`` entries (``@kernel("spmv", "mesh")``), ops are
+:class:`OpSpec` registrations, and :func:`capabilities` is the
+introspection table of who runs what — ``moe_dispatch``
+(:mod:`repro.engine.moe_op`) is the fourth op, registered without touching
+any substrate class. Compiled executors are cached per
+shape/strategy/substrate signature (:mod:`repro.engine.cache`); the
 strategy grid is ranked analytically (:mod:`repro.engine.autotune`) with
 measured probes persisted across sessions (:mod:`repro.engine.probes`);
 serving goes through :class:`EngineService` (:mod:`repro.engine.service`) —
-batched drain or the async worker loop with admission control and an
-overlapped compile/execute pipeline.
+batched drain or the async worker loop with admission control, a value-keyed
+response dedup cache, and an overlapped compile/execute pipeline.
 """
 from .api import (
     ExecutionPlan,
@@ -37,12 +43,29 @@ from .cache import CompiledPlan, PlanCache, default_cache
 from .probes import ProbeStore, default_probe_store
 from .ops import (
     OPS,
+    GRAIN_CANDIDATES,
     BFSInputs,
     BFSOp,
     GSANAInputs,
     GSANAOp,
     SpMVInputs,
     SpMVOp,
+)
+from .registry import (
+    KernelRegistry,
+    OpSpec,
+    capabilities,
+    default_registry,
+    kernel,
+    register_op,
+)
+from .moe_op import (
+    MoEDispatchInputs,
+    MoEDispatchOp,
+    moe_dispatch_cost_model,
+    moe_dispatch_grid,
+    moe_dispatch_reference,
+    moe_dispatch_traffic,
 )
 from .runner import (
     build_plan,
@@ -76,14 +99,18 @@ from .substrate import (
 
 __all__ = [
     "AdmissionError", "AutotuneResult", "BFSInputs", "BFSOp", "CompiledPlan",
-    "EngineService", "ExecutionPlan", "GSANAInputs", "GSANAOp",
-    "LocalSubstrate", "MeshSubstrate", "MigratoryOp", "OPS",
+    "EngineService", "ExecutionPlan", "GRAIN_CANDIDATES", "GSANAInputs",
+    "GSANAOp", "KernelRegistry", "LocalSubstrate", "MeshSubstrate",
+    "MigratoryOp", "MoEDispatchInputs", "MoEDispatchOp", "OPS", "OpSpec",
     "OpNotSupportedError", "PallasSubstrate", "PlanCache", "ProbeStore",
     "RunReport", "ServiceFuture", "ServiceRequest", "ServiceResponse",
     "ServiceStats", "ServiceStopped", "SpMVInputs", "SpMVOp", "Substrate",
     "args_signature", "autotune", "build_plan", "candidate_grid",
-    "choose_strategy", "compile_plan", "default_cache", "default_probe_store",
-    "execute", "get_substrate", "list_substrates", "plan_key",
-    "rank_strategies", "register_substrate", "resolve_op", "resolve_strategy",
-    "run", "run_plan", "single_call", "strategy_dict", "substrate_for_mesh",
+    "capabilities", "choose_strategy", "compile_plan", "default_cache",
+    "default_probe_store", "default_registry", "execute", "get_substrate",
+    "kernel", "list_substrates", "moe_dispatch_cost_model",
+    "moe_dispatch_grid", "moe_dispatch_reference", "moe_dispatch_traffic",
+    "plan_key", "rank_strategies", "register_op", "register_substrate",
+    "resolve_op", "resolve_strategy", "run", "run_plan", "single_call",
+    "strategy_dict", "substrate_for_mesh",
 ]

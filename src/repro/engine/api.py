@@ -22,7 +22,13 @@ from ..core.strategies import MigratoryStrategy, TrafficStats
 
 
 class OpNotSupportedError(NotImplementedError):
-    """Raised when a substrate cannot execute an op (e.g. BFS on pallas)."""
+    """Raised when a substrate cannot execute an op (e.g. BFS on pallas).
+
+    Since the kernel registry (DESIGN.md §1e) this is *derived from registry
+    absence*: ``Substrate.kernel(op_name)`` raises it when no kernel is
+    registered for ``(op_name, substrate_kind)`` — at plan time, not deep in
+    execution — and kernels may also raise it for runtime capability limits
+    (device count, unsupported task shapes)."""
 
 
 def strategy_dict(strategy: MigratoryStrategy) -> dict[str, Any]:

@@ -31,19 +31,21 @@ from ..core.cost import CostEstimate, cost_model_for
 from ..core.strategies import MigratoryStrategy, strategy_grid
 from .api import ExecutionPlan, RunReport, strategy_dict
 from .cache import PlanCache
+from .ops import GRAIN_CANDIDATES  # noqa: F401  (legacy re-export; lives with the OpSpecs)
 from .probes import ProbeStore
+from .registry import default_registry
 from .runner import build_plan, resolve_op, run
 from .substrate import Substrate
 
-# grain values worth distinguishing for row-grained ops (None = dynamic)
-GRAIN_CANDIDATES = (None, 16, 64, 256)
-
 
 def candidate_grid(op_name: str) -> list[MigratoryStrategy]:
-    """The autotuner's search space for one op: the full strategy cross
-    product, with the grain axis populated only where grain matters."""
-    grains = GRAIN_CANDIDATES if op_name == "spmv" else (None,)
-    return strategy_grid(grains=grains)
+    """The autotuner's search space for one op: the op's registered
+    ``OpSpec.grid`` (e.g. SpMV populates the grain axis, ``moe_dispatch``
+    varies only S2), else the default S1 x S2 x S3 cross product."""
+    spec = default_registry().op_spec(op_name)
+    if spec.grid is not None:
+        return spec.grid()
+    return strategy_grid()
 
 
 @dataclasses.dataclass

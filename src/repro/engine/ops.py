@@ -1,13 +1,22 @@
-"""MigratoryOp adapters over the core algorithms (DESIGN.md §1).
+"""MigratoryOp adapters over the core algorithms (DESIGN.md §1, §1e).
 
 Each adapter owns three things for its algorithm: how to bind inputs to a
 substrate (``plan``), the paper's traffic model (``traffic``), and the
 paper's useful-bytes accounting (``bytes_moved``), plus derived metrics
-(MTEPS, recall, modeled makespan) for the RunReport.
+(MTEPS, recall, modeled makespan) for the RunReport. ``plan`` binds the
+executor by *kernel lookup* (``substrate.kernel(self.name)``), so an
+unsupported pair fails at plan time with
+:class:`~repro.engine.api.OpNotSupportedError` — capability is registry
+presence, not substrate subclassing.
+
+Each op registers an :class:`~repro.engine.registry.OpSpec` (factory +
+inputs type + cost-model factory + autotune grid) with the default
+registry; the module-level ``OPS`` mapping is a live legacy view of it.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections.abc import Mapping
 from typing import Any
 
 import jax
@@ -28,10 +37,16 @@ from ..core.spmv import (
     spmv_traffic,
     stripe_vector,
 )
-from ..core.strategies import Layout, MigratoryStrategy, TrafficStats
+from ..core.cost import bfs_cost_model, gsana_cost_model, spmv_cost_model
+from ..core.strategies import Layout, MigratoryStrategy, TrafficStats, strategy_grid
 from ..sparse.graph import PartitionedGraph
 from .api import ExecutionPlan, plan_key
+from .registry import OpSpec, default_registry, register_op
 from .substrate import Substrate
+
+# grain values worth distinguishing for row-grained ops (None = dynamic);
+# SpMV's autotune grid sweeps them, the other ops' grids pin grain=None
+GRAIN_CANDIDATES = (None, 16, 64, 256)
 
 
 # -- SpMV ----------------------------------------------------------------------
@@ -52,12 +67,13 @@ class SpMVOp:
     def plan(self, inputs: SpMVInputs, strategy: MigratoryStrategy, substrate: Substrate):
         x = inputs.x if strategy.replicate_x else stripe_vector(inputs.x, inputs.a.P)
         args = (inputs.a, x)
+        kern = substrate.kernel(self.name)
         return ExecutionPlan(
             op=self.name,
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
-            executor=lambda a, xv: substrate.spmv(a, xv, strategy),
+            executor=lambda a, xv: kern(a, xv, strategy=strategy),
             args=args,
             meta={"n_cols": inputs.a.shape[1], "n_rows": inputs.a.shape[0]},
             key=plan_key(self.name, substrate, strategy, args),
@@ -94,12 +110,13 @@ class BFSOp:
         # close over the scalars, not `inputs`: the plan cache keeps the
         # executor closure alive, and it must not pin the graph arrays
         root, max_rounds = inputs.root, inputs.max_rounds
+        kern = substrate.kernel(self.name)
         return ExecutionPlan(
             op=self.name,
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
-            executor=lambda g: substrate.bfs(g, root, strategy, max_rounds),
+            executor=lambda g: kern(g, root, strategy=strategy, max_rounds=max_rounds),
             args=args,
             key=plan_key(
                 self.name, substrate, strategy, args,
@@ -156,13 +173,14 @@ class GSANAOp:
         # close over the scalar k, not `inputs`: cached executors must not
         # pin the vertex-set/bucket arrays of the first-compiling request
         k = inputs.k
+        kern = substrate.kernel(self.name)
         return ExecutionPlan(
             op=self.name,
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
-            executor=lambda vs1, vs2, b1, b2: substrate.gsana(
-                vs1, vs2, b1, b2, k, strategy
+            executor=lambda vs1, vs2, b1, b2: kern(
+                vs1, vs2, b1, b2, k, strategy=strategy
             ),
             args=args,
             key=plan_key(
@@ -206,4 +224,45 @@ class GSANAOp:
         return out
 
 
-OPS = {"spmv": SpMVOp, "bfs": BFSOp, "gsana": GSANAOp}
+# -- registration --------------------------------------------------------------
+
+register_op(OpSpec(
+    name="spmv",
+    factory=SpMVOp,
+    inputs_type=SpMVInputs,
+    cost_model=spmv_cost_model,
+    grid=lambda: strategy_grid(grains=GRAIN_CANDIDATES),
+))
+register_op(OpSpec(
+    name="bfs",
+    factory=BFSOp,
+    inputs_type=BFSInputs,
+    cost_model=bfs_cost_model,
+))
+register_op(OpSpec(
+    name="gsana",
+    factory=GSANAOp,
+    inputs_type=GSANAInputs,
+    cost_model=gsana_cost_model,
+))
+
+
+class _OpsView(Mapping):
+    """Legacy ``OPS`` mapping, now a live read-only view of the registry:
+    ``OPS["spmv"]`` yields the op factory, iteration yields registered op
+    names (so later registrations — e.g. ``moe_dispatch`` — appear)."""
+
+    def __getitem__(self, name: str):
+        try:
+            return default_registry().op_spec(name).factory
+        except ValueError:
+            raise KeyError(name) from None
+
+    def __iter__(self):
+        return iter(default_registry().ops())
+
+    def __len__(self) -> int:
+        return len(default_registry().ops())
+
+
+OPS = _OpsView()

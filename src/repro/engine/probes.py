@@ -24,6 +24,7 @@ from __future__ import annotations
 import json
 import os
 import threading
+import warnings
 from pathlib import Path
 
 DEFAULT_PROBES_PATH = (
@@ -51,11 +52,36 @@ class ProbeStore:
     def _load_locked(self) -> "dict[str, float]":
         if self._data is None:
             try:
-                raw = json.loads(self.path.read_text())
+                blob = self.path.read_bytes()
+            except FileNotFoundError:  # absent store: normal first session
+                self._data = {}
+                return self._data
+            except OSError as exc:  # exists but unreadable: say so
+                warnings.warn(
+                    f"unreadable probe store at {self.path} ({exc!r}); "
+                    "starting with an empty store",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+                self._data = {}
+                return self._data
+            try:
+                # bytes in: json.loads does the decode, so non-UTF-8 garbage
+                # lands in the corrupt handler below instead of raising here
+                raw = json.loads(blob)
                 self._data = {
                     str(k): float(v) for k, v in raw.get("probes", {}).items()
                 }
-            except (OSError, ValueError, AttributeError):
+            except (ValueError, AttributeError, TypeError) as exc:
+                # corrupt/truncated store (killed run, disk-full spill, hand
+                # edit): probes are rederivable, so degrade to empty — but
+                # loudly, the file will be overwritten on the next save()
+                warnings.warn(
+                    f"corrupt probe store at {self.path} ({exc!r}); "
+                    "starting with an empty store",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
                 self._data = {}
         return self._data
 

@@ -21,18 +21,17 @@ from typing import Any
 import jax
 
 from ..core.strategies import MigratoryStrategy
+from . import ops as _ops  # noqa: F401  (imports register the built-in OpSpecs)
 from .api import ExecutionPlan, MigratoryOp, RunReport
 from .cache import CompiledPlan, PlanCache, default_cache
-from .ops import OPS
+from .registry import default_registry
 from .substrate import Substrate, get_substrate
 
 
 def resolve_op(op: "MigratoryOp | str") -> MigratoryOp:
+    """Name -> MigratoryOp via the registry's OpSpec; instances pass through."""
     if isinstance(op, str):
-        try:
-            return OPS[op]()
-        except KeyError:
-            raise ValueError(f"unknown op {op!r}; known: {sorted(OPS)}") from None
+        return default_registry().op_spec(op).factory()
     return op
 
 

@@ -42,20 +42,38 @@ mixed-op submission).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import queue as queue_mod
 import threading
 import time
 from collections import deque
 from typing import Any
 
+import jax
+
+import numpy as np
+
 from ..core.strategies import MigratoryStrategy
 from .api import RunReport
 from .cache import PlanCache
 from .runner import build_plan, resolve_op, single_call
-from .substrate import Substrate
+from .substrate import Substrate, get_substrate
 
 _STOP = object()  # execute-loop shutdown sentinel
+
+# per-request latency samples kept for percentile estimation (newest wins;
+# bounds memory for long-lived services, like the span folding below)
+_LATENCY_WINDOW = 4096
+
+
+def _percentile(ordered: "list[float]", q: float) -> float:
+    """Nearest-rank percentile of an already-sorted sample list."""
+    if not ordered:
+        return 0.0
+    idx = min(len(ordered) - 1, max(0, int(round(q * (len(ordered) - 1)))))
+    return ordered[idx]
 
 
 class AdmissionError(RuntimeError):
@@ -75,6 +93,7 @@ class ServiceRequest:
     inputs: Any
     strategy: "MigratoryStrategy | str | None"
     substrate: "Substrate | str"
+    t_admit: float = 0.0  # perf_counter at admission (queue-wait percentiles)
 
 
 @dataclasses.dataclass
@@ -130,6 +149,52 @@ class _WorkItem:
     future: ServiceFuture
     op: Any = None
     plan: Any = None
+    dedup_key: "str | None" = None  # content hash when dedup is enabled
+
+
+def _hash_value(h, value: Any) -> None:
+    """Feed one input value into the content hash, by *bytes* for arrays.
+
+    The op input containers (SpMVInputs, MoEDispatchInputs, ...) are plain
+    frozen dataclasses, not registered pytree nodes — ``tree_flatten`` would
+    return them as single leaves whose ``repr`` truncates large arrays, so
+    dataclasses are recursed field-by-field explicitly and every array-like
+    is hashed by its full buffer."""
+    if hasattr(value, "shape") and hasattr(value, "dtype"):
+        arr = np.asarray(value)
+        h.update(repr((arr.shape, str(arr.dtype))).encode())
+        h.update(arr.tobytes())
+        return
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        h.update(type(value).__name__.encode())
+        for field in dataclasses.fields(value):
+            h.update(field.name.encode())
+            _hash_value(h, getattr(value, field.name))
+        return
+    leaves, treedef = jax.tree_util.tree_flatten(value)
+    if len(leaves) == 1 and leaves[0] is value:
+        h.update(repr(value).encode())  # true scalar leaf (int, str, enum, ...)
+        return
+    h.update(repr(treedef).encode())
+    for leaf in leaves:
+        _hash_value(h, leaf)
+
+
+def _content_hash(op: Any, inputs: Any, strategy: Any, substrate: Any) -> str:
+    """Value-keyed identity of one request: op name x strategy identity x
+    substrate fingerprint x the *bytes* of every input leaf. Two requests
+    with equal hashes are the same computation — ops are pure — so the
+    service may answer the second from the first's response."""
+    h = hashlib.sha256()
+    op_name = op if isinstance(op, str) else getattr(op, "name", repr(op))
+    h.update(repr(op_name).encode())
+    strat_id = (
+        strategy.cache_key() if isinstance(strategy, MigratoryStrategy) else strategy
+    )
+    h.update(repr(strat_id).encode())
+    h.update(repr(get_substrate(substrate).cache_fingerprint()).encode())
+    _hash_value(h, inputs)
+    return h.hexdigest()
 
 
 def _union_seconds(spans: "list[tuple[float, float]]") -> float:
@@ -186,6 +251,13 @@ class ServiceStats:
       simultaneously with the execute stage of another;
       ``overlap_ratio = overlap_seconds / total compile-stage seconds`` is
       the fraction of compile time hidden under execution (0 in batch mode).
+    - ``queue_wait_p50/p95/p99`` — per-request admission -> run-start wait;
+      ``service_p50/p95/p99`` — per-request run duration (ROADMAP "latency
+      accounting"). Estimated over the most recent ``_LATENCY_WINDOW``
+      executed requests; dedup-served requests wait for neither and are
+      excluded.
+    - ``dedup_hits`` — requests answered from the value-keyed response cache
+      without executing (``dedup=True`` services only).
     """
 
     requests: int = 0
@@ -203,6 +275,13 @@ class ServiceStats:
     errors: int = 0  # requests whose plan/execute raised
     overlap_seconds: float = 0.0
     overlap_ratio: float = 0.0
+    dedup_hits: int = 0  # responses served from the value-keyed dedup cache
+    queue_wait_p50: float = 0.0
+    queue_wait_p95: float = 0.0
+    queue_wait_p99: float = 0.0
+    service_p50: float = 0.0
+    service_p95: float = 0.0
+    service_p99: float = 0.0
 
     @property
     def requests_per_second(self) -> float:
@@ -230,6 +309,13 @@ class ServiceStats:
             "errors": self.errors,
             "overlap_seconds": self.overlap_seconds,
             "overlap_ratio": self.overlap_ratio,
+            "dedup_hits": self.dedup_hits,
+            "queue_wait_p50": self.queue_wait_p50,
+            "queue_wait_p95": self.queue_wait_p95,
+            "queue_wait_p99": self.queue_wait_p99,
+            "service_p50": self.service_p50,
+            "service_p95": self.service_p95,
+            "service_p99": self.service_p99,
             "requests_per_second": self.requests_per_second,
             "amortization": self.amortization,
         }
@@ -245,6 +331,14 @@ class EngineService:
     snapshotting the queue so bursts group into fewer, larger plan-key
     groups; ``pipeline_depth`` bounds the compiled-group queue between the
     two stages (backpressure on the compile thread).
+
+    ``dedup=True`` puts a value-keyed response cache in front of the
+    pipeline: requests whose op + strategy + substrate + input *values*
+    content-hash to an already-served request are answered from the stored
+    response without planning or executing (``ServiceStats.dedup_hits``).
+    Sound because ops are pure functions of their inputs; the replayed
+    response carries the original execution's report. Off by default —
+    hashing large input pytrees on every submit is not free.
     """
 
     def __init__(
@@ -258,6 +352,8 @@ class EngineService:
         qos: "dict[str, float] | None" = None,
         batch_window: float = 0.0,
         pipeline_depth: int = 2,
+        dedup: bool = False,
+        dedup_max_entries: int = 256,
     ):
         if admission not in ("block", "reject"):
             raise ValueError(
@@ -273,6 +369,15 @@ class EngineService:
         self.qos = {name: float(weight) for name, weight in (qos or {}).items()}
         self.batch_window = batch_window
         self.pipeline_depth = max(1, pipeline_depth)
+        self.dedup = dedup
+        self.dedup_max_entries = max(1, dedup_max_entries)
+        # value-keyed response store: content hash -> served ServiceResponse
+        self._dedup_store: "collections.OrderedDict[str, ServiceResponse]" = (
+            collections.OrderedDict()
+        )
+        # per-request latency samples (bounded; see ServiceStats docstring)
+        self._queue_waits: deque = deque(maxlen=_LATENCY_WINDOW)
+        self._service_times: deque = deque(maxlen=_LATENCY_WINDOW)
         self._pending: list[ServiceRequest] = []
         self._next_ticket = 0
         self._stats = ServiceStats()
@@ -339,9 +444,31 @@ class EngineService:
     ) -> "int | ServiceFuture":
         """Enqueue one request. Batch mode returns its int ticket (serve via
         ``drain()``); worker-loop mode returns a :class:`ServiceFuture`.
-        Full queues block or raise per the admission policy."""
+        Full queues block or raise per the admission policy. With
+        ``dedup=True``, a worker-mode request whose content hash matches an
+        already-served response resolves immediately — it never enters the
+        queue (batch mode dedups inside ``drain()``)."""
         if strategy is None and self.autotune:
             strategy = "auto"
+        sub = substrate if substrate is not None else self.default_substrate
+        dkey = None
+        # batch mode hashes inside drain() instead — a submit-time hash could
+        # never serve a hit there (responses only exist once drain runs)
+        if self.dedup and self._running:
+            dkey = _content_hash(op, inputs, strategy, sub)  # outside the lock
+            with self._lock:
+                hit = self._dedup_store.get(dkey)
+                if hit is not None and self._running and not self._stopping:
+                    self._dedup_store.move_to_end(dkey)
+                    ticket = self._next_ticket
+                    self._next_ticket += 1
+                    self._stats.requests += 1
+                    self._stats.dedup_hits += 1
+                    future = ServiceFuture(ticket)
+                    future._resolve(
+                        ServiceResponse(ticket, hit.result, hit.report)
+                    )
+                    return future
         with self._lock:
             self._admit_locked()
             ticket = self._next_ticket
@@ -351,11 +478,12 @@ class EngineService:
                 op=op,
                 inputs=inputs,
                 strategy=strategy,
-                substrate=substrate if substrate is not None else self.default_substrate,
+                substrate=sub,
+                t_admit=time.perf_counter(),
             )
             if self._running:
                 future = ServiceFuture(ticket)
-                self._queue.append(_WorkItem(req, future))
+                self._queue.append(_WorkItem(req, future, dedup_key=dkey))
                 self._inflight += 1
                 if self._t_first is None:
                     self._t_first = time.perf_counter()
@@ -571,15 +699,45 @@ class EngineService:
         self._exec_spans.clear()
 
     def _run_item(self, item: _WorkItem) -> None:
+        t0 = time.perf_counter()
+        if item.dedup_key is not None and self._try_serve_dedup(item):
+            return
         try:
             result, report = single_call(item.plan, item.op, cache=self.cache)
         except Exception as exc:
             self._finish_error(item, exc)
             return
-        item.future._resolve(ServiceResponse(item.request.ticket, result, report))
+        t1 = time.perf_counter()
+        response = ServiceResponse(item.request.ticket, result, report)
+        item.future._resolve(response)
         with self._lock:
+            if item.dedup_key is not None:
+                self._dedup_store[item.dedup_key] = response
+                self._dedup_store.move_to_end(item.dedup_key)
+                while len(self._dedup_store) > self.dedup_max_entries:
+                    self._dedup_store.popitem(last=False)
+            if item.request.t_admit:
+                self._queue_waits.append(max(0.0, t0 - item.request.t_admit))
+            self._service_times.append(t1 - t0)
             self._account_locked(report)
             self._finish_locked()
+
+    def _try_serve_dedup(self, item: _WorkItem) -> bool:
+        """Late dedup check (drain loop / pipeline stages): answer from the
+        response store if an identical request completed since admission.
+        Returns True when the item was served."""
+        with self._lock:
+            hit = self._dedup_store.get(item.dedup_key)
+            if hit is None:
+                return False
+            self._dedup_store.move_to_end(item.dedup_key)
+            self._stats.requests += 1
+            self._stats.dedup_hits += 1
+            item.future._resolve(
+                ServiceResponse(item.request.ticket, hit.result, hit.report)
+            )
+            self._finish_locked()
+            return True
 
     def _finish_error(self, item: _WorkItem, exc: BaseException) -> None:
         item.future._reject(exc)
@@ -619,7 +777,16 @@ class EngineService:
             return []
         t_wall = time.perf_counter()
         items = [
-            _WorkItem(req, ServiceFuture(req.ticket)) for req in pending
+            _WorkItem(
+                req,
+                ServiceFuture(req.ticket),
+                dedup_key=(
+                    _content_hash(req.op, req.inputs, req.strategy, req.substrate)
+                    if self.dedup
+                    else None
+                ),
+            )
+            for req in pending
         ]
         with self._lock:
             self._inflight += len(items)  # balanced by _finish_locked per item
@@ -672,7 +839,9 @@ class EngineService:
             compile_busy = self._compile_busy_acc + sum(
                 t1 - t0 for t0, t1 in self._compile_spans
             )
-            return dataclasses.replace(
+            waits = list(self._queue_waits)  # copy only; sort off-lock —
+            services = list(self._service_times)  # submit()/pipeline contend here
+            snapshot = dataclasses.replace(
                 self._stats,
                 wall_seconds=self._drain_wall + max(0.0, worker_wall),
                 busy_seconds=(
@@ -685,6 +854,15 @@ class EngineService:
                     overlap_seconds / compile_busy if compile_busy > 0 else 0.0
                 ),
             )
+        waits.sort()
+        services.sort()
+        snapshot.queue_wait_p50 = _percentile(waits, 0.50)
+        snapshot.queue_wait_p95 = _percentile(waits, 0.95)
+        snapshot.queue_wait_p99 = _percentile(waits, 0.99)
+        snapshot.service_p50 = _percentile(services, 0.50)
+        snapshot.service_p95 = _percentile(services, 0.95)
+        snapshot.service_p99 = _percentile(services, 0.99)
+        return snapshot
 
     def throughput_report(self) -> dict[str, Any]:
         """Aggregate record: service counters + plan-cache health."""

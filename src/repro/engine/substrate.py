@@ -1,4 +1,4 @@
-"""Substrates: where a MigratoryOp's plan executes (DESIGN.md §1).
+"""Substrates: where a MigratoryOp's plan executes (DESIGN.md §1, §1e).
 
 Three built-in backends, mirroring the realizations the paper compares:
 
@@ -9,11 +9,20 @@ Three built-in backends, mirroring the realizations the paper compares:
 - ``pallas`` — routes the compute hot loops to the Pallas kernels
   (``kernels/spmv``, ``kernels/topk_sim``) where shapes allow.
 
-New backends (multi-host, CPU collectives, ...) register with
-:func:`register_substrate` and immediately serve every op.
+A substrate no longer implements one method per op. Its per-op entry points
+are *kernels* registered against its ``substrate_kind`` in the
+:mod:`~repro.engine.registry` (``@kernel("spmv", "mesh")`` below);
+``Substrate.kernel(op_name)`` resolves them, and a missing registration
+raises :class:`~repro.engine.api.OpNotSupportedError`. New backends
+register with :func:`register_substrate` and gain every op whose kernels
+they register; new ops (e.g. ``moe_dispatch``, engine/moe_op.py) register
+kernels against existing kinds without touching the classes here. The old
+``substrate.spmv(...)``-style methods survive as legacy shims delegating to
+the registry so pre-registry call sites migrate incrementally.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
@@ -23,47 +32,69 @@ from ..core.gsana import NEG, compute_similarity, compute_similarity_mesh
 from ..core.spmv import spmv_local, spmv_mesh, unstripe_vector
 from ..core.strategies import MigratoryStrategy, Scheme
 from .api import OpNotSupportedError
+from .registry import default_registry, kernel
 
 
 class Substrate:
-    """Execution backend for MigratoryOps. Subclasses implement the ops they
-    support; unimplemented ops raise :class:`OpNotSupportedError`."""
+    """Execution backend for MigratoryOps.
+
+    Identity: ``name`` labels the instance in reports/registries;
+    ``substrate_kind`` (defaults to ``name``) is the registry key kernels
+    are looked up under — a subclass specializing behavior but reusing a
+    parent's kernels may pin ``kind`` to the parent's.
+    """
 
     name: str = "abstract"
+    kind: "str | None" = None
+
+    @property
+    def substrate_kind(self) -> str:
+        """The registry key kernels are looked up under. Explicit ``kind``
+        wins; otherwise the MRO is walked for the nearest class whose own
+        ``name`` has kernels registered — so a renamed subclass
+        (``class FastLocal(LocalSubstrate): name = "fast_local"``) keeps
+        inheriting its parent's kernels, matching the pre-registry
+        subclassing contract."""
+        if self.kind is not None:
+            return self.kind
+        kinds = set(default_registry().kernel_kinds())
+        for klass in type(self).__mro__:
+            own_name = klass.__dict__.get("name")
+            if own_name and own_name in kinds:
+                return own_name
+        return self.name
+
+    def kernel(self, op_name: str) -> Callable:
+        """Resolve this backend's kernel for ``op_name`` (bound to self).
+        Raises :class:`OpNotSupportedError` when no kernel is registered —
+        capability *is* registry presence."""
+        fn = default_registry().resolve_kernel(op_name, self.substrate_kind)
+        return functools.partial(fn, self)
 
     def supports(self, op_name: str) -> bool:
-        return getattr(type(self), op_name, None) is not getattr(Substrate, op_name)
+        return default_registry().has_kernel(op_name, self.substrate_kind)
 
     def cache_fingerprint(self) -> tuple:
         """Hashable identity for the compiled-plan cache: two substrate
         instances with equal fingerprints are interchangeable executors."""
         return (self.name,)
 
-    # -- op entry points (algorithm code lives in repro.core.*) ---------------
+    # -- legacy shims (pre-registry API; delegate to the kernel table) ---------
 
     def spmv(self, a, x, strategy: MigratoryStrategy) -> jax.Array:
-        raise OpNotSupportedError(f"substrate {self.name!r} does not run spmv")
+        return self.kernel("spmv")(a, x, strategy=strategy)
 
     def bfs(self, g, root, strategy: MigratoryStrategy, max_rounds=None) -> jax.Array:
-        raise OpNotSupportedError(f"substrate {self.name!r} does not run bfs")
+        return self.kernel("bfs")(g, root, strategy=strategy, max_rounds=max_rounds)
 
     def gsana(self, vs1, vs2, b1, b2, k: int, strategy: MigratoryStrategy):
-        raise OpNotSupportedError(f"substrate {self.name!r} does not run gsana")
+        return self.kernel("gsana")(vs1, vs2, b1, b2, k, strategy=strategy)
 
 
 class LocalSubstrate(Substrate):
     """Single-device emulation — identical semantics to the mesh paths."""
 
     name = "local"
-
-    def spmv(self, a, x, strategy):
-        return spmv_local(a, x, strategy)
-
-    def bfs(self, g, root, strategy, max_rounds=None):
-        return bfs_local(g, root, strategy, max_rounds)
-
-    def gsana(self, vs1, vs2, b1, b2, k, strategy):
-        return compute_similarity(vs1, vs2, b1, b2, k, strategy.scheme)
 
 
 class MeshSubstrate(Substrate):
@@ -86,7 +117,10 @@ class MeshSubstrate(Substrate):
             )
         return (self.name, self.axis_name, mesh_id)
 
-    def _mesh_for(self, p: int) -> jax.sharding.Mesh:
+    def mesh_for(self, p: int) -> jax.sharding.Mesh:
+        """The mesh kernels run on: the explicit one, else a 1-D nodelet
+        mesh of ``p`` host devices. Public so out-of-tree kernels (e.g.
+        engine/moe_op.py) resolve meshes the same way the built-ins do."""
         if self.mesh is not None:
             return self.mesh
         from ..launch.mesh import make_nodelet_mesh
@@ -98,37 +132,15 @@ class MeshSubstrate(Substrate):
             )
         return make_nodelet_mesh(p)
 
-    def spmv(self, a, x, strategy):
-        return spmv_mesh(a, x, strategy, self._mesh_for(a.P), self.axis_name)
-
-    def bfs(self, g, root, strategy, max_rounds=None):
-        return bfs_mesh(
-            g, root, strategy, max_rounds,
-            mesh=self._mesh_for(g.P), axis_name=self.axis_name,
-        )
-
-    def gsana(self, vs1, vs2, b1, b2, k, strategy):
-        # task distribution over however many devices the host mesh offers
-        mesh = self.mesh
-        if mesh is None:
-            from ..launch.mesh import make_nodelet_mesh
-
-            n_dev = len(jax.devices())
-            if n_dev < 2:
-                raise OpNotSupportedError(
-                    "mesh substrate needs >1 device to distribute gsana tasks "
-                    "(pass an explicit mesh or use 'local')"
-                )
-            mesh = make_nodelet_mesh(n_dev)
-        return compute_similarity_mesh(
-            vs1, vs2, b1, b2, k, strategy.scheme, mesh=mesh, axis_name=self.axis_name,
-        )
+    # pre-registry spelling, kept for out-of-tree callers
+    _mesh_for = mesh_for
 
 
 class PallasSubstrate(Substrate):
     """Routes hot loops to the Pallas kernels. ``interpret=True`` runs the
     kernels in interpret mode (CPU-correct); on TPU pass ``interpret=False``.
-    BFS has no kernel (its hot loop is the collective pattern itself)."""
+    BFS has no kernel (its hot loop is the collective pattern itself) — the
+    registry simply has no ``("bfs", "pallas")`` entry."""
 
     name = "pallas"
 
@@ -138,42 +150,97 @@ class PallasSubstrate(Substrate):
     def cache_fingerprint(self) -> tuple:
         return (self.name, self.interpret)
 
-    def spmv(self, a, x, strategy):
-        from ..kernels.spmv.ops import spmv as spmv_kernel
 
-        x_full = x if strategy.replicate_x else unstripe_vector(x, a.shape[1])
-        p, rp, k = a.cols.shape
-        grain = strategy.dynamic_grain(rp)
-        # nodelet planes -> one (P*R_p, K) row block; kernel grid = row chunks
-        y = spmv_kernel(
-            a.cols.reshape(p * rp, k), a.vals.reshape(p * rp, k), x_full,
-            grain=max(1, min(grain, p * rp)), interpret=self.interpret,
-        )
-        return y.reshape(p, rp)
+# -- built-in kernels ----------------------------------------------------------
+# The algorithm code lives in repro.core.*; these adapters bind it to a
+# backend. Registered here (not on the classes) so capability is data.
 
-    def gsana(self, vs1, vs2, b1, b2, k, strategy):
-        import jax.numpy as jnp
-        import numpy as np
 
-        from ..core.gsana import DEFAULT_VOCAB, _merge_pair_topk, _scatter_vertex_major  # noqa: PLC0415
-        from ..core.gsana_data import neighbor_buckets
-        from ..kernels.topk_sim.ops import topk_sim_pairs
+@kernel("spmv", "local")
+def _spmv_local(sub: Substrate, a, x, *, strategy):
+    return spmv_local(a, x, strategy)
 
-        if strategy.scheme != Scheme.PAIR:
+
+@kernel("bfs", "local")
+def _bfs_local(sub: Substrate, g, root, *, strategy, max_rounds=None):
+    return bfs_local(g, root, strategy, max_rounds)
+
+
+@kernel("gsana", "local")
+def _gsana_local(sub: Substrate, vs1, vs2, b1, b2, k, *, strategy):
+    return compute_similarity(vs1, vs2, b1, b2, k, strategy.scheme)
+
+
+@kernel("spmv", "mesh")
+def _spmv_mesh(sub: MeshSubstrate, a, x, *, strategy):
+    return spmv_mesh(a, x, strategy, sub.mesh_for(a.P), sub.axis_name)
+
+
+@kernel("bfs", "mesh")
+def _bfs_mesh(sub: MeshSubstrate, g, root, *, strategy, max_rounds=None):
+    return bfs_mesh(
+        g, root, strategy, max_rounds, mesh=sub.mesh_for(g.P), axis_name=sub.axis_name,
+    )
+
+
+@kernel("gsana", "mesh")
+def _gsana_mesh(sub: MeshSubstrate, vs1, vs2, b1, b2, k, *, strategy):
+    # task distribution over however many devices the host mesh offers
+    mesh = sub.mesh
+    if mesh is None:
+        from ..launch.mesh import make_nodelet_mesh
+
+        n_dev = len(jax.devices())
+        if n_dev < 2:
             raise OpNotSupportedError(
-                "pallas gsana kernel implements the PAIR task shape only"
+                "mesh substrate needs >1 device to distribute gsana tasks "
+                "(pass an explicit mesh or use 'local')"
             )
-        grid2 = b2.grid * b2.grid
-        nb = neighbor_buckets(b2.grid)
-        pair_b2 = jnp.asarray(np.repeat(np.arange(grid2), 9))
-        pair_b1 = jnp.asarray(nb.reshape(-1))
-        scores, u_ids = topk_sim_pairs(
-            vs1, vs2, b1, b2, pair_b2, pair_b1,
-            vocab=DEFAULT_VOCAB, k=min(k, b1.cap), interpret=self.interpret,
+        mesh = make_nodelet_mesh(n_dev)
+    return compute_similarity_mesh(
+        vs1, vs2, b1, b2, k, strategy.scheme, mesh=mesh, axis_name=sub.axis_name,
+    )
+
+
+@kernel("spmv", "pallas")
+def _spmv_pallas(sub: PallasSubstrate, a, x, *, strategy):
+    from ..kernels.spmv.ops import spmv as spmv_kernel
+
+    x_full = x if strategy.replicate_x else unstripe_vector(x, a.shape[1])
+    p, rp, k = a.cols.shape
+    grain = strategy.dynamic_grain(rp)
+    # nodelet planes -> one (P*R_p, K) row block; kernel grid = row chunks
+    y = spmv_kernel(
+        a.cols.reshape(p * rp, k), a.vals.reshape(p * rp, k), x_full,
+        grain=max(1, min(grain, p * rp)), interpret=sub.interpret,
+    )
+    return y.reshape(p, rp)
+
+
+@kernel("gsana", "pallas")
+def _gsana_pallas(sub: PallasSubstrate, vs1, vs2, b1, b2, k, *, strategy):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..core.gsana import DEFAULT_VOCAB, _merge_pair_topk, _scatter_vertex_major  # noqa: PLC0415
+    from ..core.gsana_data import neighbor_buckets
+    from ..kernels.topk_sim.ops import topk_sim_pairs
+
+    if strategy.scheme != Scheme.PAIR:
+        raise OpNotSupportedError(
+            "pallas gsana kernel implements the PAIR task shape only"
         )
-        scores = jnp.where(jnp.isfinite(scores), scores, NEG)
-        cand_b, score_b = _merge_pair_topk(u_ids, scores, grid2, k)
-        return _scatter_vertex_major(cand_b, score_b, b2, vs2.n, k)
+    grid2 = b2.grid * b2.grid
+    nb = neighbor_buckets(b2.grid)
+    pair_b2 = jnp.asarray(np.repeat(np.arange(grid2), 9))
+    pair_b1 = jnp.asarray(nb.reshape(-1))
+    scores, u_ids = topk_sim_pairs(
+        vs1, vs2, b1, b2, pair_b2, pair_b1,
+        vocab=DEFAULT_VOCAB, k=min(k, b1.cap), interpret=sub.interpret,
+    )
+    scores = jnp.where(jnp.isfinite(scores), scores, NEG)
+    cand_b, score_b = _merge_pair_topk(u_ids, scores, grid2, k)
+    return _scatter_vertex_major(cand_b, score_b, b2, vs2.n, k)
 
 
 # -- registry ------------------------------------------------------------------

@@ -1,0 +1,160 @@
+"""MoE dispatch as the fourth MigratoryOp.
+
+ISSUE 4 acceptance: ``moe_dispatch`` registers without modifying any
+Substrate subclass; ``EngineService.submit("moe_dispatch", ...,
+strategy="auto")`` returns results bit-identical to calling
+``dispatch_from_strategy`` directly (the :func:`moe_dispatch_reference`
+oracle); and the autotuner's chosen mode matches an exhaustive measured
+sweep on >= 2 (batch, experts, mesh) scenarios.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Comm, MigratoryStrategy
+from repro.engine import (
+    EngineService,
+    MoEDispatchInputs,
+    MoEDispatchOp,
+    OpNotSupportedError,
+    PlanCache,
+    candidate_grid,
+    choose_strategy,
+    get_substrate,
+    moe_dispatch_reference,
+    run,
+)
+from repro.models.moe import dispatch_from_strategy
+
+
+def _inputs(T: int, D: int, E: int, P: int, seed: int = 7) -> MoEDispatchInputs:
+    rng = np.random.default_rng(seed)
+    return MoEDispatchInputs(
+        x=jnp.asarray(rng.standard_normal((T, D)).astype(np.float32)),
+        router=jnp.asarray(rng.standard_normal((D, E)).astype(np.float32)),
+        nodelets=P,
+    )
+
+
+# (tokens, d_model, experts, nodelets): two ep-capable scenarios with
+# different batch/expert/mesh shapes + one tp-fallback scenario
+SCENARIOS = [
+    ("t128_e16_p8", (128, 32, 16, 8)),
+    ("t256_e8_p4", (256, 24, 8, 4)),
+    ("t120_e6_p4_tp", (120, 16, 6, 4)),
+]
+
+
+@pytest.mark.parametrize("name,shape", SCENARIOS)
+def test_choose_strategy_matches_exhaustive_measured_sweep(name, shape):
+    """ISSUE 4 acceptance: the analytic pick achieves the minimum *measured*
+    traffic over an exhaustive engine sweep of the moe candidate grid, and
+    the chosen dispatch mode equals the sweep winner's mode."""
+    inputs = _inputs(*shape)
+    chosen = choose_strategy("moe_dispatch", inputs)
+    cache = PlanCache()
+    measured = {}
+    for st in candidate_grid("moe_dispatch"):
+        _, rep = run("moe_dispatch", inputs, st, "local", iters=1, warmup=0, cache=cache)
+        measured[st] = rep
+    min_traffic = min(r.traffic.total_bytes for r in measured.values())
+    assert chosen in measured
+    assert measured[chosen].traffic.total_bytes == min_traffic
+    chosen_mode = dispatch_from_strategy(
+        chosen, num_experts=inputs.num_experts, data_axis=inputs.nodelets
+    )
+    best_modes = {
+        r.metrics["dispatch_mode"]
+        for r in measured.values()
+        if r.traffic.total_bytes == min_traffic
+    }
+    assert chosen_mode in best_modes
+
+
+def test_push_beats_pull_when_divisible():
+    """Paper §5.2 at LM scale: all_to_all packets (remote write) move less
+    than all_gathering every token to every owner (migrate) — so auto picks
+    REMOTE_WRITE -> ep_push whenever expert parallelism is available."""
+    inputs = _inputs(128, 32, 16, 8)
+    st = choose_strategy("moe_dispatch", inputs)
+    assert st.comm == Comm.REMOTE_WRITE
+    assert dispatch_from_strategy(st, num_experts=16, data_axis=8) == "ep_push"
+
+
+def test_mode_mapping_and_metrics():
+    """The engine's mode metric is exactly dispatch_from_strategy's answer,
+    and tp fallback reports zero modeled traffic (node-local dispatch)."""
+    inputs = _inputs(128, 32, 16, 8)
+    for comm, want in ((Comm.MIGRATE, "ep_pull"), (Comm.REMOTE_WRITE, "ep_push")):
+        st = MigratoryStrategy(comm=comm)
+        _, rep = run("moe_dispatch", inputs, st, "local", cache=PlanCache())
+        assert rep.metrics["dispatch_mode"] == want
+        assert rep.metrics["dispatch_mode"] == dispatch_from_strategy(
+            st, num_experts=16, data_axis=8
+        )
+        assert rep.traffic.total_bytes > 0
+    tp_inputs = _inputs(120, 16, 6, 4)
+    _, rep = run("moe_dispatch", tp_inputs, MigratoryStrategy(), "local", cache=PlanCache())
+    assert rep.metrics["dispatch_mode"] == "tp"
+    assert rep.traffic.total_bytes == 0
+    assert 0.0 <= rep.metrics["drop_fraction"] < 1.0
+
+
+def test_served_through_async_service_bit_identical():
+    """ISSUE 4 acceptance: EngineService.submit("moe_dispatch", ...,
+    strategy="auto") == the direct dispatch_from_strategy path, bitwise."""
+    inputs = _inputs(128, 32, 16, 8)
+    direct = moe_dispatch_reference(inputs, choose_strategy("moe_dispatch", inputs))
+    svc = EngineService(cache=PlanCache())
+    svc.start()
+    try:
+        futures = [svc.submit("moe_dispatch", inputs, "auto") for _ in range(4)]
+        responses = [f.result(timeout=600) for f in futures]
+    finally:
+        svc.stop()
+    for resp in responses:
+        assert resp.report.op == "moe_dispatch"
+        np.testing.assert_array_equal(np.asarray(resp.result), np.asarray(direct))
+    # and the batched drain path agrees too
+    batch_svc = EngineService(cache=PlanCache())
+    batch_svc.submit("moe_dispatch", inputs, "auto")
+    (resp,) = batch_svc.drain()
+    np.testing.assert_array_equal(np.asarray(resp.result), np.asarray(direct))
+
+
+def test_moe_dispatch_unsupported_on_pallas_and_bad_shapes():
+    inputs = _inputs(128, 32, 16, 8)
+    with pytest.raises(OpNotSupportedError):
+        run("moe_dispatch", inputs, None, "pallas")
+    with pytest.raises(ValueError, match="nodelets"):
+        MoEDispatchOp().plan(
+            _inputs(130, 32, 16, 8), MigratoryStrategy(), get_substrate("local")
+        )
+
+
+def test_plan_cache_reuses_moe_executor():
+    """Same shapes + strategy + substrate -> plan-cache hit; different comm
+    (a different dispatch mode) -> distinct entry."""
+    inputs = _inputs(128, 32, 16, 8)
+    cache = PlanCache()
+    _, r1 = run("moe_dispatch", inputs, MigratoryStrategy(), "local", cache=cache)
+    _, r2 = run("moe_dispatch", inputs, MigratoryStrategy(), "local", cache=cache)
+    assert not r1.cache_hit and r2.cache_hit
+    _, r3 = run(
+        "moe_dispatch", inputs, MigratoryStrategy(comm=Comm.MIGRATE), "local",
+        cache=cache,
+    )
+    assert not r3.cache_hit
+    assert len(cache) == 2
+
+
+def test_mesh_kernel_rejects_mismatched_explicit_mesh():
+    """An explicit substrate mesh narrower than inputs.nodelets must raise,
+    not silently shard mis-sized capacity buffers."""
+    from repro.engine import MeshSubstrate
+    from repro.launch.mesh import make_nodelet_mesh
+
+    inputs = _inputs(128, 32, 16, 8)  # nodelets=8
+    sub = MeshSubstrate(mesh=make_nodelet_mesh(1))  # 1-device explicit mesh
+    with pytest.raises(OpNotSupportedError, match="8-way"):
+        run("moe_dispatch", inputs, MigratoryStrategy(), sub, cache=PlanCache())

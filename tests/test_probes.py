@@ -1,0 +1,65 @@
+"""ProbeStore: persistence roundtrip and the corrupt-store regression.
+
+ISSUE 4 satellite: a corrupt/truncated ``experiments/autotune_probes.json``
+must degrade to an empty store with a warning, never crash the autotuner.
+"""
+import json
+import warnings
+
+import pytest
+
+from repro.engine import ProbeStore
+
+KEY = ("spmv", ("local",), ("remote_write", True, "hcb", "pair", None), (), "sig")
+
+
+def test_roundtrip(tmp_path):
+    path = tmp_path / "probes.json"
+    store = ProbeStore(path)
+    assert store.get(KEY) is None
+    store.record(KEY, 0.125)
+    store.save()
+    fresh = ProbeStore(path)
+    assert fresh.get(KEY) == 0.125
+    assert fresh.reused == 1
+    assert len(fresh) == 1
+
+
+def test_missing_file_is_silent(tmp_path):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any warning fails the test
+        store = ProbeStore(tmp_path / "never_written.json")
+        assert len(store) == 0
+
+
+@pytest.mark.parametrize("payload", [
+    '{"probes": {',                      # truncated mid-write
+    '{"probes": {"k": {}}}',             # value of a non-castable type
+    '{"probes": {"k": null}}',           # null seconds
+    '{"probes": [1, 2]}',                # wrong container shape
+    'null',                              # not an object at all
+    '\x00\x01binary-garbage',            # not JSON
+])
+def test_corrupt_store_degrades_to_empty_with_warning(tmp_path, payload):
+    """Regression: every corruption shape loads as an empty store and warns
+    (previously ``float(dict)``/``float(None)`` raised TypeError)."""
+    path = tmp_path / "probes.json"
+    path.write_text(payload)
+    store = ProbeStore(path)
+    with pytest.warns(RuntimeWarning, match="corrupt probe store"):
+        assert len(store) == 0
+    # the degraded store still records and saves over the corrupt file
+    store.record(KEY, 0.5)
+    store.save()
+    assert json.loads(path.read_text())["probes"]
+    assert ProbeStore(path).get(KEY) == 0.5
+
+
+def test_non_utf8_store_degrades_to_empty_with_warning(tmp_path):
+    """Regression: read as bytes, so non-UTF-8 garbage is 'corrupt', not an
+    uncaught UnicodeDecodeError."""
+    path = tmp_path / "probes.json"
+    path.write_bytes(b"\xff\xfe\x00garbage")
+    store = ProbeStore(path)
+    with pytest.warns(RuntimeWarning, match="corrupt probe store"):
+        assert len(store) == 0
