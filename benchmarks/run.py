@@ -73,8 +73,27 @@ def main(argv=None) -> None:
         help="fail (exit 1) if the serve suite's async pipeline showed zero "
         "compile/execute overlap",
     )
+    ap.add_argument(
+        "--workers", type=int, default=None,
+        help="run the serve suite's pooled execution-plane phase with this "
+        "many executor workers (8 forced host devices, mesh substrate; "
+        "writes experiments/pool_stats.json)",
+    )
+    ap.add_argument(
+        "--require-pool-speedup", type=float, default=0.0,
+        help="with --workers: fail unless pooled drain throughput is at "
+        "least this multiple of the workers=1 baseline (asserted inside "
+        "the bench subprocess; CI uses 1.3)",
+    )
     ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args(argv)
+    # the pool gate must fail closed: a gate with no pool phase to run
+    # (missing/1-wide --workers, or a suite selection that skips serve)
+    # would otherwise exit green without ever measuring anything
+    if args.require_pool_speedup > 0 and (args.workers is None or args.workers < 2):
+        ap.error("--require-pool-speedup needs --workers >= 2 to have a pool to gate")
+    if args.workers is not None and args.bench not in (None, "serve"):
+        ap.error("--workers drives the serve suite's pool phase; use --bench serve")
     _register()
     if args.bench:
         if args.bench not in SUITES:
@@ -85,7 +104,13 @@ def main(argv=None) -> None:
     print("bench,case,us_per_call,derived")
     all_rows = []
     for name in names:
-        all_rows.extend(SUITES[name](full=args.full, quick=args.quick))
+        if name == "serve":
+            all_rows.extend(SUITES[name](
+                full=args.full, quick=args.quick, workers=args.workers,
+                min_pool_speedup=args.require_pool_speedup,
+            ))
+        else:
+            all_rows.extend(SUITES[name](full=args.full, quick=args.quick))
 
     from repro.engine import default_cache
 

@@ -31,6 +31,20 @@ def shard_map(
     )
 
 
+def make_mesh_over(devices, axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    """A mesh over an *explicit* device list (the executor pool's per-slot
+    device windows), on any jax version. ``devices`` is a flat sequence; its
+    length must factor into the implied 1-D axis."""
+    import numpy as np
+
+    arr = np.asarray(devices, dtype=object)
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.sharding.Mesh(
+            arr, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    return jax.sharding.Mesh(arr, axes)
+
+
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
     """``jax.make_mesh`` with Auto axis types where the API supports them."""
     if hasattr(jax.sharding, "AxisType"):

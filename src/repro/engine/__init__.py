@@ -57,6 +57,7 @@ from .registry import (
     capabilities,
     default_registry,
     kernel,
+    placement_table,
     register_op,
 )
 from .moe_op import (
@@ -110,7 +111,8 @@ __all__ = [
     "default_probe_store", "default_registry", "execute", "get_substrate",
     "kernel", "list_substrates", "moe_dispatch_cost_model",
     "moe_dispatch_grid", "moe_dispatch_reference", "moe_dispatch_traffic",
-    "plan_key", "rank_strategies", "register_op", "register_substrate",
+    "placement_table", "plan_key", "rank_strategies", "register_op",
+    "register_substrate",
     "resolve_op", "resolve_strategy", "run", "run_plan", "single_call",
     "strategy_dict", "substrate_for_mesh",
 ]

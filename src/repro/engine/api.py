@@ -87,6 +87,11 @@ class ExecutionPlan:
     ``meta`` holds static facts about the inputs (sizes, nnz, ...) plus
     anything the op caches between :meth:`MigratoryOp.traffic` and metric
     computation. ``key=None`` marks a plan as uncacheable.
+
+    ``jit=True`` (the default) lets the compile stage wrap the executor in
+    ``jax.jit`` when it enters the plan cache, so the cached artifact is one
+    fused XLA executable instead of an op-by-op eager trace — ops whose
+    executors do host-side work the tracer cannot see must set it False.
     """
 
     op: str
@@ -97,6 +102,7 @@ class ExecutionPlan:
     args: tuple = ()
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
     key: tuple | None = None
+    jit: bool = True
 
     def run(self) -> Any:
         """Execute this plan's own executor on its own arguments."""

@@ -15,9 +15,11 @@ registry; the module-level ``OPS`` mapping is a live legacy view of it.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import weakref
 from collections.abc import Mapping
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import numpy as np
@@ -47,6 +49,33 @@ from .substrate import Substrate
 # grain values worth distinguishing for row-grained ops (None = dynamic);
 # SpMV's autotune grid sweeps them, the other ops' grids pin grain=None
 GRAIN_CANDIDATES = (None, 16, 64, 256)
+
+
+# Cross-plan memo for host-side derived stats (traffic replays, placement
+# models, nnz scans). The serving path builds a fresh plan per request, so
+# ``plan.meta`` caching alone reruns the O(edges)-ish numpy work — and its
+# device->host transfers — for every served request of the same inputs,
+# serializing the executor pool on the GIL. Keyed by inputs object identity
+# + a static discriminator, validated with a weakref so a recycled id of a
+# collected object can never alias (the moe_op replay-memo pattern).
+_DERIVED_MEMO: "collections.OrderedDict[tuple, tuple]" = collections.OrderedDict()
+_DERIVED_MEMO_MAX = 256
+
+
+def _derived_cached(kind: str, anchor: Any, extra: Any, compute: Callable[[], Any]) -> Any:
+    key = (kind, id(anchor), extra)
+    hit = _DERIVED_MEMO.get(key)
+    if hit is not None and hit[0]() is anchor:
+        _DERIVED_MEMO.move_to_end(key)
+        return hit[1]
+    value = compute()
+    try:
+        _DERIVED_MEMO[key] = (weakref.ref(anchor), value)
+    except TypeError:
+        return value  # unweakrefable anchor: still correct, just uncached
+    while len(_DERIVED_MEMO) > _DERIVED_MEMO_MAX:
+        _DERIVED_MEMO.popitem(last=False)  # LRU: never drop the hot entries
+    return value
 
 
 # -- SpMV ----------------------------------------------------------------------
@@ -80,10 +109,18 @@ class SpMVOp:
         )
 
     def traffic(self, plan: ExecutionPlan) -> TrafficStats:
-        return spmv_traffic(plan.inputs.a, plan.strategy)
+        inputs, strategy = plan.inputs, plan.strategy
+        return _derived_cached(
+            "spmv_traffic", inputs, strategy.cache_key(),
+            lambda: spmv_traffic(inputs.a, strategy),
+        )
 
     def bytes_moved(self, plan: ExecutionPlan) -> int:
-        return spmv_bytes_moved(plan.inputs.a, plan.meta["n_cols"])
+        inputs, n_cols = plan.inputs, plan.meta["n_cols"]
+        return _derived_cached(
+            "spmv_bytes", inputs, n_cols,
+            lambda: spmv_bytes_moved(inputs.a, n_cols),
+        )
 
     def metrics(self, plan: ExecutionPlan, result: Any, seconds: float) -> dict[str, Any]:
         return {
@@ -125,10 +162,14 @@ class BFSOp:
         )
 
     def _stats(self, plan: ExecutionPlan):
-        """The numpy traffic replay, computed once per plan (O(edges))."""
+        """The numpy traffic replay: O(edges), computed once per
+        (inputs, root, strategy) and shared across every plan built for
+        them (the serving path builds one plan per request)."""
         if "run_stats" not in plan.meta:
-            plan.meta["run_stats"] = bfs_traffic(
-                plan.inputs.g, plan.inputs.root, plan.strategy
+            inputs, strategy = plan.inputs, plan.strategy
+            plan.meta["run_stats"] = _derived_cached(
+                "bfs_replay", inputs, (inputs.root, strategy.cache_key()),
+                lambda: bfs_traffic(inputs.g, inputs.root, strategy),
             )
         return plan.meta["run_stats"]
 
@@ -189,17 +230,26 @@ class GSANAOp:
         )
 
     def _plan_stats(self, plan: ExecutionPlan):
-        """S3 placement/traffic model for (layout x scheme), cached per plan."""
+        """S3 placement/traffic model for (layout x scheme), computed once
+        per (inputs, layout, scheme) and shared across plans."""
         if "plan_stats" not in plan.meta:
             i = plan.inputs
-            if plan.strategy.layout == Layout.HCB:
-                placement = layout_hcb(i.b1, i.b2, i.nodelets)
-            else:
-                placement = layout_blk(i.b1, i.b2, i.vs1.n, i.vs2.n, i.nodelets)
-            plan.meta["plan_stats"] = plan_stats(
-                i.vs1, i.vs2, i.b1, i.b2, placement, plan.strategy.scheme,
-                i.nodelets, threads_per_nodelet=i.threads_per_nodelet,
-                migration_penalty=i.migration_penalty,
+            strategy = plan.strategy
+
+            def compute():
+                if strategy.layout == Layout.HCB:
+                    placement = layout_hcb(i.b1, i.b2, i.nodelets)
+                else:
+                    placement = layout_blk(i.b1, i.b2, i.vs1.n, i.vs2.n, i.nodelets)
+                return plan_stats(
+                    i.vs1, i.vs2, i.b1, i.b2, placement, strategy.scheme,
+                    i.nodelets, threads_per_nodelet=i.threads_per_nodelet,
+                    migration_penalty=i.migration_penalty,
+                )
+
+            plan.meta["plan_stats"] = _derived_cached(
+                "gsana_plan_stats", i,
+                (strategy.layout.value, strategy.scheme.value), compute,
             )
         return plan.meta["plan_stats"]
 
@@ -208,7 +258,10 @@ class GSANAOp:
 
     def bytes_moved(self, plan: ExecutionPlan) -> int:
         i = plan.inputs
-        return gsana_rw_bytes(i.vs1, i.vs2, i.b1, i.b2)
+        return _derived_cached(
+            "gsana_rw_bytes", i, None,
+            lambda: gsana_rw_bytes(i.vs1, i.vs2, i.b1, i.b2),
+        )
 
     def metrics(self, plan: ExecutionPlan, result: Any, seconds: float) -> dict[str, Any]:
         ps = self._plan_stats(plan)

@@ -181,3 +181,27 @@ def capabilities() -> dict[str, dict[str, bool]]:
             name: reg.has_kernel(op_name, kind) for name, kind in kinds.items()
         }
     return table
+
+
+def placement_table() -> dict[str, dict[str, Any]]:
+    """The substrate placement view the executor pool routes by: for every
+    registered substrate, its kernel-lookup kind, its placement policy
+    (``"affinity"`` = plan-key groups pin to one slot, never stolen;
+    ``"spread"`` = round-robin + work stealing), and how many independent
+    execution slots it can drive on this host (``placement_slots()`` —
+    device count on mesh, core count on local/pallas). The
+    :class:`~repro.engine.service.EngineService` sizes ``workers="auto"``
+    pools from this and benchmark artifacts record it, so a throughput
+    number is always interpretable against the channels that produced it.
+    """
+    from .substrate import get_substrate, list_substrates
+
+    table: dict[str, dict[str, Any]] = {}
+    for name in list_substrates():
+        sub = get_substrate(name)
+        table[name] = {
+            "kind": sub.substrate_kind,
+            "policy": sub.placement_policy,
+            "slots": sub.placement_slots(),
+        }
+    return table

@@ -62,9 +62,17 @@ def build_plan(
     return op.plan(inputs, resolve_strategy(op, inputs, strategy), sub)
 
 
-def compile_plan(plan: ExecutionPlan, cache: PlanCache | None = None) -> CompiledPlan:
-    """Stage 2: compile. Resolve the plan's executor through the cache."""
-    return (default_cache() if cache is None else cache).get(plan)
+def compile_plan(
+    plan: ExecutionPlan,
+    cache: PlanCache | None = None,
+    *,
+    slot: "int | None" = None,
+) -> CompiledPlan:
+    """Stage 2: compile. Resolve the plan's executor through the cache —
+    for keyed plans the first resolution wraps it in ``jax.jit``, so the
+    cached artifact is a fused executable. ``slot`` tags the entry with the
+    executor-pool slot doing the resolving (placement pinning, §1b)."""
+    return (default_cache() if cache is None else cache).get(plan, slot=slot)
 
 
 def _timed_call(compiled: CompiledPlan, times: list[float]) -> Any:
@@ -80,6 +88,7 @@ def execute(
     iters: int = 3,
     warmup: int = 1,
     cache: PlanCache | None = None,
+    slot: "int | None" = None,
 ) -> tuple[Any, float, float]:
     """Stage 3: execute. Returns ``(result, seconds, compile_seconds)``.
 
@@ -90,7 +99,7 @@ def execute(
     is timed compile-inclusive (the pre-cache engine's behavior).
     """
     if isinstance(compiled, ExecutionPlan):
-        compiled = compile_plan(compiled, cache)
+        compiled = compile_plan(compiled, cache, slot=slot)
     timed: list[float] = []
     compile_seconds = 0.0
     result = None
@@ -113,21 +122,29 @@ def execute(
 
 
 def single_call(
-    plan: ExecutionPlan, op: MigratoryOp, *, cache: PlanCache | None = None
+    plan: ExecutionPlan,
+    op: MigratoryOp,
+    *,
+    cache: PlanCache | None = None,
+    slot: "int | None" = None,
 ) -> tuple[Any, RunReport]:
     """One timed call through the cache — the unit of work of the async
-    service's two pipeline stages (DESIGN.md §1d).
+    service's pipeline stages (DESIGN.md §1d).
 
     On a *cold* plan this call is the **compile** stage: the single timed
     call traces + compiles, and the report carries
     ``cache_hit=False, seconds == compile_seconds``. On a *warm* plan it is
     the **execute** stage: a pure steady-state call with
     ``cache_hit=True, compile_seconds=0.0``. The split lets the service
-    overlap the compile of one plan-key group with the execution of another
+    overlap the compile of one plan-key group with the execution of others
     while each request still runs exactly the call sequence the synchronous
     path would have run — parity is structural, not incidental.
+
+    ``slot`` is the placement tag: the executor-pool worker making the call.
+    A compiling call pins the cache entry to it; a stolen execution passes
+    its own slot but the pin stays with the compiling worker (§1b).
     """
-    return run_plan(plan, op, iters=1, warmup=0, cache=cache)
+    return run_plan(plan, op, iters=1, warmup=0, cache=cache, slot=slot)
 
 
 def run_plan(
@@ -137,9 +154,10 @@ def run_plan(
     iters: int = 3,
     warmup: int = 1,
     cache: PlanCache | None = None,
+    slot: "int | None" = None,
 ) -> tuple[Any, RunReport]:
     """Compile + execute an already-built plan and assemble its RunReport."""
-    compiled = compile_plan(plan, cache)
+    compiled = compile_plan(plan, cache, slot=slot)
     result, seconds, compile_seconds = execute(
         compiled, iters=iters, warmup=warmup, cache=cache
     )

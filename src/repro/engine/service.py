@@ -9,43 +9,51 @@ so each group compiles at most once.
     t = svc.submit("spmv", inputs)               # -> int ticket
     responses = svc.drain()                      # one compile per plan key
 
-**Worker-loop mode** (the serving path): ``start()`` spawns a two-stage
-pipeline — a *compile* thread that pops plan-key groups off the admission
-queue, schedules them by QoS weight, and runs each group's first (possibly
-compiling) call, feeding a bounded queue to an *execute* thread that serves
-the group's remaining cache-hit calls. While the execute thread works
-through group N, the compile thread is already tracing/compiling group N+1,
-so compile and execute wall time overlap instead of adding — the
-compile-N+1-while-executing-N structure of the migratory-thread model
-(keep work in flight against memory; never serialize on data movement).
+**Worker-loop mode** (the serving path): ``start()`` spawns an *execution
+plane* — one scheduler/compile thread feeding a pool of N executor workers:
 
-    svc = EngineService(max_queue_depth=256, admission="block",
-                        qos={"bfs": 2.0})
+- the **scheduler** pops plan-key groups off the admission queue, orders
+  them by QoS weight, places each group on a pool slot (substrate-aware:
+  per-device affinity on mesh, round-robin on local), runs the group's
+  first (possibly compiling) call, and hands warm work to the slot's queue;
+- each **executor worker** serves its queue of cache-hit calls in QoS
+  order; an idle worker steals queued (or straggling) groups from the
+  busiest peer — but only on "spread" substrates, never from a device-pinned
+  mesh slot.
+
+While worker ``k`` executes group N, the scheduler is already compiling
+group N+1 and the other workers are executing other groups — the
+keep-contexts-in-flight structure of the migratory-thread model: independent
+memory-side work proceeds on every channel at once, and compile time hides
+under execution instead of adding to it.
+
+    svc = EngineService(workers=4, max_queue_depth=256, qos={"bfs": 2.0})
     svc.start()
     fut = svc.submit("spmv", inputs)             # -> ServiceFuture, non-blocking
     resp = fut.result(timeout=60)                # ServiceResponse
     svc.stop()                                   # drains by default
-    print(svc.stats().overlap_ratio)             # compile hidden under execute
+    print(svc.stats().worker_occupancy)          # per-worker utilization
 
 Admission control: ``max_queue_depth`` bounds the request queue;
 ``admission="block"`` applies backpressure to submitters (requires a running
 worker to make progress), ``admission="reject"`` raises
 :class:`AdmissionError` immediately (counted in ``ServiceStats.rejected``).
 ``qos`` maps op names to scheduling weights — within each queue snapshot,
-higher-weight groups run first (ordering, not preemption).
+higher-weight groups run first, and the per-slot queues preserve that order
+within every worker (ordering, not preemption).
 
-Results are **bit-identical** to sequential ``engine.run`` in both modes:
-each request still executes the same cached-executor call the synchronous
-path would have run; concurrency changes *when* plans compile, never what
-they compute (``tests/test_service_async.py`` pins this under concurrent
-mixed-op submission).
+Results are **bit-identical** to sequential ``engine.run`` in both modes
+and at any pool width: each request still executes the same cached-executor
+call the synchronous path would have run; concurrency changes *when* plans
+compile and *where* warm calls run, never what they compute
+(``tests/test_service_async.py`` and ``tests/test_service_pool.py`` pin
+this under concurrent mixed-op load for W ∈ {1, 2, 4}).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import hashlib
-import queue as queue_mod
 import threading
 import time
 from collections import deque
@@ -61,11 +69,16 @@ from .cache import PlanCache
 from .runner import build_plan, resolve_op, single_call
 from .substrate import Substrate, get_substrate
 
-_STOP = object()  # execute-loop shutdown sentinel
-
 # per-request latency samples kept for percentile estimation (newest wins;
 # bounds memory for long-lived services, like the span folding below)
 _LATENCY_WINDOW = 4096
+
+# workers="auto" resolves to min(this, substrate.placement_slots())
+_AUTO_WORKER_CAP = 8
+
+# placement memory (base plan key -> slot) is LRU-bounded; evicting a pin
+# only costs a re-placement, never correctness
+_PIN_TABLE_MAX = 4096
 
 
 def _percentile(ordered: "list[float]", q: float) -> float:
@@ -143,13 +156,35 @@ class ServiceFuture:
 
 @dataclasses.dataclass
 class _WorkItem:
-    """One admitted worker-loop request moving through the pipeline."""
+    """One admitted worker-loop request moving through the pipeline.
+
+    ``waiters`` are in-flight-coalesced duplicates: (ticket, future) pairs
+    of value-identical requests that attached to this item instead of
+    queueing. They resolve (or fail, or cancel) with it, atomically."""
 
     request: ServiceRequest
     future: ServiceFuture
     op: Any = None
     plan: Any = None
     dedup_key: "str | None" = None  # content hash when dedup is enabled
+    waiters: "list[tuple[int, ServiceFuture]]" = dataclasses.field(
+        default_factory=list
+    )
+
+
+@dataclasses.dataclass
+class _Group:
+    """One plan-key group placed on a pool slot — the scheduling unit of the
+    execution plane. ``items`` is consumed head-first by the owning worker;
+    stealers split from the tail, so arrival order survives on the owner."""
+
+    key: Any
+    qos: float
+    first_ticket: int
+    slot: int = 0
+    stealable: bool = True
+    stolen: bool = False  # arrived at its worker via a steal, not dispatch
+    items: "deque[_WorkItem]" = dataclasses.field(default_factory=deque)
 
 
 def _hash_value(h, value: Any) -> None:
@@ -213,12 +248,29 @@ def _union_seconds(spans: "list[tuple[float, float]]") -> float:
     return total
 
 
+def _merge_spans(
+    spans: "list[tuple[float, float]]",
+) -> "list[tuple[float, float]]":
+    """Union of spans as a sorted, non-overlapping span list (the executor
+    pool's N workers overlap each other; merging first keeps the two-pointer
+    intersection below exact)."""
+    merged: list[tuple[float, float]] = []
+    for t0, t1 in sorted(spans):
+        if merged and t0 <= merged[-1][1]:
+            if t1 > merged[-1][1]:
+                merged[-1] = (merged[-1][0], t1)
+        else:
+            merged.append((t0, t1))
+    return merged
+
+
 def _intersection_seconds(
     a: "list[tuple[float, float]]", b: "list[tuple[float, float]]"
 ) -> float:
-    """Total time spans from ``a`` and ``b`` ran simultaneously. Each list is
-    internally non-overlapping (one pipeline thread produced each), so a
-    two-pointer sweep is exact."""
+    """Total time spans from ``a`` and ``b`` ran simultaneously. Each list
+    must be internally non-overlapping (``a``: the single scheduler thread;
+    ``b``: pre-merged via :func:`_merge_spans`), so a two-pointer sweep is
+    exact."""
     a, b = sorted(a), sorted(b)
     i = j = 0
     total = 0.0
@@ -245,10 +297,11 @@ class ServiceStats:
       admission -> latest completion, so idle time between bursts counts —
       it is the denominator of sustained ``requests_per_second``.
     - ``busy_seconds`` — time at least one pipeline stage was doing work
-      (union of compile-stage and execute-stage spans; equals wall time in
-      batch mode, where drain() is always busy). ``wall - busy`` is idle.
+      (union of compile-stage and all executor-worker spans; equals wall
+      time in batch mode, where drain() is always busy). ``wall - busy`` is
+      idle.
     - ``overlap_seconds`` — time the compile stage of one plan-key group ran
-      simultaneously with the execute stage of another;
+      simultaneously with any worker executing another;
       ``overlap_ratio = overlap_seconds / total compile-stage seconds`` is
       the fraction of compile time hidden under execution (0 in batch mode).
     - ``queue_wait_p50/p95/p99`` — per-request admission -> run-start wait;
@@ -257,7 +310,15 @@ class ServiceStats:
       executed requests; dedup-served requests wait for neither and are
       excluded.
     - ``dedup_hits`` — requests answered from the value-keyed response cache
-      without executing (``dedup=True`` services only).
+      without executing (``dedup=True`` services only). ``dedup_coalesced``
+      is the in-flight subset: duplicates that attached to a *pending*
+      identical request's future instead of waiting for it to complete
+      first (so ``dedup_hits - dedup_coalesced`` answered post-completion).
+    - ``workers``/``steals`` and the ``worker_*`` columns — the execution
+      plane: pool width, total stolen groups, and per-worker busy seconds /
+      executed requests / steals / occupancy (busy ÷ serving window). One
+      ``to_dict()`` row carries the merged view so bench artifacts stay a
+      single record per run.
     """
 
     requests: int = 0
@@ -276,12 +337,19 @@ class ServiceStats:
     overlap_seconds: float = 0.0
     overlap_ratio: float = 0.0
     dedup_hits: int = 0  # responses served from the value-keyed dedup cache
+    dedup_coalesced: int = 0  # ... of which attached to an in-flight primary
+    workers: int = 1  # executor-pool width (1 = the pre-pool pipeline)
+    steals: int = 0  # groups (or group tails) migrated to an idle worker
     queue_wait_p50: float = 0.0
     queue_wait_p95: float = 0.0
     queue_wait_p99: float = 0.0
     service_p50: float = 0.0
     service_p95: float = 0.0
     service_p99: float = 0.0
+    worker_busy_seconds: "list[float]" = dataclasses.field(default_factory=list)
+    worker_requests: "list[int]" = dataclasses.field(default_factory=list)
+    worker_steals: "list[int]" = dataclasses.field(default_factory=list)
+    worker_occupancy: "list[float]" = dataclasses.field(default_factory=list)
 
     @property
     def requests_per_second(self) -> float:
@@ -310,12 +378,19 @@ class ServiceStats:
             "overlap_seconds": self.overlap_seconds,
             "overlap_ratio": self.overlap_ratio,
             "dedup_hits": self.dedup_hits,
+            "dedup_coalesced": self.dedup_coalesced,
+            "workers": self.workers,
+            "steals": self.steals,
             "queue_wait_p50": self.queue_wait_p50,
             "queue_wait_p95": self.queue_wait_p95,
             "queue_wait_p99": self.queue_wait_p99,
             "service_p50": self.service_p50,
             "service_p95": self.service_p95,
             "service_p99": self.service_p99,
+            "worker_busy_seconds": self.worker_busy_seconds,
+            "worker_requests": self.worker_requests,
+            "worker_steals": self.worker_steals,
+            "worker_occupancy": self.worker_occupancy,
             "requests_per_second": self.requests_per_second,
             "amortization": self.amortization,
         }
@@ -325,20 +400,26 @@ class EngineService:
     """Serving front-end over the plan/compile/execute pipeline.
 
     Constructed services are in batch mode; ``start()`` switches to the
-    worker loop (module docstring). Admission-control and QoS knobs apply to
-    both modes; ``batch_window`` is the micro-batching window — after the
-    first request of a burst arrives, the worker waits this long before
-    snapshotting the queue so bursts group into fewer, larger plan-key
-    groups; ``pipeline_depth`` bounds the compiled-group queue between the
-    two stages (backpressure on the compile thread).
+    worker loop (module docstring). ``workers`` sets the executor-pool
+    width: an int, or ``"auto"`` to size from the default substrate's
+    ``placement_slots()`` (capped at 8). Admission-control and QoS knobs
+    apply to both modes; ``batch_window`` is the micro-batching window —
+    after the first request of a burst arrives, the scheduler waits this
+    long before snapshotting the queue so bursts group into fewer, larger
+    plan-key groups; ``pipeline_depth`` scales the plane's dispatch budget
+    — at most ``pipeline_depth * workers`` groups queued across the pool
+    (a shared budget, not a per-worker cap: the scheduler never blocks on
+    one hot slot while others starve) — as backpressure on the scheduler.
 
     ``dedup=True`` puts a value-keyed response cache in front of the
     pipeline: requests whose op + strategy + substrate + input *values*
     content-hash to an already-served request are answered from the stored
-    response without planning or executing (``ServiceStats.dedup_hits``).
-    Sound because ops are pure functions of their inputs; the replayed
-    response carries the original execution's report. Off by default —
-    hashing large input pytrees on every submit is not free.
+    response without planning or executing, and concurrent identical
+    requests coalesce onto the pending request's future
+    (``ServiceStats.dedup_hits`` / ``dedup_coalesced``). Sound because ops
+    are pure functions of their inputs; the replayed response carries the
+    original execution's report. Off by default — hashing large input
+    pytrees on every submit is not free.
     """
 
     def __init__(
@@ -347,6 +428,7 @@ class EngineService:
         substrate: "Substrate | str" = "local",
         autotune: bool = False,
         *,
+        workers: "int | str" = 1,
         max_queue_depth: "int | None" = None,
         admission: str = "block",
         qos: "dict[str, float] | None" = None,
@@ -359,9 +441,15 @@ class EngineService:
             raise ValueError(
                 f"admission must be 'block' or 'reject', got {admission!r}"
             )
+        if isinstance(workers, str):
+            if workers != "auto":
+                raise ValueError(f"workers must be an int >= 1 or 'auto', got {workers!r}")
+        elif int(workers) < 1:
+            raise ValueError(f"workers must be an int >= 1 or 'auto', got {workers!r}")
         self.cache = cache if cache is not None else PlanCache()
         self.default_substrate = substrate
         self.autotune = autotune
+        self.workers = workers
         self.max_queue_depth = max_queue_depth
         self.admission = admission
         # validate weights here: a bad value must fail the constructor, not
@@ -375,25 +463,46 @@ class EngineService:
         self._dedup_store: "collections.OrderedDict[str, ServiceResponse]" = (
             collections.OrderedDict()
         )
+        # content hash -> the in-flight primary item coalesced waiters attach to
+        self._dedup_pending: "dict[str, _WorkItem]" = {}
         # per-request latency samples (bounded; see ServiceStats docstring)
         self._queue_waits: deque = deque(maxlen=_LATENCY_WINDOW)
         self._service_times: deque = deque(maxlen=_LATENCY_WINDOW)
         self._pending: list[ServiceRequest] = []
         self._next_ticket = 0
         self._stats = ServiceStats()
-        # worker-loop state: one lock, three conditions on it
+        # worker-loop state: one lock, five conditions on it
         self._lock = threading.Lock()
-        self._work = threading.Condition(self._lock)  # worker: items arrived
+        self._work = threading.Condition(self._lock)  # scheduler: items arrived
         self._space = threading.Condition(self._lock)  # submitters: space freed
         self._idle = threading.Condition(self._lock)  # flush(): all resolved
+        self._pool_work = threading.Condition(self._lock)  # workers: groups queued
+        self._pool_space = threading.Condition(self._lock)  # scheduler: slot freed
         self._queue: deque[_WorkItem] = deque()
         self._inflight = 0  # admitted worker requests not yet resolved
         self._running = False
         self._stopping = False
+        self._sched_done = False  # scheduler exited; workers may drain + exit
+        self._cancel_queued = False  # stop(drain=False): cancel undispatched work
         self._threads: list[threading.Thread] = []
-        self._exec_queue: queue_mod.Queue = queue_mod.Queue(maxsize=self.pipeline_depth)
+        # the execution plane: per-worker group queues + in-progress groups
+        self._n_workers = 1
+        self._pool_queues: "list[list[_Group]]" = []
+        self._pool_current: "list[_Group | None]" = []
+        self._worker_spans: "list[list[tuple[float, float]]]" = []
+        self._worker_busy: list[float] = []
+        self._worker_reqs: list[int] = []
+        self._worker_steal_counts: list[int] = []
+        # placement memory: base plan key -> slot (scheduler thread only)
+        self._pins: "collections.OrderedDict[Any, int]" = collections.OrderedDict()
+        self._rr_next = 0
+        # every not-yet-done worker-mode future, for the shutdown sweep that
+        # guarantees no submitted future is ever stranded
+        self._live: "dict[int, ServiceFuture]" = {}
+        # (worker, first_ticket, qos) per executed group — bounded debug
+        # trace the pool tests assert per-worker QoS ordering against
+        self._exec_trace: deque = deque(maxlen=4096)
         self._compile_spans: list[tuple[float, float]] = []
-        self._exec_spans: list[tuple[float, float]] = []
         # long-run safety: spans periodically fold into these accumulators so
         # a service alive for millions of requests stays O(1) in memory
         self._overlap_acc = 0.0
@@ -412,6 +521,12 @@ class EngineService:
 
     def qos_weight(self, op_name: str) -> float:
         return float(self.qos.get(op_name, 1.0))
+
+    def _resolve_workers(self) -> int:
+        if isinstance(self.workers, int):
+            return max(1, self.workers)
+        sub = get_substrate(self.default_substrate)
+        return max(1, min(_AUTO_WORKER_CAP, sub.placement_slots()))
 
     def _admit_locked(self) -> None:
         if self._stopping:
@@ -446,8 +561,9 @@ class EngineService:
         ``drain()``); worker-loop mode returns a :class:`ServiceFuture`.
         Full queues block or raise per the admission policy. With
         ``dedup=True``, a worker-mode request whose content hash matches an
-        already-served response resolves immediately — it never enters the
-        queue (batch mode dedups inside ``drain()``)."""
+        already-*served* response resolves immediately, and one matching a
+        *pending* identical request coalesces onto its future — neither
+        enters the queue (batch mode dedups inside ``drain()``)."""
         if strategy is None and self.autotune:
             strategy = "auto"
         sub = substrate if substrate is not None else self.default_substrate
@@ -456,21 +572,18 @@ class EngineService:
         # never serve a hit there (responses only exist once drain runs)
         if self.dedup and self._running:
             dkey = _content_hash(op, inputs, strategy, sub)  # outside the lock
-            with self._lock:
-                hit = self._dedup_store.get(dkey)
-                if hit is not None and self._running and not self._stopping:
-                    self._dedup_store.move_to_end(dkey)
-                    ticket = self._next_ticket
-                    self._next_ticket += 1
-                    self._stats.requests += 1
-                    self._stats.dedup_hits += 1
-                    future = ServiceFuture(ticket)
-                    future._resolve(
-                        ServiceResponse(ticket, hit.result, hit.report)
-                    )
-                    return future
         with self._lock:
+            if dkey is not None and self._running and not self._stopping:
+                served = self._dedup_submit_locked(dkey)
+                if served is not None:
+                    return served
             self._admit_locked()
+            if dkey is not None and self._running:
+                # _admit_locked may have blocked; the answer (or a pending
+                # primary) may have appeared while we waited
+                served = self._dedup_submit_locked(dkey)
+                if served is not None:
+                    return served
             ticket = self._next_ticket
             self._next_ticket += 1
             req = ServiceRequest(
@@ -483,7 +596,11 @@ class EngineService:
             )
             if self._running:
                 future = ServiceFuture(ticket)
-                self._queue.append(_WorkItem(req, future, dedup_key=dkey))
+                item = _WorkItem(req, future, dedup_key=dkey)
+                if dkey is not None:
+                    self._dedup_pending[dkey] = item
+                self._queue.append(item)
+                self._live[ticket] = future
                 self._inflight += 1
                 if self._t_first is None:
                     self._t_first = time.perf_counter()
@@ -498,11 +615,47 @@ class EngineService:
             )
             return ticket
 
+    def _dedup_submit_locked(self, dkey: str) -> "ServiceFuture | None":
+        """Submit-time dedup: serve from the response store, or coalesce
+        onto a pending identical request. None = no hit, enqueue normally."""
+        hit = self._dedup_store.get(dkey)
+        if hit is not None:
+            self._dedup_store.move_to_end(dkey)
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._stats.requests += 1
+            self._stats.dedup_hits += 1
+            future = ServiceFuture(ticket)
+            future._resolve(ServiceResponse(ticket, hit.result, hit.report))
+            return future
+        prim = self._dedup_pending.get(dkey)
+        if prim is not None:
+            if prim.future.done():
+                # primary finished between resolving its future and its
+                # locked bookkeeping; serve from its response if it has one
+                resp = prim.future._response
+                if resp is None:
+                    return None  # primary failed: caller becomes a new primary
+                ticket = self._next_ticket
+                self._next_ticket += 1
+                self._stats.requests += 1
+                self._stats.dedup_hits += 1
+                future = ServiceFuture(ticket)
+                future._resolve(ServiceResponse(ticket, resp.result, resp.report))
+                return future
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            future = ServiceFuture(ticket)
+            prim.waiters.append((ticket, future))
+            self._live[ticket] = future
+            return future
+        return None
+
     # -- lifecycle -------------------------------------------------------------
 
     def start(self) -> "EngineService":
-        """Spawn the worker loop; subsequent ``submit()`` calls return
-        futures. Restartable after ``stop()``."""
+        """Spawn the execution plane (scheduler + executor pool); subsequent
+        ``submit()`` calls return futures. Restartable after ``stop()``."""
         with self._lock:
             if self._running:
                 raise RuntimeError("service already started")
@@ -512,14 +665,31 @@ class EngineService:
                 )
             self._running = True
             self._stopping = False
-            self._exec_queue = queue_mod.Queue(maxsize=self.pipeline_depth)
+            self._sched_done = False
+            self._cancel_queued = False
+            self._n_workers = self._resolve_workers()
+            n = self._n_workers
+            self._pool_queues = [[] for _ in range(n)]
+            self._pool_current = [None] * n
+            while len(self._worker_spans) < n:
+                self._worker_spans.append([])
+                self._worker_busy.append(0.0)
+                self._worker_reqs.append(0)
+                self._worker_steal_counts.append(0)
             self._threads = [
                 threading.Thread(
-                    target=self._worker_loop, name="engine-service-compile", daemon=True
-                ),
+                    target=self._scheduler_loop,
+                    name="engine-service-scheduler",
+                    daemon=True,
+                )
+            ] + [
                 threading.Thread(
-                    target=self._execute_loop, name="engine-service-execute", daemon=True
-                ),
+                    target=self._worker_loop,
+                    args=(w,),
+                    name=f"engine-service-exec-{w}",
+                    daemon=True,
+                )
+                for w in range(n)
             ]
             threads = list(self._threads)
         for t in threads:
@@ -528,27 +698,35 @@ class EngineService:
 
     def stop(self, drain: bool = True, timeout: "float | None" = None) -> None:
         """Graceful shutdown. ``drain=True`` serves everything already
-        admitted first; ``drain=False`` cancels still-queued requests (their
-        futures raise :class:`ServiceStopped`; groups already in the
-        pipeline complete). Idempotent; ``start()`` again to restart. If
-        ``timeout`` expires with workers still running, raises TimeoutError
-        and leaves the service in the stopping state — call ``stop()``
-        again; it never marks a still-running service as stopped."""
+        admitted first; ``drain=False`` cancels still-queued requests — in
+        the admission queue, in every worker's group queue, *and* in the
+        scheduler's not-yet-compiled snapshot — along with their coalesced
+        waiters (the futures raise :class:`ServiceStopped`; groups already
+        compiled or handed to a worker complete).
+        After the pool joins, a final sweep rejects any future that somehow
+        survived, so every submitted future terminates. Idempotent;
+        ``start()`` again to restart. If ``timeout`` expires with workers
+        still running, raises TimeoutError and leaves the service in the
+        stopping state — call ``stop()`` again; it never marks a
+        still-running service as stopped."""
         with self._lock:
             if not self._running:
                 return
             self._stopping = True
             if not drain:
+                self._cancel_queued = True
                 while self._queue:
-                    item = self._queue.popleft()
-                    item.future._reject(
-                        ServiceStopped("service stopped before this request ran")
-                    )
-                    self._inflight -= 1
-                    self._stats.cancelled += 1
+                    self._cancel_item_locked(self._queue.popleft())
+                for q in self._pool_queues:
+                    for group in q:
+                        while group.items:
+                            self._cancel_item_locked(group.items.popleft())
+                    q.clear()
                 self._idle.notify_all()
+                self._pool_space.notify_all()
             self._work.notify_all()
             self._space.notify_all()
+            self._pool_work.notify_all()
             threads = list(self._threads)
         for t in threads:
             t.join(timeout)
@@ -562,6 +740,20 @@ class EngineService:
         with self._lock:
             self._running = False
             self._threads = []
+            # regression net (the stop/mid-flight race): with the plane shut
+            # down, any future neither resolved nor cancelled is stranded
+            # forever — reject it now so every submitted future terminates
+            leaked = [f for f in self._live.values() if not f.done()]
+            for fut in leaked:
+                fut._reject(
+                    ServiceStopped("service stopped with this request unresolved")
+                )
+                self._stats.cancelled += 1
+            self._live.clear()
+            self._dedup_pending.clear()
+            if leaked:
+                self._inflight = 0
+                self._idle.notify_all()
             # _stopping stays True: submit() after stop raises ServiceStopped
             # until start() is called again.
 
@@ -580,11 +772,12 @@ class EngineService:
                     raise TimeoutError("flush timed out with work still in flight")
                 self._idle.wait(timeout=0.1)
 
-    # -- the pipeline ----------------------------------------------------------
+    # -- the execution plane ---------------------------------------------------
 
-    def _worker_loop(self) -> None:
-        """Stage-1 thread: snapshot the queue, schedule plan-key groups by
-        QoS, run each group's compile call, feed the execute stage."""
+    def _scheduler_loop(self) -> None:
+        """The plane's single compile stage: snapshot the queue, schedule
+        plan-key groups by QoS, place each on a pool slot, run cold groups'
+        compiling call, feed warm work to the executor workers."""
         try:
             while True:
                 with self._lock:
@@ -597,84 +790,290 @@ class EngineService:
                 if self.batch_window > 0:
                     time.sleep(self.batch_window)  # let the burst accumulate
                 with self._lock:
-                    snapshot = list(self._queue)
+                    snapshot = [item for item in self._queue]
                     self._queue.clear()
                     self._space.notify_all()
                 try:
                     dispatched: set[int] = set()
-                    for group in self._plan_groups(snapshot):
-                        self._compile_group(group)
-                        self._exec_queue.put(group)  # bounded: backpressure
-                        dispatched.update(id(item) for item in group)
+                    for items in self._plan_groups(snapshot):
+                        with self._lock:
+                            # stop(drain=False) after the snapshot was taken:
+                            # honor it — groups not yet compiled or handed to
+                            # a worker cancel like still-queued requests do
+                            if self._cancel_queued:
+                                for item in items:
+                                    if not item.future.done():
+                                        self._cancel_item_locked(item)
+                                        dispatched.add(id(item))
+                                self._idle.notify_all()
+                                continue
+                        group = self._place_group(items)
+                        if group is None:
+                            continue
+                        with self._lock:
+                            self._stats.batches += 1
+                        if not self.cache.is_warm(group.key):
+                            first = group.items.popleft()
+                            dispatched.add(id(first))
+                            self._compile_item(first, group.slot)
+                        if group.items:
+                            dispatched.update(id(it) for it in group.items)
+                            self._dispatch_group(group)
                 except Exception as exc:
                     # defensive: a scheduler bug must not strand futures —
                     # reject the snapshot's undispatched requests (the
-                    # execute stage owns the dispatched ones) and keep going
+                    # executor pool owns the dispatched ones) and keep going
                     for item in snapshot:
                         if id(item) not in dispatched and not item.future.done():
                             self._finish_error(item, exc)
         finally:
-            self._exec_queue.put(_STOP)
+            with self._lock:
+                self._sched_done = True
+                self._pool_work.notify_all()
 
-    def _execute_loop(self) -> None:
-        """Stage-2 thread: serve each group's remaining (cache-hit) calls
-        while the compile thread works on the next group."""
+    def _place_group(self, items: "list[_WorkItem]") -> "_Group | None":
+        """Substrate-aware placement: resolve the group's slot (pinned key >
+        cache pin > round-robin) and, when the substrate carves per-slot
+        variants (mesh device windows), rebuild the members' plans against
+        the slot's variant so their compiled executables are keyed to it."""
+        if not items:
+            return None
+        first = items[0]
+        base_sub = get_substrate(first.request.substrate)
+        bkey = (
+            first.plan.key
+            if first.plan.key is not None
+            else ("__unkeyed__", first.request.ticket)
+        )
+        n = self._n_workers
+        slot = 0
+        affinity = base_sub.placement_policy == "affinity"
+        if n > 1:
+            if affinity:
+                # sticky: a key re-routes to the slot that compiled it, so
+                # its device-window executable never migrates
+                slot = self._pins.get(bkey)
+                if slot is None:
+                    slot = self.cache.slot_of(first.plan.key)
+                if slot is None:
+                    slot = self._rr_next % n
+                    self._rr_next += 1
+                slot %= n
+                self._pins[bkey] = slot
+                self._pins.move_to_end(bkey)
+                while len(self._pins) > _PIN_TABLE_MAX:
+                    self._pins.popitem(last=False)
+                # also pin the base key in the cache: the compiled entry
+                # lives under the slot-variant key, so without this alias a
+                # fresh service (or an evicted _pins entry) would re-place
+                # the key and recompile it against a different window
+                self.cache.pin_key(first.plan.key, slot)
+            else:
+                # spread: plain round-robin; stealing rebalances the rest
+                slot = self._rr_next % n
+                self._rr_next += 1
+            variant = base_sub.placement_variant(slot, n)
+            if variant is not base_sub:
+                # one rebuild per group: members share an identity plan
+                try:
+                    plan = build_plan(
+                        first.op, first.request.inputs, first.plan.strategy, variant
+                    )
+                except Exception as exc:  # placement failures reject the group
+                    for item in items:
+                        self._finish_error(item, exc)
+                    return None
+                for item in items:
+                    item.plan = plan
+        return _Group(
+            key=items[0].plan.key,
+            qos=self.qos_weight(items[0].op.name),
+            first_ticket=items[0].request.ticket,
+            slot=slot,
+            stealable=not affinity,
+            items=deque(items),
+        )
+
+    def _dispatch_group(self, group: _Group) -> None:
+        """Hand a (now warm) group to its slot's queue, QoS-ordered. The
+        plane holds at most ``pipeline_depth * workers`` queued groups in
+        total (backpressure on the scheduler; a shared budget so dispatch
+        to idle slots never blocks behind one hot slot's queue)."""
+        with self._lock:
+            while (
+                sum(len(q) for q in self._pool_queues)
+                >= self.pipeline_depth * self._n_workers
+            ):
+                self._pool_space.wait(timeout=0.1)
+            q = self._pool_queues[group.slot]
+            rank = (-group.qos, group.first_ticket)
+            idx = len(q)
+            for i, queued in enumerate(q):
+                if (-queued.qos, queued.first_ticket) > rank:
+                    idx = i
+                    break
+            q.insert(idx, group)
+            self._pool_work.notify_all()
+
+    def _worker_loop(self, w: int) -> None:
+        """Executor worker ``w``: serve own queue in QoS order; steal from
+        the busiest peer when idle (spread-policy groups only)."""
         while True:
-            group = self._exec_queue.get()
-            if group is _STOP:
-                return
-            rest = group[1:]
-            if not rest:
-                continue
+            with self._lock:
+                group = self._pop_group_locked(w)
+                if group is None:
+                    if self._sched_done and not any(self._pool_queues):
+                        break
+                    self._pool_work.wait(timeout=0.05)
+                    continue
+                self._pool_current[w] = group
+                self._exec_trace.append(
+                    (w, group.first_ticket, group.qos, group.stolen)
+                )
+                self._pool_space.notify_all()
             t0 = time.perf_counter()
-            for item in rest:
-                self._run_item(item)
+            served = 0
+            while True:
+                with self._lock:
+                    if not group.items:
+                        break
+                    item = group.items.popleft()
+                self._run_item(item, slot=w)
+                served += 1
             t1 = time.perf_counter()
             with self._lock:
-                self._exec_spans.append((t0, t1))
-                self._note_span_end_locked(t1)
-                self._maybe_fold_spans_locked()
+                self._pool_current[w] = None
+                if served:
+                    self._worker_spans[w].append((t0, t1))
+                    self._worker_busy[w] += t1 - t0
+                    self._worker_reqs[w] += served
+                    self._note_span_end_locked(t1)
+                    self._maybe_fold_spans_locked()
+
+    def _pop_group_locked(self, w: int) -> "_Group | None":
+        """Own queue head, else steal. Stealing prefers whole queued groups
+        from the most-loaded peer (tail = lowest priority, so the victim's
+        QoS order is undisturbed); failing that, it splits the tail half of
+        the largest in-progress stealable group (straggler relief)."""
+        q = self._pool_queues[w]
+        if q:
+            return q.pop(0)
+        if self._n_workers <= 1:
+            return None
+        victim, loaded = None, 0
+        for v, vq in enumerate(self._pool_queues):
+            if v == w:
+                continue
+            n_stealable = sum(1 for g in vq if g.stealable)
+            if n_stealable > loaded:
+                victim, loaded = v, n_stealable
+        if victim is not None:
+            vq = self._pool_queues[victim]
+            for i in range(len(vq) - 1, -1, -1):
+                if vq[i].stealable:
+                    group = vq.pop(i)
+                    group.slot = w
+                    group.stolen = True
+                    self._note_steal_locked(w)
+                    return group
+        # no queued group to take: split a straggler's remaining tail
+        best = None
+        for v, cur in enumerate(self._pool_current):
+            if v == w or cur is None or not cur.stealable:
+                continue
+            if len(cur.items) >= 2 and (
+                best is None or len(cur.items) > len(best.items)
+            ):
+                best = cur
+        if best is not None:
+            stolen: deque[_WorkItem] = deque()
+            for _ in range(len(best.items) // 2):
+                stolen.appendleft(best.items.pop())
+            self._note_steal_locked(w)
+            return _Group(
+                key=best.key,
+                qos=best.qos,
+                first_ticket=best.first_ticket,
+                slot=w,
+                stealable=True,
+                stolen=True,
+                items=stolen,
+            )
+        return None
+
+    def _note_steal_locked(self, w: int) -> None:
+        self._stats.steals += 1
+        self._worker_steal_counts[w] += 1
 
     def _plan_groups(self, items: "list[_WorkItem]") -> "list[list[_WorkItem]]":
-        """The scheduler: bind every request's plan, group by compiled-plan
-        key, order groups by QoS weight (higher first) then arrival."""
+        """The scheduler: group requests by identity (op x inputs object x
+        strategy x substrate), bind **one plan per group** shared by every
+        member — plans are pure functions of their bound args, so members of
+        an identity group run the same plan — and order groups by QoS weight
+        (higher first) then arrival. Building per group, not per request,
+        keeps the scheduler's serial planning cost off the pool's critical
+        path (two same-shape groups still share one compile via the cache).
+        """
         groups: dict[Any, list[_WorkItem]] = {}
-        auto_memo: dict[tuple, Any] = {}
+        order: list[Any] = []
         for item in items:
             req = item.request
             try:
-                op = resolve_op(req.op)
-                strategy = req.strategy
-                if isinstance(strategy, str) and strategy == "auto":
-                    memo_key = (op.name, id(req.inputs))
-                    if memo_key not in auto_memo:
-                        from .autotune import choose_strategy
-
-                        auto_memo[memo_key] = choose_strategy(op, req.inputs)
-                    strategy = auto_memo[memo_key]
-                plan = build_plan(op, req.inputs, strategy, req.substrate)
-            except Exception as exc:  # plan failures resolve that future only
+                item.op = resolve_op(req.op)
+            except Exception as exc:  # resolve failures reject that future only
                 self._finish_error(item, exc)
                 continue
-            item.op, item.plan = op, plan
-            gkey = plan.key if plan.key is not None else ("__unkeyed__", req.ticket)
+            strategy = req.strategy
+            strat_id = (
+                strategy.cache_key()
+                if isinstance(strategy, MigratoryStrategy)
+                else strategy
+            )
+            sub = req.substrate
+            gkey = (
+                item.op.name,
+                id(req.inputs),
+                strat_id,
+                sub if isinstance(sub, str) else id(sub),
+            )
+            if gkey not in groups:
+                order.append(gkey)
             groups.setdefault(gkey, []).append(item)
+        out: list[list[_WorkItem]] = []
+        for gkey in order:
+            members = groups[gkey]
+            first = members[0]
+            req = first.request
+            try:
+                strategy = req.strategy
+                if isinstance(strategy, str) and strategy == "auto":
+                    from .autotune import choose_strategy
+
+                    strategy = choose_strategy(first.op, req.inputs)
+                plan = build_plan(first.op, req.inputs, strategy, req.substrate)
+            except Exception as exc:  # plan failures reject the identity group
+                for member in members:
+                    self._finish_error(member, exc)
+                continue
+            for member in members:
+                member.op, member.plan = first.op, plan
+            out.append(members)
         return sorted(
-            groups.values(),
+            out,
             key=lambda g: (-self.qos_weight(g[0].op.name), g[0].request.ticket),
         )
 
-    def _compile_group(self, group: "list[_WorkItem]") -> None:
-        """Pipeline compile stage: the group's first request runs its
-        (possibly compiling) call; the group's later members are cache hits
-        by construction and run in the execute stage."""
+    def _compile_item(self, item: _WorkItem, slot: int) -> None:
+        """Plane compile stage: a cold group's first request runs its
+        (possibly compiling) call on the scheduler thread — pinning the
+        entry to ``slot`` — while the pool executes other groups; the
+        group's later members are cache hits by construction."""
         t0 = time.perf_counter()
-        self._run_item(group[0])
+        self._run_item(item, slot=slot)
         t1 = time.perf_counter()
         with self._lock:
             self._compile_spans.append((t0, t1))
             self._note_span_end_locked(t1)
-            self._stats.batches += 1
             self._maybe_fold_spans_locked()
 
     def _note_span_end_locked(self, t1: float) -> None:
@@ -690,20 +1089,29 @@ class EngineService:
         large, bounding memory and stats() cost for long-lived services (at
         the cost of ignoring overlap straddling a fold boundary — one group
         out of thousands)."""
-        if len(self._compile_spans) + len(self._exec_spans) <= self._SPAN_FOLD_THRESHOLD:
+        n_spans = len(self._compile_spans) + sum(
+            len(spans) for spans in self._worker_spans
+        )
+        if n_spans <= self._SPAN_FOLD_THRESHOLD:
             return
-        self._overlap_acc += _intersection_seconds(self._compile_spans, self._exec_spans)
-        self._busy_acc += _union_seconds(self._compile_spans + self._exec_spans)
+        all_exec = [s for spans in self._worker_spans for s in spans]
+        self._overlap_acc += _intersection_seconds(
+            self._compile_spans, _merge_spans(all_exec)
+        )
+        self._busy_acc += _union_seconds(self._compile_spans + all_exec)
         self._compile_busy_acc += sum(t1 - t0 for t0, t1 in self._compile_spans)
         self._compile_spans.clear()
-        self._exec_spans.clear()
+        for spans in self._worker_spans:
+            spans.clear()
 
-    def _run_item(self, item: _WorkItem) -> None:
+    def _run_item(self, item: _WorkItem, slot: "int | None" = None) -> None:
         t0 = time.perf_counter()
         if item.dedup_key is not None and self._try_serve_dedup(item):
             return
         try:
-            result, report = single_call(item.plan, item.op, cache=self.cache)
+            result, report = single_call(
+                item.plan, item.op, cache=self.cache, slot=slot
+            )
         except Exception as exc:
             self._finish_error(item, exc)
             return
@@ -711,16 +1119,33 @@ class EngineService:
         response = ServiceResponse(item.request.ticket, result, report)
         item.future._resolve(response)
         with self._lock:
+            self._live.pop(item.request.ticket, None)
             if item.dedup_key is not None:
                 self._dedup_store[item.dedup_key] = response
                 self._dedup_store.move_to_end(item.dedup_key)
                 while len(self._dedup_store) > self.dedup_max_entries:
                     self._dedup_store.popitem(last=False)
+                if self._dedup_pending.get(item.dedup_key) is item:
+                    del self._dedup_pending[item.dedup_key]
+            self._resolve_waiters_locked(item, response)
             if item.request.t_admit:
                 self._queue_waits.append(max(0.0, t0 - item.request.t_admit))
             self._service_times.append(t1 - t0)
             self._account_locked(report)
             self._finish_locked()
+
+    def _resolve_waiters_locked(
+        self, item: _WorkItem, response: ServiceResponse
+    ) -> None:
+        """Answer every coalesced duplicate with the primary's response
+        (fresh ticket, shared result/report) — the in-flight dedup hit."""
+        for ticket, fut in item.waiters:
+            fut._resolve(ServiceResponse(ticket, response.result, response.report))
+            self._live.pop(ticket, None)
+            self._stats.requests += 1
+            self._stats.dedup_hits += 1
+            self._stats.dedup_coalesced += 1
+        item.waiters.clear()
 
     def _try_serve_dedup(self, item: _WorkItem) -> bool:
         """Late dedup check (drain loop / pipeline stages): answer from the
@@ -733,17 +1158,54 @@ class EngineService:
             self._dedup_store.move_to_end(item.dedup_key)
             self._stats.requests += 1
             self._stats.dedup_hits += 1
-            item.future._resolve(
-                ServiceResponse(item.request.ticket, hit.result, hit.report)
-            )
+            response = ServiceResponse(item.request.ticket, hit.result, hit.report)
+            item.future._resolve(response)
+            self._live.pop(item.request.ticket, None)
+            if self._dedup_pending.get(item.dedup_key) is item:
+                del self._dedup_pending[item.dedup_key]
+            self._resolve_waiters_locked(item, response)
             self._finish_locked()
             return True
 
     def _finish_error(self, item: _WorkItem, exc: BaseException) -> None:
         item.future._reject(exc)
         with self._lock:
+            self._live.pop(item.request.ticket, None)
+            if (
+                item.dedup_key is not None
+                and self._dedup_pending.get(item.dedup_key) is item
+            ):
+                del self._dedup_pending[item.dedup_key]
+            # coalesced duplicates asked for the same computation: it failed
+            for ticket, fut in item.waiters:
+                fut._reject(exc)
+                self._live.pop(ticket, None)
+                self._stats.errors += 1
+            item.waiters.clear()
             self._stats.errors += 1
             self._finish_locked()
+
+    def _cancel_item_locked(self, item: _WorkItem) -> None:
+        """Reject a still-queued item (and its coalesced waiters) with
+        ServiceStopped — the stop(drain=False) path."""
+        item.future._reject(
+            ServiceStopped("service stopped before this request ran")
+        )
+        self._live.pop(item.request.ticket, None)
+        if (
+            item.dedup_key is not None
+            and self._dedup_pending.get(item.dedup_key) is item
+        ):
+            del self._dedup_pending[item.dedup_key]
+        for ticket, fut in item.waiters:
+            fut._reject(
+                ServiceStopped("service stopped before the coalesced primary ran")
+            )
+            self._live.pop(ticket, None)
+            self._stats.cancelled += 1
+        item.waiters.clear()
+        self._inflight -= 1
+        self._stats.cancelled += 1
 
     def _finish_locked(self) -> None:
         self._inflight -= 1
@@ -824,35 +1286,51 @@ class EngineService:
 
     def stats(self) -> ServiceStats:
         """A snapshot of the aggregate counters with the timing/overlap
-        fields recomputed from the recorded stage spans (see
-        :class:`ServiceStats` for semantics). Each call returns a fresh
-        object — safe to keep for before/after comparisons."""
+        fields recomputed from the recorded stage spans and the per-worker
+        columns attached (see :class:`ServiceStats` for semantics). Each
+        call returns a fresh object — safe to keep for before/after
+        comparisons."""
         with self._lock:
             worker_wall = (
                 self._t_last - self._t_first
                 if self._t_first is not None and self._t_last is not None
                 else 0.0
             )
+            all_exec = [s for spans in self._worker_spans for s in spans]
             overlap_seconds = self._overlap_acc + _intersection_seconds(
-                self._compile_spans, self._exec_spans
+                self._compile_spans, _merge_spans(all_exec)
             )
             compile_busy = self._compile_busy_acc + sum(
                 t1 - t0 for t0, t1 in self._compile_spans
             )
             waits = list(self._queue_waits)  # copy only; sort off-lock —
             services = list(self._service_times)  # submit()/pipeline contend here
+            # report every slot ever used, not just the current width: a
+            # restart with a narrower pool must not drop accumulated
+            # per-worker counters (sum(worker_steals) == steals always)
+            busy = list(self._worker_busy)
+            reqs = list(self._worker_reqs)
+            steals = list(self._worker_steal_counts)
+            window = max(0.0, worker_wall)
             snapshot = dataclasses.replace(
                 self._stats,
-                wall_seconds=self._drain_wall + max(0.0, worker_wall),
+                wall_seconds=self._drain_wall + window,
                 busy_seconds=(
                     self._drain_wall
                     + self._busy_acc
-                    + _union_seconds(self._compile_spans + self._exec_spans)
+                    + _union_seconds(self._compile_spans + all_exec)
                 ),
                 overlap_seconds=overlap_seconds,
                 overlap_ratio=(
                     overlap_seconds / compile_busy if compile_busy > 0 else 0.0
                 ),
+                workers=self._n_workers,
+                worker_busy_seconds=busy,
+                worker_requests=reqs,
+                worker_steals=steals,
+                worker_occupancy=[
+                    b / window if window > 0 else 0.0 for b in busy
+                ],
             )
         waits.sort()
         services.sort()

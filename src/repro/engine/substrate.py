@@ -23,6 +23,7 @@ the registry so pre-registry call sites migrate incrementally.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Callable
 
 import jax
@@ -42,10 +43,40 @@ class Substrate:
     ``substrate_kind`` (defaults to ``name``) is the registry key kernels
     are looked up under — a subclass specializing behavior but reusing a
     parent's kernels may pin ``kind`` to the parent's.
+
+    Placement (the EngineService executor pool, DESIGN.md §1d): a substrate
+    advertises how many *independent execution channels* it can drive
+    (:meth:`placement_slots` — the Emu analogue is nodelets, the
+    memory-channels study's is channels), a :attr:`placement_policy` for
+    routing plan-key groups onto pool workers, and an optional per-slot
+    *variant* (:meth:`placement_variant`) — a substrate instance whose
+    executions are disjoint from other slots' (e.g. a mesh device window),
+    so independent groups placed on different slots genuinely run in
+    parallel instead of contending for the same devices.
     """
 
     name: str = "abstract"
     kind: "str | None" = None
+    #: "spread": groups round-robin over pool workers and idle workers may
+    #: steal queued/straggling work. "affinity": a plan-key group is pinned
+    #: to one slot (its compiled executable targets that slot's devices) and
+    #: is never stolen.
+    placement_policy: str = "spread"
+
+    def placement_slots(self) -> int:
+        """How many pool workers this substrate can keep independently busy.
+        The pool sizes itself as ``min(workers, placement_slots())`` when
+        asked for ``workers="auto"``."""
+        return 1
+
+    def placement_variant(self, slot: int, n_slots: int) -> "Substrate":
+        """The substrate instance slot ``slot`` of ``n_slots`` should plan
+        against. Default: ``self`` (all slots share one backend). Backends
+        that can carve disjoint execution channels (mesh device windows)
+        return a variant whose ``cache_fingerprint`` embeds the slot, so the
+        slot's compiled plans are keyed — and therefore pinned — to it."""
+        del slot, n_slots
+        return self
 
     @property
     def substrate_kind(self) -> str:
@@ -96,17 +127,37 @@ class LocalSubstrate(Substrate):
 
     name = "local"
 
+    def placement_slots(self) -> int:
+        # one device, many host cores: executions from different workers
+        # overlap in XLA's intra-op pool, so size to the core count
+        return max(1, os.cpu_count() or 1)
+
 
 class MeshSubstrate(Substrate):
     """``shard_map`` over a nodelet axis. With no explicit mesh, builds a
     1-D nodelet mesh matching the input's partition count (requires that
-    many jax devices)."""
+    many jax devices).
+
+    ``device_window`` is the executor pool's per-slot carving: a variant
+    bound to a window resolves ``mesh_for(p)`` over those devices (when
+    they suffice), so plans placed on different slots execute on disjoint
+    devices — the paper's independent-nodelet parallelism realized as
+    device-affine workers. The window is part of the cache fingerprint:
+    a slot's compiled executables are keyed to its devices.
+    """
 
     name = "mesh"
+    placement_policy = "affinity"
 
-    def __init__(self, mesh: jax.sharding.Mesh | None = None, axis_name: str = "nodelet"):
+    def __init__(
+        self,
+        mesh: jax.sharding.Mesh | None = None,
+        axis_name: str = "nodelet",
+        device_window: "tuple | None" = None,
+    ):
         self.mesh = mesh
         self.axis_name = axis_name
+        self.device_window = tuple(device_window) if device_window else None
 
     def cache_fingerprint(self) -> tuple:
         mesh_id = None
@@ -115,14 +166,60 @@ class MeshSubstrate(Substrate):
                 tuple(self.mesh.shape.items()),
                 tuple(str(d) for d in self.mesh.devices.flat),
             )
-        return (self.name, self.axis_name, mesh_id)
+        window_id = (
+            tuple(str(d) for d in self.device_window) if self.device_window else None
+        )
+        return (self.name, self.axis_name, mesh_id, window_id)
+
+    def placement_slots(self) -> int:
+        """Independent channels = devices: an explicit mesh is one committed
+        channel set; otherwise every host device is a potential window."""
+        if self.mesh is not None:
+            return 1
+        return max(1, len(jax.devices()))
+
+    def placement_variant(self, slot: int, n_slots: int) -> "MeshSubstrate":
+        """Slot ``slot``'s device window: the ``slot``-th of ``n_slots``
+        equal contiguous device blocks. With an explicit mesh (committed
+        devices) or a single slot there is nothing to carve."""
+        if self.mesh is not None or n_slots <= 1:
+            return self
+        devices = jax.devices()
+        width = len(devices) // n_slots
+        if width < 1:
+            return self  # fewer devices than slots: all slots share everything
+        lo = (slot % n_slots) * width
+        return MeshSubstrate(
+            None, self.axis_name, device_window=tuple(devices[lo : lo + width])
+        )
 
     def mesh_for(self, p: int) -> jax.sharding.Mesh:
-        """The mesh kernels run on: the explicit one, else a 1-D nodelet
-        mesh of ``p`` host devices. Public so out-of-tree kernels (e.g.
-        engine/moe_op.py) resolve meshes the same way the built-ins do."""
+        """The mesh kernels run on: the explicit one; else the slot's device
+        window when it is wide enough; else a 1-D nodelet mesh of ``p`` host
+        devices. Public so out-of-tree kernels (e.g. engine/moe_op.py)
+        resolve meshes the same way the built-ins do."""
         if self.mesh is not None:
             return self.mesh
+        if self.device_window is not None:
+            if p <= len(self.device_window):
+                from ..compat import make_mesh_over
+
+                return make_mesh_over(self.device_window[:p], (self.axis_name,))
+            # the plan spans more nodelets than this slot's window: fall
+            # back to the global device mesh, audibly — such plans share
+            # devices across slots (no disjoint-channel parallelism) and,
+            # because the window is part of the cache fingerprint, compile
+            # once per slot they land on. Partition inputs to <= n_dev //
+            # workers nodelets to stay inside the windows.
+            import warnings
+
+            warnings.warn(
+                f"plan needs {p} nodelets but the placement window has "
+                f"{len(self.device_window)} device(s); executing on the "
+                "global device mesh — pool slots will NOT be disjoint for "
+                "this plan",
+                stacklevel=2,
+            )
         from ..launch.mesh import make_nodelet_mesh
 
         if len(jax.devices()) < p:
@@ -149,6 +246,9 @@ class PallasSubstrate(Substrate):
 
     def cache_fingerprint(self) -> tuple:
         return (self.name, self.interpret)
+
+    def placement_slots(self) -> int:
+        return max(1, os.cpu_count() or 1)
 
 
 # -- built-in kernels ----------------------------------------------------------

@@ -88,6 +88,7 @@ def ops_demo_async(
     max_queue_depth: int = 64,
     shapes: tuple[int, ...] = (16, 24),
     seed: int = 0,
+    workers: "int | str" = 1,
 ) -> dict:
     """Open-loop async serving demo: a synthetic traffic generator submits at
     ``rate`` req/s (jittered, never waiting for responses — open loop) while
@@ -102,6 +103,7 @@ def ops_demo_async(
     interval = 1.0 / rate if rate > 0 else 0.0
     svc = EngineService(
         autotune=True,
+        workers=workers,
         max_queue_depth=max_queue_depth,
         admission=admission,
         qos={"bfs": 2.0},
@@ -132,6 +134,9 @@ def ops_demo_async(
           f"({stats.overlap_ratio:.0%} of compile time hidden under execution), "
           f"busy {stats.busy_seconds*1e3:.0f} / wall {stats.wall_seconds*1e3:.0f} ms, "
           f"queue hwm {stats.queue_depth_hwm}")
+    if stats.workers > 1:
+        print(f"pool: {stats.workers} workers, {stats.steals} steals, "
+              f"occupancy {[round(o, 2) for o in stats.worker_occupancy]}")
     print(json.dumps(report, default=str))
     return report
 
@@ -153,11 +158,14 @@ def main(argv=None) -> None:
                     help="open-loop arrival rate (req/s) for --ops-async")
     ap.add_argument("--ops-admission", choices=("block", "reject"), default="block",
                     help="admission policy when the async queue is full")
+    ap.add_argument("--ops-workers", default="1",
+                    help="executor-pool width for --ops-async (int or 'auto')")
     args = ap.parse_args(argv)
 
     if args.ops_async:
+        workers = args.ops_workers if args.ops_workers == "auto" else int(args.ops_workers)
         ops_demo_async(args.ops_requests, rate=args.ops_rate,
-                       admission=args.ops_admission)
+                       admission=args.ops_admission, workers=workers)
         return
     if args.ops:
         ops_demo(args.ops_requests)

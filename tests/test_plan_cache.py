@@ -207,3 +207,60 @@ def test_op_metric_shadowing_schema_column_raises():
     )
     with pytest.raises(ValueError, match="collide"):
         rep.to_dict()
+
+
+# -- compile-stage jit + placement pinning (ISSUE 5) ---------------------------
+
+
+def test_keyed_plans_compile_to_jitted_executors(spmv_problem):
+    """The compile stage wraps keyed executors in jax.jit (one fused
+    executable per plan key) with results bit-identical to the plan's own
+    eager executor; keyless and jit=False plans stay eager."""
+    _, inputs = spmv_problem
+    cache = PlanCache()
+    plan = build_plan("spmv", inputs, None, "local")
+    compiled = cache.get(plan)
+    assert compiled.executor is not plan.executor  # wrapped
+    np.testing.assert_array_equal(
+        np.asarray(compiled()), np.asarray(plan.executor(*plan.args))
+    )
+    eager_plan = build_plan("spmv", inputs, None, "local")
+    eager_plan.jit = False
+    cache2 = PlanCache()
+    assert cache2.get(eager_plan).executor is eager_plan.executor
+    keyless = build_plan("spmv", inputs, None, "local")
+    keyless.key = None
+    assert cache.get(keyless).executor is keyless.executor
+
+
+def test_cache_slot_pinning_first_wins(spmv_problem):
+    _, inputs = spmv_problem
+    cache = PlanCache()
+    plan = build_plan("spmv", inputs, None, "local")
+    assert cache.slot_of(plan.key) is None
+    assert not cache.is_warm(plan.key)
+    compiled = cache.get(plan, slot=2)
+    cache.note_compiled(compiled, 0.1)
+    assert cache.slot_of(plan.key) == 2
+    assert cache.is_warm(plan.key)
+    # a steal resolves from another slot but never moves the pin
+    cache.get(build_plan("spmv", inputs, None, "local"), slot=0)
+    assert cache.slot_of(plan.key) == 2
+    assert cache.stats()["pinned"] == 1
+    assert cache.slot_of(None) is None and not cache.is_warm(None)
+
+
+def test_pin_key_alias_survives_without_entry(spmv_problem):
+    """Mesh placement stores compiled entries under slot-variant keys; the
+    base key's pin lives in the alias table so affinity survives a fresh
+    service over a shared cache."""
+    _, inputs = spmv_problem
+    cache = PlanCache()
+    plan = build_plan("spmv", inputs, None, "local")
+    cache.pin_key(plan.key, 3)
+    assert cache.slot_of(plan.key) == 3
+    cache.pin_key(plan.key, 1)  # first pin wins
+    assert cache.slot_of(plan.key) == 3
+    cache.pin_key(None, 0)  # keyless: no-op
+    cache.clear()
+    assert cache.slot_of(plan.key) is None

@@ -380,6 +380,80 @@ def test_dedup_disabled_by_default(spmv_inputs):
     assert svc.stats().dedup_hits == 0
 
 
+def test_inflight_coalescing_attaches_waiters(spmv_inputs):
+    """ISSUE 5 satellite: concurrent identical requests coalesce onto the
+    *pending* primary's future instead of waiting for it to complete —
+    counted in both dedup_hits and the dedup_coalesced breakdown, with
+    distinct tickets and the primary's exact result."""
+    want, _ = run("spmv", spmv_inputs, MigratoryStrategy(), "local")
+    # the batch window holds the primary in the queue long enough for the
+    # duplicates to arrive while it is demonstrably still in flight
+    svc = EngineService(cache=PlanCache(), dedup=True, batch_window=0.25)
+    svc.start()
+    try:
+        primary = svc.submit("spmv", spmv_inputs)
+        dups = [svc.submit("spmv", spmv_inputs) for _ in range(4)]
+        assert not primary.done()  # still inside the batch window
+        responses = [f.result(timeout=300) for f in [primary, *dups]]
+    finally:
+        svc.stop()
+    stats = svc.stats()
+    assert stats.dedup_coalesced == 4
+    assert stats.dedup_hits == 4  # all in-flight; none waited for completion
+    assert stats.requests == 5
+    assert stats.compiles + stats.cache_hits == 1  # the primary executed once
+    for resp in responses:
+        _assert_same_result(resp.result, want)
+    assert len({r.ticket for r in responses}) == 5
+    report = responses[0].report
+    assert all(r.report is report for r in responses[1:])  # shared execution
+
+
+def test_coalesced_waiters_fail_with_their_primary(spmv_inputs):
+    """A waiter asked for the same computation as its primary: if the
+    primary fails, the waiters fail with the same exception (never hang)."""
+    svc = EngineService(cache=PlanCache(), dedup=True, batch_window=0.25)
+    svc.start()
+    try:
+        primary = svc.submit("spmv", "not-spmv-inputs")
+        dups = [svc.submit("spmv", "not-spmv-inputs") for _ in range(3)]
+        excs = [f.exception(timeout=300) for f in [primary, *dups]]
+    finally:
+        svc.stop()
+    assert all(e is not None for e in excs)
+    assert all(type(e) is type(excs[0]) for e in excs)
+    assert svc.stats().errors == 4
+
+
+def test_stop_nodrain_terminates_every_future(spmv_inputs, bfs_inputs):
+    """ISSUE 5 satellite (regression): stop(drain=False) racing mid-flight
+    groups across the pool must leave every submitted future terminated —
+    resolved, errored, or cancelled with ServiceStopped; never stranded.
+    Repeated at several stop points to catch scheduler/worker races."""
+    for delay in (0.0, 0.02, 0.08):
+        svc = EngineService(
+            cache=PlanCache(), workers=4, dedup=True, batch_window=0.05
+        )
+        svc.start()
+        futures = [
+            svc.submit(*(("bfs", bfs_inputs) if i % 3 == 2 else ("spmv", spmv_inputs)))
+            for i in range(24)
+        ]
+        if delay:
+            threading.Event().wait(delay)
+        svc.stop(drain=False)
+        undone = [f for f in futures if not f.done()]
+        assert not undone, f"stranded futures at delay={delay}: {undone}"
+        stats = svc.stats()
+        served = sum(1 for f in futures if f.exception() is None)
+        cancelled = sum(
+            1 for f in futures if isinstance(f.exception(), ServiceStopped)
+        )
+        assert served + cancelled == len(futures)
+        assert stats.cancelled >= cancelled  # waiters may add to the count
+        assert len(svc) == 0  # no phantom in-flight accounting survives stop
+
+
 def test_dedup_hash_distinguishes_large_array_values(spmv_inputs):
     """Regression: op input containers are unregistered-pytree dataclasses,
     and a repr-based hash truncates large arrays — two inputs differing in

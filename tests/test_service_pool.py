@@ -1,0 +1,322 @@
+"""The execution plane (ISSUE 5 tentpole): a pool of N executor workers fed
+by one scheduler/compile stage, with substrate-aware placement and work
+stealing.
+
+Pinned here:
+
+- **pool stress**: W ∈ {1, 2, 4} workers x mixed ops x steal-inducing skewed
+  group sizes, bit-identical to sequential ``engine.run`` every time;
+- **QoS ordering per worker**: each worker starts its groups in
+  non-increasing priority order within every scheduler snapshot;
+- **stats schema**: ``queue_depth_hwm`` plus the merged per-worker
+  busy/steal/occupancy columns in one ``to_dict``;
+- **placement**: plan-key groups pin to the slot that compiled them
+  (cache-level pinning), mesh substrates carve per-slot device windows with
+  bit-identical results (subprocess, 8 forced host devices).
+"""
+import os
+import subprocess
+import sys
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Comm, MigratoryStrategy, Scheme, bucketize, \
+    generate_alignment_pair, partition_ell, pick_grid
+from repro.engine import (
+    EngineService,
+    BFSInputs,
+    GSANAInputs,
+    LocalSubstrate,
+    MeshSubstrate,
+    PallasSubstrate,
+    PlanCache,
+    SpMVInputs,
+    placement_table,
+    run,
+)
+from repro.sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, partition_graph
+
+
+@pytest.fixture(scope="module")
+def spmv_inputs():
+    a = laplacian_2d(12)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(144).astype(np.float32))
+    return SpMVInputs(partition_ell(a, 8), x)
+
+
+@pytest.fixture(scope="module")
+def bfs_inputs():
+    g = edges_to_csr(erdos_renyi_edges(8, 6, seed=2), 256)
+    return BFSInputs(partition_graph(g, 8), 3)
+
+
+@pytest.fixture(scope="module")
+def gsana_inputs():
+    vs1, vs2, pi = generate_alignment_pair(192, seed=11)
+    grid = pick_grid(192, 32)
+    cap = max(bucketize(vs1, grid).cap, bucketize(vs2, grid).cap)
+    return GSANAInputs(
+        vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
+    )
+
+
+def _signatures(spmv_inputs, bfs_inputs, gsana_inputs):
+    return [
+        ("spmv", spmv_inputs, MigratoryStrategy()),
+        ("spmv", spmv_inputs, MigratoryStrategy(replicate_x=False)),
+        ("bfs", bfs_inputs, MigratoryStrategy(comm=Comm.MIGRATE)),
+        ("bfs", bfs_inputs, MigratoryStrategy(comm=Comm.REMOTE_WRITE)),
+        ("gsana", gsana_inputs, MigratoryStrategy(scheme=Scheme.PAIR)),
+    ]
+
+
+def _assert_same_result(got, want):
+    if isinstance(want, tuple):
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    else:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("workers", [1, 2, 4])
+def test_pool_stress_bit_identical_parity(
+    workers, spmv_inputs, bfs_inputs, gsana_inputs
+):
+    """The acceptance stress: mixed ops, skewed group sizes (one dominant
+    plan key so idle workers must steal), concurrent submitters — results
+    bit-identical to sequential engine.run at every pool width."""
+    signatures = _signatures(spmv_inputs, bfs_inputs, gsana_inputs)
+    # skew: signature 0 dominates (steal-inducing), the rest trickle
+    requests = [signatures[0]] * 18 + [
+        signatures[i % len(signatures)] for i in range(12)
+    ]
+    svc = EngineService(cache=PlanCache(), workers=workers)
+    svc.start()
+    futures = {}
+
+    def submitter(idx_chunk):
+        for idx in idx_chunk:
+            op, inputs, st = requests[idx]
+            futures[idx] = svc.submit(op, inputs, st)
+
+    threads = [
+        threading.Thread(target=submitter, args=(range(t, len(requests), 3),))
+        for t in range(3)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    responses = {idx: fut.result(timeout=600) for idx, fut in futures.items()}
+    svc.stop()
+
+    seq_cache = PlanCache()
+    expected = {}
+    for op, inputs, st in signatures:
+        result, _ = run(op, inputs, st, "local", iters=1, warmup=0, cache=seq_cache)
+        expected[(op, id(inputs), st)] = result
+    for idx, (op, inputs, st) in enumerate(requests):
+        _assert_same_result(responses[idx].result, expected[(op, id(inputs), st)])
+
+    stats = svc.stats()
+    assert stats.requests == len(requests)
+    assert stats.errors == 0 and stats.rejected == 0
+    assert stats.workers == workers
+    assert stats.compiles == len(signatures)  # one compile per plan key
+    assert sum(stats.worker_requests) + stats.compiles == len(requests)
+
+
+def test_pool_spreads_load_and_steals(spmv_inputs, bfs_inputs):
+    """Skewed group sizes on a spread-policy (local) substrate: more than
+    one worker ends up serving requests, and the idle ones stole work."""
+    svc = EngineService(cache=PlanCache(), workers=4)
+    svc.start()
+    # warm both keys so the whole burst is executor-pool work
+    svc.submit("spmv", spmv_inputs).result(timeout=300)
+    svc.submit("bfs", bfs_inputs).result(timeout=300)
+    svc.flush(timeout=60)
+    # one dominant group (40 members) + a trickle: stealers must split it
+    futures = [svc.submit("spmv", spmv_inputs) for _ in range(40)]
+    futures += [svc.submit("bfs", bfs_inputs) for _ in range(4)]
+    for f in futures:
+        f.result(timeout=600)
+    svc.stop()
+    stats = svc.stats()
+    assert stats.workers == 4
+    assert stats.steals >= 1
+    assert sum(1 for r in stats.worker_requests if r > 0) >= 2
+    assert sum(stats.worker_steals) == stats.steals
+
+
+def test_per_worker_qos_ordering(spmv_inputs, bfs_inputs):
+    """Within each worker, groups start in non-increasing QoS-priority
+    order inside every scheduler snapshot (the plane's ordering contract:
+    ordering, not preemption)."""
+    svc = EngineService(
+        cache=PlanCache(), workers=2, qos={"bfs": 2.0}, batch_window=0.15
+    )
+    svc.start()
+    # warm first so the measured burst skips compile-stage reordering noise
+    svc.submit("spmv", spmv_inputs).result(timeout=300)
+    svc.submit("bfs", bfs_inputs).result(timeout=300)
+    svc.flush(timeout=60)
+    trace_start = len(svc._exec_trace)
+    futures = [svc.submit("spmv", spmv_inputs) for _ in range(6)]
+    futures += [svc.submit("bfs", bfs_inputs) for _ in range(6)]
+    for f in futures:
+        f.result(timeout=600)
+    svc.stop()
+    trace = list(svc._exec_trace)[trace_start:]
+    assert trace, "executed groups must be traced"
+    by_worker: dict[int, list[float]] = {}
+    for worker, first_ticket, qos, stolen in trace:
+        # stolen groups arrive opportunistically (tail of a busy peer) and
+        # are exempt from the victim's ordering; the worker's OWN dispatch
+        # sequence is the contract under test
+        if not stolen:
+            by_worker.setdefault(worker, []).append(qos)
+    assert by_worker, "at least one worker must have served its own queue"
+    for worker, own in by_worker.items():
+        assert own == sorted(own, reverse=True), (
+            f"worker {worker} started groups out of QoS order: {own}"
+        )
+
+
+def test_pool_stats_schema_and_occupancy(spmv_inputs, bfs_inputs):
+    svc = EngineService(cache=PlanCache(), workers=2, batch_window=0.02)
+    svc.start()
+    futures = [
+        svc.submit(*(("bfs", bfs_inputs) if i % 2 else ("spmv", spmv_inputs)))
+        for i in range(10)
+    ]
+    for f in futures:
+        f.result(timeout=600)
+    svc.stop()
+    stats = svc.stats()
+    assert stats.queue_depth_hwm >= 1
+    assert stats.workers == 2
+    assert len(stats.worker_busy_seconds) == 2
+    assert len(stats.worker_requests) == 2
+    assert len(stats.worker_steals) == 2
+    assert len(stats.worker_occupancy) == 2
+    assert all(0.0 <= occ <= 1.0 + 1e-6 for occ in stats.worker_occupancy)
+    assert sum(stats.worker_busy_seconds) >= max(stats.worker_busy_seconds)
+    row = stats.to_dict()
+    for key in (
+        "queue_depth_hwm", "workers", "steals", "worker_busy_seconds",
+        "worker_requests", "worker_steals", "worker_occupancy",
+        "dedup_coalesced",
+    ):
+        assert key in row, key
+
+
+def test_placement_pins_plan_key_to_compiling_slot(spmv_inputs):
+    """The cache remembers which slot compiled a key; later groups with the
+    same key route back to it (a steal never moves the pin)."""
+    cache = PlanCache()
+    svc = EngineService(cache=cache, workers=4)
+    svc.start()
+    svc.submit("spmv", spmv_inputs).result(timeout=300)
+    for _ in range(3):
+        svc.submit("spmv", spmv_inputs).result(timeout=300)
+    svc.stop()
+    assert cache.stats()["pinned"] >= 1
+    key = next(iter(cache._entries))
+    pinned = cache.slot_of(key)
+    assert pinned is not None and 0 <= pinned < 4
+    assert cache.is_warm(key)
+
+
+def test_workers_auto_sizes_from_substrate():
+    svc = EngineService(workers="auto")
+    n = svc._resolve_workers()
+    assert 1 <= n <= 8
+    assert n == min(8, LocalSubstrate().placement_slots())
+    with pytest.raises(ValueError, match="workers"):
+        EngineService(workers=0)
+    with pytest.raises(ValueError, match="workers"):
+        EngineService(workers="many")
+
+
+def test_placement_table_shape():
+    table = placement_table()
+    for name in ("local", "mesh", "pallas"):
+        assert name in table
+        row = table[name]
+        assert row["policy"] in ("spread", "affinity")
+        assert row["slots"] >= 1
+    assert table["mesh"]["policy"] == "affinity"
+    assert table["local"]["policy"] == "spread"
+
+
+def test_placement_variants_local_and_explicit_mesh_are_self():
+    local = LocalSubstrate()
+    assert local.placement_variant(1, 4) is local
+    assert PallasSubstrate().placement_slots() >= 1
+    # an explicit mesh is a committed channel set: never carved
+    sub = MeshSubstrate()
+    assert sub.placement_variant(0, 1) is sub
+
+
+# -- mesh device windows: per-slot carving, bit-identical (subprocess) ---------
+
+WINDOW_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import Comm, MigratoryStrategy, partition_ell
+from repro.engine import EngineService, MeshSubstrate, PlanCache, SpMVInputs, run
+from repro.sparse import laplacian_2d
+
+sub = MeshSubstrate()
+assert sub.placement_slots() == 8
+variants = [sub.placement_variant(s, 4) for s in range(4)]
+windows = [v.device_window for v in variants]
+assert all(len(w) == 2 for w in windows)
+flat = [d for w in windows for d in w]
+assert len(set(flat)) == 8, f"windows must be disjoint: {windows}"
+assert all(v.cache_fingerprint() != sub.cache_fingerprint() for v in variants)
+
+rng = np.random.default_rng(0)
+a = laplacian_2d(16)
+x = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+inputs = SpMVInputs(partition_ell(a, 2), x)
+want, _ = run("spmv", inputs, MigratoryStrategy(), "local", iters=1, warmup=0)
+for v in variants:
+    got, rep = run("spmv", inputs, MigratoryStrategy(), v, iters=1, warmup=0)
+    assert rep.substrate == "mesh"
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+# and through the pooled service: mesh placement routes to device windows
+cache = PlanCache()
+svc = EngineService(cache=cache, substrate="mesh", workers=4)
+svc.start()
+futs = [svc.submit("spmv", inputs, MigratoryStrategy()) for _ in range(8)]
+futs += [svc.submit("spmv", inputs, MigratoryStrategy(replicate_x=False))
+         for _ in range(8)]
+resps = [f.result(timeout=600) for f in futs]
+svc.stop()
+st = svc.stats()
+assert st.errors == 0
+assert st.steals == 0  # affinity policy: mesh groups are never stolen
+for r in resps[:8]:
+    np.testing.assert_array_equal(np.asarray(r.result), np.asarray(want))
+assert cache.stats()["pinned"] >= 1
+print("WINDOW-PARITY-OK")
+"""
+
+
+def test_mesh_device_windows_bit_identical_subprocess():
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", WINDOW_PARITY_SCRIPT],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0 and "WINDOW-PARITY-OK" in proc.stdout, (
+        f"rc={proc.returncode}\nstdout={proc.stdout}\nstderr={proc.stderr}"
+    )
