@@ -96,11 +96,15 @@ def scenarios(full: bool = False, quick: bool = False):
 
 
 def run(full: bool = False, quick: bool = False):
+    from .util import machine_header
+
     rows = []
-    ranking_tables = []
+    ranking_tables = [{"case": "_machine", **machine_header()}]
+    ranked_by = set()
     store = default_probe_store()
     for op, case, inputs in scenarios(full, quick):
         tuned = autotune(op, inputs, "local", probe_top_k=2, probe_store=store)
+        ranked_by.add(tuned.ranked_by)
         table = [{"case": case, **row} for row in tuned.table()]
         ranking_tables.extend(table)
         # the production run of the winner: a plan-cache hit by construction
@@ -109,7 +113,8 @@ def run(full: bool = False, quick: bool = False):
         rows.append(emit_report("autotune", f"{op}_{case}", rep, n_candidates=len(table)))
     RANKING_PATH.parent.mkdir(parents=True, exist_ok=True)
     RANKING_PATH.write_text(json.dumps(ranking_tables, indent=2, default=str))
-    print(f"# wrote {RANKING_PATH} ({len(ranking_tables)} ranking rows)")
+    print(f"# wrote {RANKING_PATH} ({len(ranking_tables)} ranking rows, "
+          f"ranked by {'/'.join(sorted(ranked_by))})")
     print(f"# autotune probes: {store.reused} reused from store, "
           f"{store.recorded} newly measured -> {store.path}")
     return rows

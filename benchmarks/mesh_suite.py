@@ -65,7 +65,15 @@ svc.stop()
 
 stats = svc.stats()
 cache = svc.cache.stats()
-rows = [
+from repro.machine import default_machine, default_machine_path
+prof = default_machine()  # 8 forced devices: a parent calibration is stale here
+rows = [{
+    "bench": "mesh", "case": "_machine",
+    "machine_file": str(default_machine_path()),
+    "machine_calibrated": prof.calibrated,
+    "machine_fingerprint": prof.fingerprint,
+}]
+rows += [
     {"bench": "mesh", "case": case, **resp.report.to_dict()}
     for case, resp in responses
 ]

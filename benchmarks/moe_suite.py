@@ -104,8 +104,13 @@ def run(full: bool = False, quick: bool = False):
         service_p95=round(stats["service_p95"], 6),
         service_p99=round(stats["service_p99"], 6),
     ))
+    from .util import machine_header
+
     OUT_PATH.parent.mkdir(parents=True, exist_ok=True)
-    OUT_PATH.write_text(json.dumps(rows, indent=2, default=str))
+    OUT_PATH.write_text(json.dumps(
+        [{"bench": "moe", "case": "_machine", **machine_header()}] + rows,
+        indent=2, default=str,
+    ))
     print(f"# wrote {OUT_PATH} ({len(rows)} rows)")
     return rows
 

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from pathlib import Path
 
@@ -85,6 +86,23 @@ def main(argv=None) -> None:
         "least this multiple of the workers=1 baseline (asserted inside "
         "the bench subprocess; CI uses 1.3)",
     )
+    ap.add_argument(
+        "--machine-file", default=None,
+        help="run suites against this pinned machine file "
+        "(sets REPRO_MACHINE_PATH for this process)",
+    )
+    ap.add_argument(
+        "--calibrate", action="store_true",
+        help="run the quick microbench suite first and write a fresh "
+        "machine file (to --machine-file if given, else "
+        "experiments/machine.json); suites then rank in predicted seconds",
+    )
+    ap.add_argument(
+        "--require-model-band", type=float, default=0.0,
+        help="fail unless every (op, substrate)'s median modeled-vs-measured "
+        "ratio lies within this factor (e.g. 5 -> [1/5, 5]); needs "
+        "--calibrate or --machine-file so there is a model to gate",
+    )
     ap.add_argument("--out", default=None, help="output JSON path")
     args = ap.parse_args(argv)
     # the pool gate must fail closed: a gate with no pool phase to run
@@ -94,6 +112,21 @@ def main(argv=None) -> None:
         ap.error("--require-pool-speedup needs --workers >= 2 to have a pool to gate")
     if args.workers is not None and args.bench not in (None, "serve"):
         ap.error("--workers drives the serve suite's pool phase; use --bench serve")
+    # the model gate fails closed the same way: without a calibration there
+    # are no predicted columns, and an empty gate must not pass green
+    if args.require_model_band > 0 and not (args.calibrate or args.machine_file):
+        ap.error("--require-model-band needs --calibrate or --machine-file "
+                 "to have a model to gate")
+    if args.machine_file:
+        os.environ["REPRO_MACHINE_PATH"] = str(Path(args.machine_file).resolve())
+    if args.calibrate:
+        from repro.machine import reset_default_machine_cache
+        from repro.machine.machine import default_machine_path
+        from repro.machine.microbench import calibrate
+
+        path = calibrate(quick=True).save(default_machine_path())
+        reset_default_machine_cache()
+        print(f"# calibrated machine file -> {path}")
     _register()
     if args.bench:
         if args.bench not in SUITES:
@@ -102,7 +135,14 @@ def main(argv=None) -> None:
     else:
         names = [n for n in SUITES if not (args.quick and n in SLOW_SUITES)]
     print("bench,case,us_per_call,derived")
-    all_rows = []
+    from .util import machine_header
+
+    header = machine_header()
+    print(
+        f"# machine file: {header['machine_file']} "
+        f"(calibrated={header['machine_calibrated']})"
+    )
+    all_rows = [{"bench": "_machine", "case": "header", **header}]
     for name in names:
         if name == "serve":
             all_rows.extend(SUITES[name](
@@ -144,6 +184,48 @@ def main(argv=None) -> None:
                 file=sys.stderr,
             )
             sys.exit(1)
+    if args.require_model_band > 0:
+        _gate_model_band(all_rows, args.require_model_band)
+
+
+def _gate_model_band(all_rows: list, band: float) -> None:
+    """Per-(op, substrate) median modeled-vs-measured ratio must lie within
+    [1/band, band]. model_error columns only exist on rows measured under a
+    calibrated machine file (subprocess suites with a different forced
+    topology legitimately carry none), but *zero* gated rows means the
+    calibration never reached the suites — fail, don't pass vacuously."""
+    import statistics
+
+    groups: dict[tuple, list] = {}
+    for r in all_rows:
+        if r.get("model_error") is not None and r.get("op") and r.get("substrate"):
+            groups.setdefault((r["op"], r["substrate"]), []).append(
+                float(r["model_error"])
+            )
+    if not groups:
+        print(
+            "# FAIL: --require-model-band found no rows with model_error "
+            "(did calibration happen in this process?)",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+    failed = False
+    for (op, sub), errs in sorted(groups.items()):
+        med = statistics.median(errs)
+        ok = (1.0 / band) <= med <= band
+        print(
+            f"# model band {op}/{sub}: median predicted/measured = {med:.3f} "
+            f"over {len(errs)} rows ({'ok' if ok else 'OUT OF BAND'})"
+        )
+        if not ok:
+            failed = True
+    if failed:
+        print(
+            f"# FAIL: modeled-vs-measured outside the {band}x band "
+            "(unit-level model bug?)",
+            file=sys.stderr,
+        )
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -257,7 +257,11 @@ for _p in _ps:
 _two = time.perf_counter() - _t0
 host_capacity = 2 * _one / _two if _two > 0 else 0.0
 
+from repro.machine import default_machine, default_machine_path
+_prof = default_machine()
 record = {
+    "machine_file": str(default_machine_path()),
+    "machine_calibrated": _prof.calibrated,
     "grid": grid, "scale": scale, "tokens": tokens, "reps": reps,
     "plan_keys": len(cases), "modeled_link_seconds": LINK_SECONDS,
     "host_parallel_capacity": host_capacity,

@@ -7,6 +7,23 @@ import time
 import jax
 
 
+def machine_header() -> dict:
+    """The calibration provenance every suite's JSON output carries
+    (DESIGN.md §1f): which machine file was active, whether it was
+    calibrated, and for which topology. Uncalibrated runs say so instead of
+    omitting the key — absence of calibration is itself a measurement
+    condition worth recording."""
+    from repro.machine import default_machine, default_machine_path
+
+    profile = default_machine()
+    return {
+        "machine_file": str(default_machine_path()),
+        "machine_calibrated": profile.calibrated,
+        "machine_fingerprint": profile.fingerprint,
+        "machine_quick": profile.quick,
+    }
+
+
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
     """Median wall seconds per call of fn(*args) (jit-warmed, blocked)."""
     for _ in range(warmup):

@@ -27,6 +27,7 @@ from .strategies import (
     Comm,
     Layout,
     MigratoryStrategy,
+    TrafficStats,
 )
 from .util import ceil_div
 
@@ -43,12 +44,24 @@ class CostEstimate:
     ``report.traffic.total_bytes`` exactly; ``balance_penalty`` breaks ties
     among traffic-equal candidates (modeled makespan for GSANA, grain/task
     mismatch for SpMV, 0 where the axis is inert).
+
+    ``traffic`` is the same cost split by class (migrations / remote writes
+    / collective bytes) — the calibration plane's perf model charges each
+    class a different alpha-beta rate, so the split matters even though
+    ``traffic_bytes`` collapses it. ``predicted_seconds`` is attached by
+    :class:`~repro.machine.perfmodel.PerformanceModel` when a calibrated
+    machine file is present; it stays None (and ranking stays bit-identical
+    to the traffic units) otherwise. ``detail["collective_launches"]``
+    counts how many collective dispatches the strategy issues (BFS pays one
+    per round), feeding the alpha term.
     """
 
     strategy: MigratoryStrategy
     traffic_bytes: int
     balance_penalty: float
     detail: dict[str, Any] = dataclasses.field(default_factory=dict)
+    traffic: "TrafficStats | None" = None
+    predicted_seconds: "float | None" = None
 
     def rank_key(self) -> tuple:
         return (
@@ -72,6 +85,11 @@ def spmv_cost_model(inputs) -> CostModel:
     p_idx = np.arange(p)[:, None, None]
     remote_nnz = int(((cols >= 0) & ((cols % p) != p_idx)).sum())
     rp = a.rows_per_nodelet
+    # what one launch streams: the *padded* ELL slab (vals f32 + cols i32,
+    # padding included — skewed matrices execute their padding) plus x
+    # gathered and y written; random reads dominate, so this is charged at
+    # the machine file's gather rate
+    sweep_bytes = cols.size * 8 + 2 * 4 * p * rp
 
     def estimate(st: MigratoryStrategy) -> CostEstimate:
         migrations = 0 if st.replicate_x else remote_nnz
@@ -83,7 +101,13 @@ def spmv_cost_model(inputs) -> CostModel:
             strategy=st,
             traffic_bytes=migrations * CONTEXT_BYTES,
             balance_penalty=balance,
-            detail={"migrations": migrations, "tasks": tasks, "grain": grain},
+            detail={
+                "migrations": migrations, "tasks": tasks, "grain": grain,
+                "collective_launches": 1,
+                "memory_bytes_per_launch": sweep_bytes,
+                "memory_access": "gather",
+            },
+            traffic=TrafficStats(migrations=migrations),
         )
 
     return estimate
@@ -97,21 +121,34 @@ def bfs_cost_model(inputs) -> CostModel:
 
     stats = bfs_traffic(inputs.g, inputs.root, MigratoryStrategy(comm=Comm.MIGRATE))
     remote_edges = stats.traffic.migrations // 2
+    # per-round dense working set: level-synchronous kernels scatter-min
+    # over the full padded adjacency every round — index + read + write per
+    # (N_pad, K) slot, charged at the machine file's *scatter* rate (the
+    # serialized read-modify-write path, not the triad), times rounds
+    p, vp, k = inputs.g.adj.shape
+    sweep_bytes = 12 * p * vp * k
 
     def estimate(st: MigratoryStrategy) -> CostEstimate:
         if st.comm == Comm.MIGRATE:
-            traffic = 2 * remote_edges * CONTEXT_BYTES
+            split = TrafficStats(migrations=2 * remote_edges)
         else:
-            traffic = remote_edges * WRITE_PACKET_BYTES
+            split = TrafficStats(remote_writes=remote_edges)
         return CostEstimate(
             strategy=st,
-            traffic_bytes=traffic,
+            traffic_bytes=split.total_bytes,
             balance_penalty=0.0,
             detail={
                 "remote_edges": remote_edges,
                 "edges_traversed": stats.edges_traversed,
                 "rounds": stats.rounds,
+                # one collective dispatch per frontier round — the alpha
+                # term is what separates migrate from remote-write on
+                # latency-bound rounds
+                "collective_launches": stats.rounds,
+                "memory_bytes_per_launch": sweep_bytes,
+                "memory_access": "scatter",
             },
+            traffic=split,
         )
 
     return estimate
@@ -121,7 +158,13 @@ def gsana_cost_model(inputs) -> CostModel:
     """S3 model (paper §5.3): replay the task schedule per (layout, scheme)
     with the paper's placement/traffic model; migrations drive traffic,
     modeled makespan breaks the ALL-vs-PAIR tie (schemes share traffic)."""
-    from .gsana import layout_blk, layout_hcb, plan_stats
+    from .gsana import DEFAULT_VOCAB, layout_blk, layout_hcb, plan_stats
+
+    # one σ comparison materializes the (A, B, T) histogram-minimum
+    # intermediates over the three overlap vocabularies (T = Σ DEFAULT_VOCAB
+    # f32 lanes, ~2 passes each: broadcast-min write + reduce read) — dense
+    # sequential work, charged at the machine file's stream rate
+    cmp_bytes = 2 * 4 * sum(DEFAULT_VOCAB)
 
     placements = {
         Layout.BLK: layout_blk(
@@ -149,7 +192,11 @@ def gsana_cost_model(inputs) -> CostModel:
                 "migrations": ps.traffic.migrations,
                 "model_makespan": ps.makespan,
                 "model_speedup": ps.speedup_model,
+                "collective_launches": 1,
+                "memory_bytes_per_launch": ps.total_comparisons * cmp_bytes,
+                "memory_access": "stream",
             },
+            traffic=ps.traffic,
         )
 
     return estimate

@@ -34,6 +34,7 @@ from .api import (
 )
 from .autotune import (
     AutotuneResult,
+    RankedCandidate,
     autotune,
     candidate_grid,
     choose_strategy,
@@ -104,6 +105,7 @@ __all__ = [
     "GSANAOp", "KernelRegistry", "LocalSubstrate", "MeshSubstrate",
     "MigratoryOp", "MoEDispatchInputs", "MoEDispatchOp", "OPS", "OpSpec",
     "OpNotSupportedError", "PallasSubstrate", "PlanCache", "ProbeStore",
+    "RankedCandidate",
     "RunReport", "ServiceFuture", "ServiceRequest", "ServiceResponse",
     "ServiceStats", "ServiceStopped", "SpMVInputs", "SpMVOp", "Substrate",
     "args_signature", "autotune", "build_plan", "candidate_grid",

@@ -132,7 +132,13 @@ class MigratoryOp(Protocol):
 class RunReport:
     """One run, one record: unifies wall time, TrafficStats, the per-op stats
     (BFS rounds / GSANA plan model), effective bandwidth, and the plan
-    cache's compile accounting (``cache_hit``, ``compile_seconds``)."""
+    cache's compile accounting (``cache_hit``, ``compile_seconds``).
+
+    ``predicted_seconds``/``model_error`` are the calibration plane's
+    honesty columns (DESIGN.md §1f): the performance model's wall-seconds
+    prediction for this plan and its ratio to the measurement
+    (predicted / measured, 1.0 = perfect). Both stay None — and absent from
+    ``to_dict`` — unless a calibrated machine file was present."""
 
     op: str
     strategy: dict[str, Any]
@@ -144,6 +150,8 @@ class RunReport:
     cache_hit: bool = False
     compile_seconds: float = 0.0
     metrics: dict[str, Any] = dataclasses.field(default_factory=dict)
+    predicted_seconds: "float | None" = None
+    model_error: "float | None" = None
 
     def to_dict(self) -> dict[str, Any]:
         """Flat, JSON-ready form — the unified benchmark row schema.
@@ -166,6 +174,10 @@ class RunReport:
             "bytes_moved": self.bytes_moved,
             "effective_gbps": self.effective_gbps,
         }
+        if self.predicted_seconds is not None:
+            row["predicted_seconds"] = self.predicted_seconds
+        if self.model_error is not None:
+            row["model_error"] = self.model_error
         clash = sorted(set(row) & set(self.metrics))
         if clash:
             raise ValueError(
@@ -190,6 +202,7 @@ class RunReport:
         metrics: dict[str, Any] | None = None,
         cache_hit: bool = False,
         compile_seconds: float = 0.0,
+        predicted_seconds: "float | None" = None,
     ) -> "RunReport":
         return cls(
             op=op,
@@ -202,4 +215,9 @@ class RunReport:
             cache_hit=cache_hit,
             compile_seconds=compile_seconds,
             metrics=metrics or {},
+            predicted_seconds=predicted_seconds,
+            model_error=(
+                None if predicted_seconds is None
+                else predicted_seconds / max(seconds, 1e-12)
+            ),
         )

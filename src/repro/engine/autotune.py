@@ -13,14 +13,21 @@ that choice a systematized engine feature instead of a caller obligation:
     best = tuned.best                                    # probes warm the plan
     rows = tuned.table()                                 # cache for the real run
 
-Ranking is purely analytic (core/cost.py): primary key is the modeled
-traffic in bytes — identical to what a measured sweep's RunReports would
-carry — tie-broken by the per-op balance model. ``probe_top_k`` executes
-the leading candidates through the compiled-plan cache, so the eventual
-production run of the winner is a cache hit. Pass a
-:class:`~repro.engine.probes.ProbeStore` to persist measured probe seconds
-to ``experiments/autotune_probes.json`` — repeat sessions reuse the stored
-timing instead of re-probing.
+Ranking is analytic (core/cost.py): with no machine file the primary key is
+the modeled traffic in bytes — identical to what a measured sweep's
+RunReports would carry — tie-broken by the per-op balance model. With a
+*calibrated* machine file (DESIGN.md §1f) the same estimates are converted
+to predicted wall seconds by the
+:class:`~repro.machine.perfmodel.PerformanceModel` and ranked in those,
+with the traffic key demoted to tie-break; ``AutotuneResult.ranked_by``
+records which key ordered the table. Precedence is probe > model > traffic
+units: ``probe_top_k`` executes the leading candidates through the
+compiled-plan cache (so the eventual production run of the winner is a
+cache hit) and a decisively faster probe overrides either analytic
+ranking. Pass a :class:`~repro.engine.probes.ProbeStore` to persist
+measured probe seconds to ``experiments/autotune_probes.json`` — repeat
+sessions on the same machine fingerprint reuse the stored timing instead
+of re-probing.
 """
 from __future__ import annotations
 
@@ -29,6 +36,8 @@ from typing import Any
 
 from ..core.cost import CostEstimate, cost_model_for
 from ..core.strategies import MigratoryStrategy, strategy_grid
+from ..machine.machine import MachineProfile, default_machine
+from ..machine.perfmodel import PerformanceModel
 from .api import ExecutionPlan, RunReport, strategy_dict
 from .cache import PlanCache
 from .ops import GRAIN_CANDIDATES  # noqa: F401  (legacy re-export; lives with the OpSpecs)
@@ -59,6 +68,11 @@ class RankedCandidate:
     probe: RunReport | None = None
     probe_persisted: bool = False
 
+    @property
+    def predicted_seconds(self) -> "float | None":
+        """Modeled wall seconds (calibrated machine file only, else None)."""
+        return self.estimate.predicted_seconds
+
     def to_row(self) -> dict[str, Any]:
         row = {
             "rank": self.rank,
@@ -67,6 +81,8 @@ class RankedCandidate:
             "balance_penalty": self.estimate.balance_penalty,
             **self.estimate.detail,
         }
+        if self.predicted_seconds is not None:
+            row["predicted_seconds"] = self.predicted_seconds
         if self.probe is not None:
             row["probe_seconds"] = self.probe.seconds
             row["probe_compile_seconds"] = self.probe.compile_seconds
@@ -81,6 +97,7 @@ class AutotuneResult:
     substrate: str
     best: MigratoryStrategy
     candidates: list[RankedCandidate]
+    ranked_by: str = "traffic_bytes"  # or "predicted_seconds" when calibrated
 
     def table(self) -> list[dict[str, Any]]:
         """The ranking table (JSON rows) — the CI artifact."""
@@ -91,21 +108,48 @@ class AutotuneResult:
         ]
 
 
+def _substrate_name(substrate: "Substrate | str") -> str:
+    return substrate.name if isinstance(substrate, Substrate) else str(substrate)
+
+
 def rank_strategies(
-    op, inputs, candidates: list[MigratoryStrategy] | None = None
+    op,
+    inputs,
+    candidates: "list[MigratoryStrategy] | None" = None,
+    *,
+    substrate: "Substrate | str" = "local",
+    machine: "MachineProfile | None" = None,
 ) -> list[CostEstimate]:
     """Analytically rank candidate strategies for ``op`` on ``inputs``
     (best first). No execution, no compilation — shapes and static
-    structure only."""
+    structure only.
+
+    With a calibrated machine profile (``machine`` when given, else the
+    process-wide :func:`~repro.machine.machine.default_machine`), each
+    estimate gains ``predicted_seconds`` for ``substrate`` and the sort key
+    becomes (predicted seconds, traffic key); uncalibrated, estimates are
+    untouched and the ordering is bit-identical to the traffic units."""
     op = resolve_op(op)
     model = cost_model_for(op.name, inputs)
     cands = candidates if candidates is not None else candidate_grid(op.name)
-    return sorted((model(st) for st in cands), key=lambda e: e.rank_key())
+    estimates = [model(st) for st in cands]
+    profile = machine if machine is not None else default_machine()
+    if profile.calibrated:
+        estimates = PerformanceModel(profile).attach(
+            estimates, _substrate_name(substrate)
+        )
+        return sorted(estimates, key=lambda e: (e.predicted_seconds, *e.rank_key()))
+    return sorted(estimates, key=lambda e: e.rank_key())
 
 
-def choose_strategy(op, inputs) -> MigratoryStrategy:
-    """The traffic-model-optimal strategy — what ``strategy="auto"`` runs."""
-    return rank_strategies(op, inputs)[0].strategy
+def choose_strategy(
+    op, inputs, substrate: "Substrate | str" = "local",
+    machine: "MachineProfile | None" = None,
+) -> MigratoryStrategy:
+    """The model-optimal strategy — what ``strategy="auto"`` runs. Ranked
+    in predicted seconds when a calibrated machine file is present, in the
+    paper's traffic units otherwise."""
+    return rank_strategies(op, inputs, substrate=substrate, machine=machine)[0].strategy
 
 
 def _persisted_probe_report(op, plan: ExecutionPlan, seconds: float) -> RunReport:
@@ -138,6 +182,7 @@ def autotune(
     cache: PlanCache | None = None,
     override_margin: float = 0.2,
     probe_store: "ProbeStore | None" = None,
+    machine: "MachineProfile | None" = None,
 ) -> AutotuneResult:
     """Rank the grid; optionally execute the top ``probe_top_k`` candidates
     through the plan cache and let measured seconds pick among them.
@@ -150,12 +195,14 @@ def autotune(
     ``result.best`` is a cache hit.
 
     With a ``probe_store``, candidates whose plan key already has a stored
-    measurement skip execution and reuse the persisted seconds (those
-    candidates do *not* warm the plan cache); fresh measurements are
-    recorded and the store is spilled to disk before returning.
+    measurement *from this machine fingerprint* skip execution and reuse
+    the persisted seconds (those candidates do *not* warm the plan cache);
+    entries recorded on a different topology read as absent and are pruned
+    when the store is spilled to disk before returning.
     """
     op = resolve_op(op)
-    estimates = rank_strategies(op, inputs)
+    profile = machine if machine is not None else default_machine()
+    estimates = rank_strategies(op, inputs, substrate=substrate, machine=profile)
     candidates = [RankedCandidate(rank=i + 1, estimate=e) for i, e in enumerate(estimates)]
     best = candidates[0].estimate.strategy
     if probe_top_k > 0:
@@ -190,5 +237,10 @@ def autotune(
             best = fastest.estimate.strategy
         if probe_store is not None:
             probe_store.save()
-    sub_name = substrate.name if isinstance(substrate, Substrate) else substrate
-    return AutotuneResult(op=op.name, substrate=sub_name, best=best, candidates=candidates)
+    return AutotuneResult(
+        op=op.name,
+        substrate=_substrate_name(substrate),
+        best=best,
+        candidates=candidates,
+        ranked_by="predicted_seconds" if profile.calibrated else "traffic_bytes",
+    )

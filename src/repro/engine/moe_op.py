@@ -480,11 +480,25 @@ def moe_dispatch_cost_model(inputs: MoEDispatchInputs):
     replay = _routing_replay_cached(inputs)
     routed = replay["routed_slots"]
     kept_for = _kept_for(replay)
+    T, D = inputs.x.shape
+    itemsize = jnp.dtype(inputs.x.dtype).itemsize
+    # per-stage working set of the emulation: the (T*k, D) slot stream is
+    # materialized ~4x per stage chain (repeat, capacity-buffer scatter,
+    # gather-back, gated combine) plus the routing logits; row-contiguous
+    # scatters move whole D-vectors, so this is stream-class, not the
+    # element-wise scatter path
+    stage_bytes = (
+        4 * T * inputs.experts_per_token * D * itemsize
+        + T * inputs.num_experts * 4
+    )
 
     def estimate(st: MigratoryStrategy) -> CostEstimate:
         traffic = moe_dispatch_traffic(inputs, st, replay)
         mode = derive_mode(inputs, st)
         dropped = routed - kept_for[mode]
+        # collective dispatches per mode: push = scatter + compute + return
+        # (3), pull = all-gather + return (2), tp = none (pure local compute)
+        launches = {"tp": 0, "ep_push": 3, "ep_pull": 2}[mode]
         return CostEstimate(
             strategy=st,
             traffic_bytes=traffic.total_bytes,
@@ -493,7 +507,11 @@ def moe_dispatch_cost_model(inputs: MoEDispatchInputs):
                 "dispatch_mode": mode,
                 "migrations": traffic.migrations,
                 "dropped_slots": dropped,
+                "collective_launches": launches,
+                "memory_bytes_per_launch": stage_bytes,
+                "memory_access": "stream",
             },
+            traffic=traffic,
         )
 
     return estimate

@@ -4,7 +4,7 @@ persistence") — the on-disk sibling of the in-process compiled-plan cache.
 ``autotune(..., probe_top_k=k)`` executes the leading candidates to let
 measured seconds override the traffic model. Those measurements are pure
 re-derivable state, so a :class:`ProbeStore` spills them as
-``(plan key -> median measured seconds)`` JSON at
+``(plan key -> {seconds, machine})`` JSON at
 ``experiments/autotune_probes.json`` and reloads them lazily on first use:
 a repeat session (or a repeat scenario within one session) skips the probe
 execution entirely and reuses the stored timing. CI uploads the file as an
@@ -15,9 +15,13 @@ Plan keys are exactly the compiled-plan cache keys
 x static scalars x argument shape/dtype signature — everything a probe
 timing depends on besides the machine itself. Keys are stored as their
 ``repr`` (they are tuples of primitives and strings, so the repr is stable
-across sessions). Stored probes can misjudge across *machines*; the
-autotuner's ``override_margin`` guard applies to them the same way it does
-to noisy fresh probes.
+across sessions). The machine itself is covered by the calibration plane:
+each entry carries the :func:`~repro.machine.machine.machine_fingerprint`
+it was measured under (schema v2), ``get`` ignores entries from a different
+topology, and ``save`` prunes them — a probe measured on an 8-device forced
+host never silently ranks strategies on a 1-device one. Schema-v1 entries
+(bare floats, no fingerprint) are treated as unknown provenance: always
+stale, pruned on the next save.
 """
 from __future__ import annotations
 
@@ -30,26 +34,44 @@ from pathlib import Path
 DEFAULT_PROBES_PATH = (
     Path(__file__).resolve().parents[3] / "experiments" / "autotune_probes.json"
 )
-_SCHEMA_VERSION = 1
+_SCHEMA_VERSION = 2
 
 
 class ProbeStore:
     """Persistent ``(plan key -> measured seconds)`` map, loaded lazily and
     spilled atomically. Thread-safe; read-only filesystems degrade to an
-    in-memory store (save() becomes a no-op)."""
+    in-memory store (save() becomes a no-op). Entries are fingerprinted to
+    the machine topology they were measured on; foreign entries read as
+    absent and are pruned on save."""
 
     def __init__(self, path: "str | os.PathLike"):
         self.path = Path(path)
         self._lock = threading.RLock()
-        self._data: "dict[str, float] | None" = None
+        # key -> (seconds, fingerprint-key-or-None)
+        self._data: "dict[str, tuple[float, str | None]] | None" = None
+        self._machine: "str | None | bool" = False  # False = not yet computed
         self.reused = 0  # probes served from the store this session
         self.recorded = 0  # fresh measurements added this session
+        self.stale = 0  # lookups rejected for a foreign fingerprint
+        self.pruned = 0  # foreign entries dropped by the last save()
 
     @staticmethod
     def encode_key(key: tuple) -> str:
         return repr(key)
 
-    def _load_locked(self) -> "dict[str, float]":
+    def _machine_key(self) -> "str | None":
+        """This process's topology fingerprint, computed once per store
+        (importing lazily keeps ProbeStore usable without jax warmup)."""
+        if self._machine is False:
+            from ..machine.machine import fingerprint_key, machine_fingerprint
+
+            try:
+                self._machine = fingerprint_key(machine_fingerprint())
+            except Exception:  # no backend at all: no provenance to claim
+                self._machine = None
+        return self._machine
+
+    def _load_locked(self) -> "dict[str, tuple[float, str | None]]":
         if self._data is None:
             try:
                 blob = self.path.read_bytes()
@@ -70,9 +92,10 @@ class ProbeStore:
                 # lands in the corrupt handler below instead of raising here
                 raw = json.loads(blob)
                 self._data = {
-                    str(k): float(v) for k, v in raw.get("probes", {}).items()
+                    str(k): self._parse_value(v)
+                    for k, v in raw.get("probes", {}).items()
                 }
-            except (ValueError, AttributeError, TypeError) as exc:
+            except (ValueError, AttributeError, TypeError, KeyError) as exc:
                 # corrupt/truncated store (killed run, disk-full spill, hand
                 # edit): probes are rederivable, so degrade to empty — but
                 # loudly, the file will be overwritten on the next save()
@@ -85,32 +108,58 @@ class ProbeStore:
                 self._data = {}
         return self._data
 
+    @staticmethod
+    def _parse_value(v) -> "tuple[float, str | None]":
+        """v2 ``{"seconds": s, "machine": fp}`` or v1 bare seconds (which
+        carry no provenance -> fingerprint None -> always stale)."""
+        if isinstance(v, dict):
+            fp = v.get("machine")
+            return (float(v["seconds"]), fp if isinstance(fp, str) else None)
+        return (float(v), None)
+
     def __len__(self) -> int:
         with self._lock:
             return len(self._load_locked())
 
     def get(self, key: "tuple | None") -> "float | None":
-        """Stored seconds for a plan key, or None (uncacheable/unseen)."""
+        """Stored seconds for a plan key measured on *this* topology, or
+        None (uncacheable / unseen / recorded on a different machine)."""
         if key is None:
             return None
         with self._lock:
-            seconds = self._load_locked().get(self.encode_key(key))
-            if seconds is not None:
-                self.reused += 1
+            hit = self._load_locked().get(self.encode_key(key))
+            if hit is None:
+                return None
+            seconds, fp = hit
+            if fp is None or fp != self._machine_key():
+                self.stale += 1
+                return None
+            self.reused += 1
             return seconds
 
     def record(self, key: "tuple | None", seconds: float) -> None:
         if key is None:
             return
         with self._lock:
-            self._load_locked()[self.encode_key(key)] = float(seconds)
+            self._load_locked()[self.encode_key(key)] = (
+                float(seconds), self._machine_key(),
+            )
             self.recorded += 1
 
     def save(self) -> None:
-        """Atomic spill (tmp file + rename); silently skipped where the
-        experiments directory is not writable."""
+        """Atomic spill (tmp file + rename) of the entries valid for this
+        topology — foreign and provenance-less (v1) entries are pruned.
+        Silently skipped where the experiments directory is not writable."""
         with self._lock:
-            payload = {"version": _SCHEMA_VERSION, "probes": dict(self._load_locked())}
+            mine = self._machine_key()
+            data = self._load_locked()
+            kept = {
+                k: {"seconds": s, "machine": fp}
+                for k, (s, fp) in data.items()
+                if fp is not None and fp == mine
+            }
+            self.pruned = len(data) - len(kept)
+            payload = {"version": _SCHEMA_VERSION, "probes": kept}
         try:
             self.path.parent.mkdir(parents=True, exist_ok=True)
             tmp = self.path.with_suffix(".json.tmp")

@@ -36,9 +36,14 @@ def resolve_op(op: "MigratoryOp | str") -> MigratoryOp:
 
 
 def resolve_strategy(
-    op: MigratoryOp, inputs: Any, strategy: "MigratoryStrategy | str | None"
+    op: MigratoryOp,
+    inputs: Any,
+    strategy: "MigratoryStrategy | str | None",
+    substrate: "Substrate | str" = "local",
 ) -> MigratoryStrategy:
-    """None -> paper defaults; ``"auto"`` -> traffic-model autotuner pick."""
+    """None -> paper defaults; ``"auto"`` -> autotuner pick (ranked in
+    predicted seconds for ``substrate`` when a calibrated machine file is
+    present, in traffic units otherwise)."""
     if strategy is None:
         return MigratoryStrategy()
     if isinstance(strategy, str):
@@ -46,7 +51,7 @@ def resolve_strategy(
             raise ValueError(f"unknown strategy {strategy!r}; expected 'auto'")
         from .autotune import choose_strategy
 
-        return choose_strategy(op, inputs)
+        return choose_strategy(op, inputs, substrate)
     return strategy
 
 
@@ -59,7 +64,7 @@ def build_plan(
     """Stage 1: plan. Resolve op/strategy/substrate and bind the inputs."""
     op = resolve_op(op)
     sub = get_substrate(substrate)
-    return op.plan(inputs, resolve_strategy(op, inputs, strategy), sub)
+    return op.plan(inputs, resolve_strategy(op, inputs, strategy, sub), sub)
 
 
 def compile_plan(
@@ -161,6 +166,13 @@ def run_plan(
     result, seconds, compile_seconds = execute(
         compiled, iters=iters, warmup=warmup, cache=cache
     )
+    # model honesty columns (DESIGN.md §1f): only a *calibrated* machine
+    # file produces predictions — without one the report is bit-identical
+    # to the pre-calibration schema (the columns stay None and are omitted
+    # from to_dict), and the lookup is one cached profile check
+    from ..machine.perfmodel import maybe_predict_plan_seconds
+
+    predicted = maybe_predict_plan_seconds(op, plan)
     report = RunReport.from_parts(
         op=op.name,
         strategy=plan.strategy,
@@ -171,6 +183,7 @@ def run_plan(
         metrics=op.metrics(plan, result, seconds),
         cache_hit=compiled.cache_hit,
         compile_seconds=compile_seconds,
+        predicted_seconds=predicted,
     )
     return result, report
 
@@ -199,5 +212,5 @@ def run(
     """
     op = resolve_op(op)
     sub = get_substrate(substrate)
-    plan = op.plan(inputs, resolve_strategy(op, inputs, strategy), sub)
+    plan = op.plan(inputs, resolve_strategy(op, inputs, strategy, sub), sub)
     return run_plan(plan, op, iters=iters, warmup=warmup, cache=cache)

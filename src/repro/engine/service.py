@@ -1049,7 +1049,7 @@ class EngineService:
                 if isinstance(strategy, str) and strategy == "auto":
                     from .autotune import choose_strategy
 
-                    strategy = choose_strategy(first.op, req.inputs)
+                    strategy = choose_strategy(first.op, req.inputs, req.substrate)
                 plan = build_plan(first.op, req.inputs, strategy, req.substrate)
             except Exception as exc:  # plan failures reject the identity group
                 for member in members:

@@ -9,7 +9,13 @@ DESIGN.md §8), and derives the three per-chip roofline terms:
     memory     = bytes touched by non-fused ops (operands + outputs)
     collective = ring-cost wire bytes per device of every collective op
 
-Hardware model (TPU v5e-like): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+The peaks come from the machine file (DESIGN.md §1f): ``analyze`` divides
+by the :class:`~repro.machine.machine.Peaks` of the process-wide
+:func:`~repro.machine.machine.default_machine` (or an explicit ``machine=``
+profile). The bundled default carries the former hardcoded TPU-v5e-like
+constants (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link), so uncalibrated
+output is unchanged; after ``python -m repro.machine.microbench`` the
+roofline speaks this host's sustained rates.
 """
 from __future__ import annotations
 
@@ -18,15 +24,8 @@ import json
 import re
 from collections import defaultdict
 
-PEAK_FLOPS = 197e12  # bf16 per chip
-HBM_BW = 819e9  # bytes/s per chip
-ICI_BW = 50e9  # bytes/s per link
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
-}
+from ..machine.machine import DTYPE_BYTES as _DTYPE_BYTES
+from ..machine.machine import MachineProfile, default_machine
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
@@ -329,7 +328,10 @@ class HloModule:
         return recs
 
 
-def analyze(hlo_text: str) -> RooflineReport:
+def analyze(
+    hlo_text: str, machine: "MachineProfile | None" = None
+) -> RooflineReport:
+    peaks = (machine if machine is not None else default_machine()).peaks
     mod = HloModule(hlo_text)
     flops = mod.flops()
     bts = mod.bytes_hbm()
@@ -338,9 +340,9 @@ def analyze(hlo_text: str) -> RooflineReport:
     by_kind: dict[str, float] = defaultdict(float)
     for r in colls:
         by_kind[r.kind] += r.wire_bytes
-    t_c = flops / PEAK_FLOPS
-    t_m = bts / HBM_BW
-    t_x = cbytes / ICI_BW
+    t_c = flops / peaks.flops
+    t_m = bts / peaks.hbm_bw
+    t_x = cbytes / peaks.ici_bw
     dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)), key=lambda t: t[1])[0]
     top = sorted(colls, key=lambda r: -r.wire_bytes)[:12]
     return RooflineReport(

@@ -1,0 +1,28 @@
+"""Shared test fixtures.
+
+The calibration plane changes autotuner behavior when a calibrated
+``experiments/machine.json`` exists (DESIGN.md §1f). The tier-1 suite pins
+the *uncalibrated* contract — strategy picks in the paper's traffic units —
+so every test session points the machine file at a path that does not
+exist; tests that exercise calibrated behavior (tests/test_machine.py)
+repoint it per-test via monkeypatch + ``reset_default_machine_cache``.
+"""
+import os
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _isolated_machine_file(tmp_path_factory):
+    path = tmp_path_factory.mktemp("machine") / "machine.json"  # never written
+    old = os.environ.get("REPRO_MACHINE_PATH")
+    os.environ["REPRO_MACHINE_PATH"] = str(path)
+    from repro.machine.machine import reset_default_machine_cache
+
+    reset_default_machine_cache()
+    yield
+    if old is None:
+        os.environ.pop("REPRO_MACHINE_PATH", None)
+    else:
+        os.environ["REPRO_MACHINE_PATH"] = old
+    reset_default_machine_cache()
