@@ -9,7 +9,10 @@ Prints the ``engine.capabilities()`` op x substrate table and fails (exit
 - a kernel registered under a substrate kind no registered substrate
   serves (unreachable kernel — usually a typo in ``@kernel(..., kind)``),
 - a capabilities cell disagreeing with per-instance kernel resolution
-  (``Substrate.kernel`` must succeed exactly where the table says True).
+  (``Substrate.kernel`` must succeed exactly where the table says True),
+- the live table drifting from the pinned :data:`EXPECTED_CAPABILITIES`
+  baseline — gaining or losing an ``(op, substrate)`` pair is a conscious
+  edit here, not a silent side effect of a registration change.
 """
 from __future__ import annotations
 
@@ -22,6 +25,16 @@ from repro.engine import (
     get_substrate,
     list_substrates,
 )
+
+
+# The pinned support matrix: PR 7 made pallas a real fast path for bfs
+# (kernels/bfs); moe_dispatch stays local/mesh-only by design.
+EXPECTED_CAPABILITIES = {
+    "spmv": {"local": True, "mesh": True, "pallas": True},
+    "bfs": {"local": True, "mesh": True, "pallas": True},
+    "gsana": {"local": True, "mesh": True, "pallas": True},
+    "moe_dispatch": {"local": True, "mesh": True, "pallas": False},
+}
 
 
 def check() -> list[str]:
@@ -49,6 +62,14 @@ def check() -> list[str]:
                     f"drift: capabilities[{op_name!r}][{sub_name!r}] = {claimed} "
                     f"but kernel resolution says {resolved}"
                 )
+    for op_name, expected_row in EXPECTED_CAPABILITIES.items():
+        live_row = {s: table.get(op_name, {}).get(s) for s in expected_row}
+        if live_row != expected_row:
+            errors.append(
+                f"baseline drift: capabilities[{op_name!r}] = {live_row} "
+                f"but the pinned baseline says {expected_row} "
+                "(update EXPECTED_CAPABILITIES if this change is intended)"
+            )
     for op_name, kind in reg.kernels():
         if kind not in served_kinds:
             errors.append(

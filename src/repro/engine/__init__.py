@@ -45,6 +45,7 @@ from .probes import ProbeStore, default_probe_store
 from .ops import (
     OPS,
     GRAIN_CANDIDATES,
+    PALLAS_BLOCK_CANDIDATES,
     BFSInputs,
     BFSOp,
     GSANAInputs,
@@ -104,7 +105,8 @@ __all__ = [
     "EngineService", "ExecutionPlan", "GRAIN_CANDIDATES", "GSANAInputs",
     "GSANAOp", "KernelRegistry", "LocalSubstrate", "MeshSubstrate",
     "MigratoryOp", "MoEDispatchInputs", "MoEDispatchOp", "OPS", "OpSpec",
-    "OpNotSupportedError", "PallasSubstrate", "PlanCache", "ProbeStore",
+    "OpNotSupportedError", "PALLAS_BLOCK_CANDIDATES", "PallasSubstrate",
+    "PlanCache", "ProbeStore",
     "RankedCandidate",
     "RunReport", "ServiceFuture", "ServiceRequest", "ServiceResponse",
     "ServiceStats", "ServiceStopped", "SpMVInputs", "SpMVOp", "Substrate",

@@ -7,7 +7,8 @@ Three built-in backends, mirroring the realizations the paper compares:
 - ``mesh``   — ``shard_map`` over a 1-D nodelet axis (the Chick's nodelets
   as TPU shards): replication, all_gather pulls, all_to_all pushes.
 - ``pallas`` — routes the compute hot loops to the Pallas kernels
-  (``kernels/spmv``, ``kernels/topk_sim``) where shapes allow.
+  (``kernels/spmv``, ``kernels/bfs``, ``kernels/topk_sim``) where shapes
+  allow.
 
 A substrate no longer implements one method per op. Its per-op entry points
 are *kernels* registered against its ``substrate_kind`` in the
@@ -234,15 +235,19 @@ class MeshSubstrate(Substrate):
 
 
 class PallasSubstrate(Substrate):
-    """Routes hot loops to the Pallas kernels. ``interpret=True`` runs the
-    kernels in interpret mode (CPU-correct); on TPU pass ``interpret=False``.
-    BFS has no kernel (its hot loop is the collective pattern itself) — the
-    registry simply has no ``("bfs", "pallas")`` entry."""
+    """Routes hot loops to the Pallas kernels (``kernels/spmv``,
+    ``kernels/bfs``, ``kernels/topk_sim``). ``interpret=None`` (default)
+    resolves from the backend — native lowering on TPU/GPU, interpret mode
+    elsewhere (:mod:`repro.kernels.runtime`); an explicit bool pins it.
+    The resolved value is part of the cache fingerprint, so plans compiled
+    under one mode never serve the other."""
 
     name = "pallas"
 
-    def __init__(self, interpret: bool = True):
-        self.interpret = interpret
+    def __init__(self, interpret: "bool | None" = None):
+        from ..kernels.runtime import resolve_interpret
+
+        self.interpret = resolve_interpret(interpret)
 
     def cache_fingerprint(self) -> tuple:
         return (self.name, self.interpret)
@@ -315,6 +320,17 @@ def _spmv_pallas(sub: PallasSubstrate, a, x, *, strategy):
         grain=max(1, min(grain, p * rp)), interpret=sub.interpret,
     )
     return y.reshape(p, rp)
+
+
+@kernel("bfs", "pallas")
+def _bfs_pallas(sub: PallasSubstrate, g, root, *, strategy, max_rounds=None):
+    from ..kernels.bfs.ops import bfs_pallas
+
+    # both S2 strategies share the kernel (deterministic min-merge, same
+    # tree as the local oracle); the strategy contributes the grain axis
+    return bfs_pallas(
+        g, root, strategy, max_rounds, interpret=sub.interpret
+    )
 
 
 @kernel("gsana", "pallas")

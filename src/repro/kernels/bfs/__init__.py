@@ -1,0 +1,8 @@
+"""Pallas BFS frontier expansion (DESIGN.md §2a): one level-synchronous
+round as a blocked adjacency gather + per-block scatter-min accumulation —
+the paper's remote-write aggregation realized as grid-program partials."""
+from .kernel import bfs_expand_pallas
+from .ops import bfs_expand, bfs_pallas
+from .ref import bfs_expand_reference
+
+__all__ = ["bfs_expand", "bfs_expand_pallas", "bfs_expand_reference", "bfs_pallas"]

@@ -1,0 +1,105 @@
+"""Pallas kernel: one BFS frontier-expansion round, blocked + aggregated.
+
+Paper mapping (§3.2, Alg. 2): the remote-write BFS has every frontier
+vertex *push* a proposed parent at its neighbors; the migratory-hardware
+win is aggregating those writes instead of issuing them one by one. Here
+a grid program owns a ``block_rows`` stripe of the adjacency (the grain),
+gathers its stripe's neighbor lists from VMEM, and scatter-mins all of its
+proposals into one private partial — the per-block aggregation — before
+merging that partial into the shared next-frontier array. The output block
+index map is constant (every program revisits the same (N,) block), so the
+merge is the classic TPU revisiting-accumulator pattern: program 0
+initializes, later programs ``min`` into it, exactly the deterministic
+min-merge the repo's BFS variants all share (DESIGN.md §10).
+
+``UNVISITED`` (int32 max) is the merge identity. Frontier arrives as an
+int32 0/1 mask (TPU block loads prefer lane-width dtypes over bool).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.util import round_up
+from ..runtime import resolve_interpret
+from .ref import UNVISITED
+
+
+def _bfs_expand_kernel(adj_ref, frontier_ref, out_ref, *, block_rows: int):
+    i = pl.program_id(0)
+    adj = adj_ref[...]  # (block_rows, K) int32 neighbor ids
+    fr = frontier_ref[...]  # (block_rows,) int32 0/1
+    n_out = out_ref.shape[0]
+    # global source ids for this stripe (2D iota: TPU-safe)
+    src = i * block_rows + jax.lax.broadcasted_iota(jnp.int32, adj.shape, 0)
+    valid = (fr != 0)[:, None] & (adj >= 0)
+    dst = jnp.where(valid, adj, 0)
+    prop = jnp.where(valid, src, UNVISITED)
+    # per-block aggregation: all of this stripe's remote writes collapse
+    # into one private partial before touching the shared array
+    partial = (
+        jnp.full((n_out,), UNVISITED, dtype=jnp.int32)
+        .at[dst.reshape(-1)]
+        .min(prop.reshape(-1), mode="drop")
+    )
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(i > 0)
+    def _merge():
+        out_ref[...] = jnp.minimum(out_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("n_out", "block_rows", "interpret"))
+def _bfs_expand_call(adj, frontier, *, n_out: int, block_rows: int, interpret: bool):
+    """The raw pallas_call: rows already a multiple of ``block_rows``."""
+    r, k = adj.shape
+    grid = (r // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_bfs_expand_kernel, block_rows=block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        # every program maps to the same output block: the revisiting
+        # accumulator the per-block partials min-merge into
+        out_specs=pl.BlockSpec((n_out,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_out,), jnp.int32),
+        interpret=interpret,
+    )(adj, frontier)
+
+
+def bfs_expand_pallas(
+    adj: jax.Array,
+    frontier: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """One expansion round. adj: (N, K) int32 (-1 padding); frontier: (N,)
+    int32/bool mask. Returns the (N,) proposed-parent array (UNVISITED
+    where nothing proposed) — bit-identical to the reference oracle.
+
+    Any N works: the row stripe padding (masked rows, frontier 0) is
+    internal, mirroring the SpMV kernel's contract.
+    """
+    n, k = adj.shape
+    block = max(1, min(block_rows, n))
+    r_pad = round_up(n, block)
+    frontier = frontier.astype(jnp.int32)
+    if r_pad != n:
+        adj = jnp.pad(adj, ((0, r_pad - n), (0, 0)), constant_values=-1)
+        frontier = jnp.pad(frontier, (0, r_pad - n))
+    return _bfs_expand_call(
+        adj,
+        frontier,
+        n_out=n,
+        block_rows=block,
+        interpret=resolve_interpret(interpret),
+    )

@@ -1,0 +1,94 @@
+"""Public BFS kernel ops: the round wrapper and the full level-synchronous
+loop the ``("bfs", "pallas")`` engine kernel dispatches to.
+
+The loop is ``repro.core.bfs._bfs_local`` with the expansion round swapped
+for the Pallas kernel; the min-merge is deterministic integer arithmetic,
+so the parent tree is bit-identical to the local oracle for every strategy
+and block size — the parity the tests pin. Both S2 comm strategies share
+the kernel (the per-block aggregation *is* the remote-write realization;
+the migrate variant computes the same tree, as on the local substrate) —
+the strategy's contribution here is the grain axis: ``block_rows``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ...core.bfs import UNVISITED, _adj_global, _finalize_parents
+from ...core.strategies import MigratoryStrategy
+from ...sparse.graph import PartitionedGraph
+from ..runtime import resolve_interpret
+from .kernel import bfs_expand_pallas
+from .ref import bfs_expand_reference
+
+
+def bfs_expand(
+    adj: jax.Array,
+    frontier: jax.Array,
+    *,
+    block_rows: int = 256,
+    use_kernel: bool = True,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """One frontier-expansion round, kernel or reference oracle."""
+    if not use_kernel:
+        return bfs_expand_reference(adj, frontier)
+    return bfs_expand_pallas(
+        adj, frontier, block_rows=block_rows, interpret=interpret
+    )
+
+
+@partial(jax.jit, static_argnames=("max_rounds", "block_rows", "interpret"))
+def _bfs_pallas_loop(
+    adj: jax.Array, root: jax.Array, max_rounds: int, block_rows: int, interpret: bool
+) -> jax.Array:
+    n = adj.shape[0]
+    parents0 = jnp.full((n,), UNVISITED, dtype=jnp.int32).at[root].set(root)
+    frontier0 = jnp.zeros((n,), dtype=bool).at[root].set(True)
+
+    def cond(state):
+        _, frontier, it = state
+        return jnp.logical_and(frontier.any(), it < max_rounds)
+
+    def body(state):
+        parents, frontier, it = state
+        nP = bfs_expand_pallas(
+            adj, frontier, block_rows=block_rows, interpret=interpret
+        )
+        newly = (parents == UNVISITED) & (nP != UNVISITED)
+        parents = jnp.where(newly, nP, parents)
+        return parents, newly, it + 1
+
+    parents, _, _ = jax.lax.while_loop(cond, body, (parents0, frontier0, 0))
+    return parents
+
+
+def bfs_pallas(
+    g: PartitionedGraph,
+    root: int,
+    strategy: "MigratoryStrategy | None" = None,
+    max_rounds: "int | None" = None,
+    *,
+    block_rows: "int | None" = None,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """Full BFS through the Pallas round kernel. (n_vertices,) int32
+    parents, -1 unreached — bit-identical to ``bfs_local``.
+
+    ``block_rows`` (explicit) beats the strategy's grain axis beats the
+    dynamic-grain default; the engine's autotuner sweeps it via
+    ``MigratoryStrategy.grain``.
+    """
+    adj = _adj_global(g)
+    n = adj.shape[0]
+    max_rounds = max_rounds or n
+    if block_rows is None:
+        st = strategy or MigratoryStrategy()
+        block_rows = st.dynamic_grain(n)
+    block = max(1, min(int(block_rows), n))
+    parents = _bfs_pallas_loop(
+        adj, jnp.int32(root), max_rounds, block, resolve_interpret(interpret)
+    )
+    return _finalize_parents(g, parents)

@@ -1,0 +1,28 @@
+"""Reference oracle for one BFS frontier-expansion round.
+
+Semantically identical to ``repro.core.bfs._expand_dense`` (the local
+substrate's round body): every frontier vertex proposes itself as parent
+for each neighbor via a dense min-scatter; UNVISITED slots are the merge
+identity. Integer min-merge makes the round — and therefore the whole
+parent tree — deterministic, which is what lets the kernel tests demand
+bit-identical output rather than a tolerance.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+UNVISITED = jnp.iinfo(jnp.int32).max  # same sentinel as repro.core.bfs
+
+
+def bfs_expand_reference(adj: jax.Array, frontier: jax.Array) -> jax.Array:
+    """One expansion round: (N, K) adjacency + (N,) frontier mask -> (N,)
+    proposed-parent array (UNVISITED where nothing proposed)."""
+    n, k = adj.shape
+    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, k))
+    valid = (frontier != 0)[:, None] & (adj >= 0)
+    dst = jnp.where(valid, adj, 0)
+    prop = jnp.where(valid, src, UNVISITED)
+    return jnp.full((n,), UNVISITED, dtype=jnp.int32).at[dst.reshape(-1)].min(
+        prop.reshape(-1), mode="drop"
+    )

@@ -9,6 +9,12 @@ rows per program).
 
 The gather ``x[cols]`` is the irregular access; on TPU it executes as a VMEM
 vector gather (VPU), with padding slots (col = -1) masked to zero.
+
+Row counts need not divide ``block_rows``: the kernel pads the planes with
+masked rows (col = -1) internally and slices the result, so callers hand it
+arbitrary matrices. ``interpret=None`` resolves from the backend
+(:mod:`repro.kernels.runtime`): native lowering on TPU/GPU, interpret
+elsewhere.
 """
 from __future__ import annotations
 
@@ -17,6 +23,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from ...core.util import round_up
+from ..runtime import resolve_interpret
 
 
 def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, y_ref):
@@ -29,21 +38,9 @@ def _spmv_ell_kernel(cols_ref, vals_ref, x_ref, y_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def spmv_ell_pallas(
-    cols: jax.Array,
-    vals: jax.Array,
-    x: jax.Array,
-    *,
-    block_rows: int = 256,
-    interpret: bool = True,
-) -> jax.Array:
-    """y = A @ x for ELL planes. cols/vals: (R, K); x: (N,). R % block_rows == 0.
-
-    ``interpret=True`` runs the kernel body on CPU (validation); on TPU pass
-    ``interpret=False``.
-    """
+def _spmv_ell_call(cols, vals, x, *, block_rows: int, interpret: bool):
+    """The raw pallas_call: rows already a multiple of ``block_rows``."""
     r, k = cols.shape
-    assert r % block_rows == 0, f"rows {r} not a multiple of block_rows {block_rows}"
     n = x.shape[0]
     grid = (r // block_rows,)
     return pl.pallas_call(
@@ -58,3 +55,29 @@ def spmv_ell_pallas(
         out_shape=jax.ShapeDtypeStruct((r,), vals.dtype),
         interpret=interpret,
     )(cols, vals, x)
+
+
+def spmv_ell_pallas(
+    cols: jax.Array,
+    vals: jax.Array,
+    x: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: "bool | None" = None,
+) -> jax.Array:
+    """y = A @ x for ELL planes. cols/vals: (R, K); x: (N,).
+
+    Any R works: rows are padded to the next ``block_rows`` multiple with
+    masked slots and the padding is sliced back off. ``interpret=None``
+    picks interpret mode off-TPU/GPU, native lowering on them.
+    """
+    r, k = cols.shape
+    block = max(1, min(block_rows, r))
+    r_pad = round_up(r, block)
+    if r_pad != r:
+        cols = jnp.pad(cols, ((0, r_pad - r), (0, 0)), constant_values=-1)
+        vals = jnp.pad(vals, ((0, r_pad - r), (0, 0)))
+    y = _spmv_ell_call(
+        cols, vals, x, block_rows=block, interpret=resolve_interpret(interpret)
+    )
+    return y[:r] if r_pad != r else y

@@ -1,13 +1,18 @@
-"""Jit'd public wrapper for the SpMV kernel: pads rows to the grain and
-dispatches kernel vs reference."""
+"""Jit'd public wrapper for the SpMV kernels: dispatches reference vs
+blocked-ELL vs CSR-stripe variants; padding and interpret policy live in
+the kernels themselves."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from ...core.util import round_up
 from .kernel import spmv_ell_pallas
 from .ref import spmv_ell_reference
+from .stripe import StripePlan, build_stripe_plan, spmv_ell_stripes
+
+#: dense-ELL padding overhead at which the auto variant flips to stripes:
+#: below this the blocked kernel's single launch wins, above it a skewed
+#: matrix is mostly executing padding
+STRIPE_WASTE_THRESHOLD = 2.0
 
 
 def spmv(
@@ -17,19 +22,31 @@ def spmv(
     *,
     grain: int = 256,
     use_kernel: bool = True,
-    interpret: bool = True,
+    interpret: "bool | None" = None,
+    variant: str = "ell",
+    stripe_plan: "StripePlan | None" = None,
 ) -> jax.Array:
-    """y = A @ x for padded-ELL A. Handles row padding to the grain.
+    """y = A @ x for padded-ELL A.
 
     ``grain`` = rows per program (the paper's grain size, Fig. 4).
+    ``variant``: ``"ell"`` (blocked, one launch), ``"stripe"`` (sliced-ELL
+    per-stripe widths for skewed rows; needs concrete ``cols`` or a
+    prebuilt ``stripe_plan``), or ``"auto"`` (stripe when the dense-ELL
+    padding waste exceeds ``STRIPE_WASTE_THRESHOLD``; needs concrete
+    ``cols``). ``interpret=None`` resolves from the backend.
     """
     r, k = cols.shape
     if not use_kernel:
         return spmv_ell_reference(cols, vals, x)
     g = max(1, min(grain, r))
-    r_pad = round_up(r, g)
-    if r_pad != r:
-        cols = jnp.pad(cols, ((0, r_pad - r), (0, 0)), constant_values=-1)
-        vals = jnp.pad(vals, ((0, r_pad - r), (0, 0)))
-    y = spmv_ell_pallas(cols, vals, x, block_rows=g, interpret=interpret)
-    return y[:r]
+    if variant == "auto":
+        plan = stripe_plan if stripe_plan is not None else build_stripe_plan(cols, g)
+        variant = "stripe" if plan.waste_ratio >= STRIPE_WASTE_THRESHOLD else "ell"
+        stripe_plan = plan
+    if variant == "stripe":
+        return spmv_ell_stripes(
+            cols, vals, x, block_rows=g, interpret=interpret, plan=stripe_plan
+        )
+    if variant != "ell":
+        raise ValueError(f"unknown spmv variant {variant!r}: ell | stripe | auto")
+    return spmv_ell_pallas(cols, vals, x, block_rows=g, interpret=interpret)

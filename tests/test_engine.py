@@ -172,11 +172,17 @@ def test_gsana_pallas_matches_local(gsana_problem):
     )
 
 
-def test_bfs_pallas_unsupported(bfs_problem):
-    with pytest.raises(OpNotSupportedError):
-        run(BFSOp(), bfs_problem, MigratoryStrategy(), "pallas")
-    assert not PallasSubstrate().supports("bfs")
+def test_bfs_pallas_matches_local(bfs_problem):
+    """("bfs", "pallas") resolves now and its parent tree is bit-identical
+    to the local oracle (integer min-scatter is deterministic)."""
+    assert PallasSubstrate().supports("bfs")
     assert PallasSubstrate().supports("spmv")
+    with pytest.raises(OpNotSupportedError):
+        PallasSubstrate().kernel("moe_dispatch")
+    p_local, _ = run(BFSOp(), bfs_problem, MigratoryStrategy(), "local")
+    p_pallas, report = run(BFSOp(), bfs_problem, MigratoryStrategy(), "pallas")
+    np.testing.assert_array_equal(np.asarray(p_local), np.asarray(p_pallas))
+    assert report.substrate == "pallas"
 
 
 # -- registry + report schema --------------------------------------------------

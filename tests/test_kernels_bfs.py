@@ -1,0 +1,99 @@
+"""Pallas BFS frontier expansion vs the dense-scatter oracle: one-round
+bit-parity across block sizes (including non-multiple row counts) and full
+traversals bit-identical to ``bfs_local`` — integer min-scatter is
+deterministic, so parity is exact, not tolerance-pinned."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st
+
+from repro.core import MigratoryStrategy, bfs_local
+from repro.kernels.bfs import bfs_expand, bfs_expand_pallas, bfs_expand_reference, bfs_pallas
+from repro.kernels.bfs.ref import UNVISITED
+from repro.sparse import edges_to_csr, erdos_renyi_edges, partition_graph
+
+
+def _rand_round(rng, n, k, frontier_frac=0.3):
+    """A random padded adjacency (slot -1 = padding) and boolean frontier."""
+    adj = rng.integers(-1, n, size=(n, k)).astype(np.int32)
+    frontier = (rng.random(n) < frontier_frac).astype(bool)
+    return jnp.asarray(adj), jnp.asarray(frontier)
+
+
+@pytest.mark.parametrize("n,k,block_rows", [
+    (64, 4, 16),
+    (100, 6, 32),     # rows not a multiple of block_rows (padding path)
+    (256, 1, 256),    # K=1, single program
+    (37, 8, 64),      # block larger than rows (clamp path)
+    (96, 5, 1),       # one row per program
+])
+def test_bfs_expand_matches_reference(n, k, block_rows):
+    rng = np.random.default_rng(n * k + block_rows)
+    adj, frontier = _rand_round(rng, n, k)
+    got = bfs_expand_pallas(adj, frontier, block_rows=block_rows)
+    want = bfs_expand_reference(adj, frontier)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bfs_expand_block_invariance():
+    """DESIGN.md §2a: block_rows changes the launch grid and the partial
+    merge order, never the min-merged result."""
+    rng = np.random.default_rng(7)
+    adj, frontier = _rand_round(rng, 200, 6)
+    outs = [
+        np.asarray(bfs_expand_pallas(adj, frontier, block_rows=b))
+        for b in (1, 13, 64, 200, 4096)
+    ]
+    for out in outs[1:]:
+        np.testing.assert_array_equal(out, outs[0])
+
+
+def test_bfs_expand_edge_frontiers():
+    """Empty frontier proposes nothing; full frontier proposes the min
+    source for every destination with an in-edge."""
+    rng = np.random.default_rng(11)
+    adj, _ = _rand_round(rng, 50, 4)
+    empty = bfs_expand_pallas(adj, jnp.zeros(50, dtype=bool), block_rows=16)
+    assert bool(jnp.all(empty == UNVISITED))
+    full = bfs_expand_pallas(adj, jnp.ones(50, dtype=bool), block_rows=16)
+    np.testing.assert_array_equal(
+        np.asarray(full),
+        np.asarray(bfs_expand_reference(adj, jnp.ones(50, dtype=bool))),
+    )
+
+
+def test_bfs_expand_use_kernel_toggle():
+    """``bfs_expand(use_kernel=False)`` is the reference path, and both
+    arms agree bit-for-bit."""
+    rng = np.random.default_rng(3)
+    adj, frontier = _rand_round(rng, 80, 5)
+    np.testing.assert_array_equal(
+        np.asarray(bfs_expand(adj, frontier, block_rows=32, use_kernel=True)),
+        np.asarray(bfs_expand(adj, frontier, use_kernel=False)),
+    )
+
+
+@pytest.mark.parametrize("root", [0, 3, 200])
+@pytest.mark.parametrize("block_rows", [None, 13, 64, 512])
+def test_bfs_pallas_traversal_matches_local(root, block_rows):
+    """Full traversal: the Pallas round loop reproduces the local oracle's
+    parent tree exactly, for every block size and root."""
+    g = partition_graph(edges_to_csr(erdos_renyi_edges(8, 6, seed=5), 256), 8)
+    want = np.asarray(bfs_local(g, root))
+    got = np.asarray(bfs_pallas(g, root, MigratoryStrategy(), block_rows=block_rows))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 120),
+    k=st.integers(1, 10),
+    block_rows=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_bfs_expand(n, k, block_rows, seed):
+    rng = np.random.default_rng(seed)
+    adj, frontier = _rand_round(rng, n, k)
+    got = bfs_expand_pallas(adj, frontier, block_rows=block_rows)
+    want = bfs_expand_reference(adj, frontier)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -57,13 +57,13 @@ def test_every_pair_resolves_or_raises_cleanly(op_name, sub_name):
 
 def test_capabilities_table_shape():
     """Rows = every registered op, columns = every registered substrate; the
-    known support facts hold (pallas runs spmv/gsana but not bfs/moe)."""
+    known support facts hold (pallas runs spmv/bfs/gsana but not moe)."""
     table = capabilities()
     assert set(ALL_OPS) <= set(table)
     for op_name, row in table.items():
         assert set(row) == set(list_substrates())
     assert table["spmv"] == {"local": True, "mesh": True, "pallas": True}
-    assert table["bfs"]["pallas"] is False
+    assert table["bfs"] == {"local": True, "mesh": True, "pallas": True}
     assert table["moe_dispatch"] == {"local": True, "mesh": True, "pallas": False}
 
 
@@ -115,6 +115,29 @@ def test_opspec_grid_drives_autotuner():
     assert {st.comm for st in moe} == {Comm.MIGRATE, Comm.REMOTE_WRITE}
 
 
+def test_opspec_grid_is_substrate_aware():
+    """Targeting the grid at pallas widens the kernel-tuning axis to the
+    Pallas block_rows candidates; other substrates (and None) see the
+    substrate-blind grid; zero-arg grid callables still work."""
+    from repro.engine import PALLAS_BLOCK_CANDIDATES
+
+    spmv_p = candidate_grid("spmv", "pallas")
+    assert len(spmv_p) == 2 * 2 * 2 * 2 * len(PALLAS_BLOCK_CANDIDATES)
+    assert {st.grain for st in spmv_p} == set(PALLAS_BLOCK_CANDIDATES)
+    bfs_p = candidate_grid("bfs", "pallas")
+    assert {st.grain for st in bfs_p} == set(PALLAS_BLOCK_CANDIDATES)
+    # substrate-blind spellings agree, instance or name alike
+    assert candidate_grid("spmv", "local") == candidate_grid("spmv")
+    assert candidate_grid("bfs", get_substrate("mesh")) == candidate_grid("bfs")
+    # a zero-arg grid registered by an out-of-tree op is called as before
+    # (kernel registered too so the drift check never sees an unservable op)
+    reg = default_registry()
+    spec = OpSpec(name="zero_arg_grid_op", factory=object, grid=lambda: [MigratoryStrategy()])
+    reg.register_op(spec, replace=True)
+    reg.register_kernel("zero_arg_grid_op", "local", lambda sub: None, replace=True)
+    assert candidate_grid("zero_arg_grid_op", "pallas") == [MigratoryStrategy()]
+
+
 def test_opspec_cost_model_registered_into_core():
     """Registering an OpSpec with a cost_model makes core.cost serve it —
     moe_dispatch is autotunable through the same lookup as the paper ops."""
@@ -144,7 +167,7 @@ def test_legacy_method_shims_delegate_to_registry():
     y_kern = sub.kernel("spmv")(inputs.a, x, strategy=st)
     np.testing.assert_array_equal(np.asarray(y_shim), np.asarray(y_kern))
     with pytest.raises(OpNotSupportedError):
-        get_substrate("pallas").bfs(None, 0, st)
+        get_substrate("pallas").kernel("moe_dispatch")
 
 
 # -- moe_dispatch local/mesh parity (subprocess, 8 forced host devices) --------
@@ -207,4 +230,5 @@ def test_renamed_subclass_inherits_parent_kernels():
         kind = "pallas"
 
     assert PinnedKind().substrate_kind == "pallas"
-    assert not PinnedKind().supports("bfs")  # pallas has no bfs kernel
+    assert not PinnedKind().supports("moe_dispatch")  # pallas has no moe kernel
+    assert PinnedKind().supports("bfs")  # ("bfs", "pallas") registered
