@@ -9,16 +9,101 @@ every row is a unified RunReport row (modeled traffic = the roofline
 collective-bytes cost model the autotuner ranks), plus a ``service`` row
 carrying the serving stats (dedup hits, latency percentiles). Writes
 ``experiments/moe_bench_results.json``.
+
+The **cross-check phase** (ISSUE 8 acceptance) closes the loop between the
+two byte counters: for every expert-parallel scenario x {ep_push, ep_pull}
+a subprocess with 8 forced host devices runs the *modeled* traffic (the
+``TrafficStats.collective_bytes`` the engine report carries — paper-lens
+total bytes across all nodelets at kept-slot granularity) and the *lowered*
+traffic (``roofline.analyze`` over the compiled mesh kernel's HLO —
+per-instruction wire bytes with the standard all_to_all/all_gather
+discounts), and asserts their ratio lies inside a generous honest band.
+The two counters measure deliberately different things (total modeled
+payload vs wire-level estimate), so the band is wide — [1/8, 8]; observed
+ratios sit in ~[2.4, 5.4] — but a sign error, a dropped collective, or a
+miscounted payload dimension blows straight through it.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
 from .util import emit, emit_report
+
+XCHECK_BAND = 8.0
+
+XCHECK_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import Comm, MigratoryStrategy
+from repro.engine import MoEDispatchInputs, Request, get_substrate, run
+from repro.launch import roofline
+
+band = float(sys.argv[1])
+scenarios = json.loads(sys.argv[2])
+rng = np.random.default_rng(0)
+sub = get_substrate("mesh")
+out = []
+for name, t, d, e, p in scenarios:
+    inputs = MoEDispatchInputs(
+        x=jnp.asarray(rng.standard_normal((t, d)).astype(np.float32)),
+        router=jnp.asarray(rng.standard_normal((d, e)).astype(np.float32)),
+        nodelets=p)
+    for mode, st in (("ep_push", MigratoryStrategy(comm=Comm.REMOTE_WRITE)),
+                     ("ep_pull", MigratoryStrategy(comm=Comm.MIGRATE))):
+        _, rep = run(Request("moe_dispatch", inputs, st, "local"))
+        modeled = rep.traffic.collective_bytes
+        kern = sub.kernel("moe_dispatch")
+        f = jax.jit(lambda x, r, st=st, p=p: kern(
+            x, r, strategy=st, nodelets=p,
+            experts_per_token=inputs.experts_per_token,
+            capacity_factor=inputs.capacity_factor))
+        lowered = roofline.analyze(
+            f.lower(inputs.x, inputs.router).compile().as_text()
+        ).bytes_collective
+        ratio = modeled / max(lowered, 1.0)
+        ok = (1.0 / band) <= ratio <= band
+        out.append({"scenario": name, "mode": mode,
+                    "modeled_bytes": int(modeled),
+                    "lowered_wire_bytes": float(lowered),
+                    "ratio": round(ratio, 4), "in_band": ok})
+        assert ok, ("modeled-vs-lowered collective bytes out of band",
+                    name, mode, modeled, lowered, ratio, band)
+print("MOE-XCHECK-OK" + json.dumps(out))
+"""
+
+
+def _run_xcheck_phase(scenarios) -> list:
+    """Subprocess modeled-vs-lowered cross-check over the expert-parallel
+    scenarios (tp scenarios carry zero collective bytes on both sides and
+    are skipped). Raises if any (scenario, mode) pair leaves the band."""
+    cases = [s for s in scenarios if s[3] % s[4] == 0]  # ep needs E % P == 0
+    if not cases:
+        return []
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", XCHECK_SCRIPT, str(XCHECK_BAND),
+         json.dumps(cases)],
+        env=env, capture_output=True, text=True, timeout=1800,
+    )
+    marker = "MOE-XCHECK-OK"
+    if proc.returncode != 0 or marker not in proc.stdout:
+        raise RuntimeError(
+            f"moe cross-check subprocess failed (rc={proc.returncode}):\n"
+            f"stdout={proc.stdout}\nstderr={proc.stderr}"
+        )
+    line = next(l for l in proc.stdout.splitlines() if l.startswith(marker))
+    return json.loads(line[len(marker):])
 
 OUT_PATH = Path(__file__).resolve().parents[1] / "experiments" / "moe_bench_results.json"
 
@@ -48,6 +133,7 @@ def run(full: bool = False, quick: bool = False):
         EngineService,
         MoEDispatchInputs,
         PlanCache,
+        Request,
         candidate_grid,
         choose_strategy,
     )
@@ -56,7 +142,8 @@ def run(full: bool = False, quick: bool = False):
     rows = []
     rng = np.random.default_rng(0)
     service_cases = []
-    for name, t, d, e, p in _scenarios(full, quick):
+    scenarios = _scenarios(full, quick)
+    for name, t, d, e, p in scenarios:
         inputs = MoEDispatchInputs(
             x=jnp.asarray(rng.standard_normal((t, d)).astype(np.float32)),
             router=jnp.asarray(rng.standard_normal((d, e)).astype(np.float32)),
@@ -83,7 +170,7 @@ def run(full: bool = False, quick: bool = False):
     svc.start()
     try:
         futures = [
-            svc.submit("moe_dispatch", inputs, "auto")
+            svc.submit(Request("moe_dispatch", inputs, "auto"))
             for _ in range(per)
             for _, inputs in service_cases
         ]
@@ -104,6 +191,18 @@ def run(full: bool = False, quick: bool = False):
         service_p95=round(stats["service_p95"], 6),
         service_p99=round(stats["service_p99"], 6),
     ))
+
+    # modeled-vs-lowered collective-bytes cross-check (subprocess, 8 devices)
+    for rec in _run_xcheck_phase(scenarios):
+        rows.append(emit(
+            "moe", f"xcheck_{rec['scenario']}_{rec['mode']}", 0.0,
+            op="moe_dispatch", substrate="mesh",
+            scenario=rec["scenario"], dispatch_mode=rec["mode"],
+            modeled_bytes=rec["modeled_bytes"],
+            lowered_wire_bytes=rec["lowered_wire_bytes"],
+            modeled_over_lowered=rec["ratio"],
+            band=XCHECK_BAND, in_band=rec["in_band"],
+        ))
     from .util import machine_header
 
     OUT_PATH.parent.mkdir(parents=True, exist_ok=True)

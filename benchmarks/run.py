@@ -87,6 +87,13 @@ def main(argv=None) -> None:
         "the bench subprocess; CI uses 1.3)",
     )
     ap.add_argument(
+        "--require-p99", type=float, default=0.0,
+        help="fail unless every decode-serving mode's end-to-end p99 stays "
+        "under this many milliseconds (asserted inside the serve suite's "
+        "decode subprocess — the fail-closed SLO gate; the gate value also "
+        "becomes the service's declared slo_target_seconds)",
+    )
+    ap.add_argument(
         "--require-pallas-speedup", type=float, default=0.0,
         help="fail unless the kernels suite's best pallas SpMV row is at "
         "least this multiple faster than the jitted local path (CI uses "
@@ -118,6 +125,11 @@ def main(argv=None) -> None:
         ap.error("--require-pool-speedup needs --workers >= 2 to have a pool to gate")
     if args.workers is not None and args.bench not in (None, "serve"):
         ap.error("--workers drives the serve suite's pool phase; use --bench serve")
+    # the SLO gate fails closed too: gating p99 without the serve suite's
+    # decode phase in the run would exit green having measured nothing
+    if args.require_p99 > 0 and args.bench not in (None, "serve"):
+        ap.error("--require-p99 gates the serve suite's decode phase; "
+                 "use --bench serve (or no --bench)")
     # the model gate fails closed the same way: without a calibration there
     # are no predicted columns, and an empty gate must not pass green
     if args.require_model_band > 0 and not (args.calibrate or args.machine_file):
@@ -154,6 +166,7 @@ def main(argv=None) -> None:
             all_rows.extend(SUITES[name](
                 full=args.full, quick=args.quick, workers=args.workers,
                 min_pool_speedup=args.require_pool_speedup,
+                require_p99_ms=args.require_p99,
             ))
         else:
             all_rows.extend(SUITES[name](full=args.full, quick=args.quick))

@@ -24,6 +24,16 @@ sequential ``engine.run``, measures the pooled/single throughput ratio
 (optionally gating it, CI uses ≥ 1.3x), runs an in-flight coalescing burst
 (``dedup_hits``/``dedup_coalesced``), and writes the per-worker stats
 artifact ``experiments/pool_stats.json``.
+
+The **decode phase** (ISSUE 8 acceptance) serves continuous-batched MoE
+decode — the ``serve-moe`` config's expert FFNs behind ``moe_dispatch``
+transport, every step one ``Request`` through the worker-loop service with
+an SLO target — across all three dispatch modes, asserts the served tokens
+are bit-identical to the single-process oracle under a staggered join/leave
+schedule, and writes ``experiments/decode_bench_results.json``. With
+``require_p99_ms > 0`` (CI: ``benchmarks/run.py --require-p99``), the
+subprocess fails unless every mode's end-to-end p99 meets the target — the
+fail-closed SLO gate.
 """
 from __future__ import annotations
 
@@ -40,12 +50,16 @@ POOL_STATS_PATH = (
     Path(__file__).resolve().parents[1] / "experiments" / "pool_stats.json"
 )
 
+DECODE_STATS_PATH = (
+    Path(__file__).resolve().parents[1] / "experiments" / "decode_bench_results.json"
+)
+
 SCRIPT = r"""
 import json, sys
 import jax.numpy as jnp
 import numpy as np
 from repro.core import Comm, MigratoryStrategy, partition_ell
-from repro.engine import BFSInputs, EngineService, PlanCache, SpMVInputs
+from repro.engine import BFSInputs, EngineService, PlanCache, Request, SpMVInputs
 from repro.sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, partition_graph
 
 phase, out_path = sys.argv[1], sys.argv[2]
@@ -68,13 +82,13 @@ requests = [case for case in cases for _ in range(per)]
 if phase == "sync":
     svc = EngineService(cache=PlanCache())
     for op, inputs, st in requests:
-        svc.submit(op, inputs, st)
+        svc.submit(Request(op, inputs, st))
     responses = svc.drain()
 else:
     svc = EngineService(cache=PlanCache(), max_queue_depth=4096,
                         qos={"bfs": 2.0}, batch_window=0.02)
     svc.start()
-    futures = [svc.submit(op, inputs, st) for op, inputs, st in requests]
+    futures = [svc.submit(Request(op, inputs, st)) for op, inputs, st in requests]
     responses = [f.result(timeout=600) for f in futures]
     svc.stop()
 
@@ -99,7 +113,7 @@ import json, sys, time
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import Comm, MigratoryStrategy, partition_ell
 from repro.engine import (
-    BFSInputs, EngineService, OpSpec, PlanCache, SpMVInputs, SpMVOp,
+    BFSInputs, EngineService, OpSpec, PlanCache, Request, SpMVInputs, SpMVOp,
     placement_table, register_op, run,
 )
 from repro.engine.registry import kernel
@@ -182,13 +196,13 @@ def make_service(n_workers):
     svc.start()
     # warm every plan key on its slot so the timed bursts are pure execution
     for case in cases:
-        svc.submit(*case)
+        svc.submit(Request(*case))
     svc.flush(timeout=1800)
     return svc
 
 def timed_burst(svc):
     t0 = time.perf_counter()
-    futs = [(i % len(cases), svc.submit(*cases[i % len(cases)]))
+    futs = [(i % len(cases), svc.submit(Request(*cases[i % len(cases)])))
             for i in range(reps * len(cases))]
     resps = [(ci, f.result(timeout=1800)) for ci, f in futs]
     wall = time.perf_counter() - t0
@@ -232,8 +246,8 @@ wall1, wallN = median(wall1s), median(wallNs)
 svc = EngineService(cache=PlanCache(), substrate="mesh", workers=workers,
                     dedup=True, batch_window=0.2)
 svc.start()
-prim = svc.submit(*cases[0])
-dups = [svc.submit(*cases[0]) for _ in range(8)]
+prim = svc.submit(Request(*cases[0]))
+dups = [svc.submit(Request(*cases[0])) for _ in range(8)]
 for f in [prim] + dups:
     f.result(timeout=1800)
 svc.stop()
@@ -286,6 +300,103 @@ print("SERVE-POOL-OK", json.dumps({"speedup": round(speedup, 3)}))
 """
 
 
+DECODE_SCRIPT = r"""
+import json, sys, time
+import numpy as np, jax
+from repro.configs import get_config
+from repro.core import Comm, MigratoryStrategy
+from repro.engine import DecodeServer, EngineService
+from repro.models.transformer import moe_decode_params
+
+out_path = sys.argv[1]
+n_seqs, max_new, workers = int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+slo_ms, require_p99_ms = float(sys.argv[5]), float(sys.argv[6])
+
+cfg = get_config("serve-moe")
+params = moe_decode_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [rng.integers(1, cfg.vocab_size, size=int(rng.integers(2, 6))).tolist()
+           for _ in range(n_seqs)]
+
+MODES = (("ep_pull", MigratoryStrategy(comm=Comm.MIGRATE), 4),
+         ("ep_push", MigratoryStrategy(comm=Comm.REMOTE_WRITE), 4),
+         ("tp", None, 1))
+
+def drive(server):
+    # staggered joins: half the sequences arrive while others are mid-decode,
+    # so the batch composition changes between steps (continuous batching)
+    for i, prompt in enumerate(prompts):
+        server.add(prompt, max_new_tokens=max_new)
+        if i % 2:
+            server.step()
+    server.run_until_drained()
+    return dict(server.results), server.steps
+
+record = {"config": "serve-moe", "n_seqs": n_seqs, "max_new": max_new,
+          "workers": workers, "slo_ms": slo_ms,
+          "require_p99_ms": require_p99_ms, "modes": {}}
+for name, st, nod in MODES:
+    svc = EngineService(workers=workers, slo_target_seconds=slo_ms / 1e3)
+    svc.start()
+    t0 = time.perf_counter()
+    try:
+        served, steps = drive(DecodeServer(
+            cfg, params, capacity=8, max_len=32, nodelets=nod,
+            strategy=st, service=svc))
+    finally:
+        svc.stop()
+    wall = time.perf_counter() - t0
+    stats = svc.stats().to_dict()
+    oracle, _ = drive(DecodeServer(
+        cfg, params, capacity=8, max_len=32, nodelets=nod,
+        strategy=st, oracle=True))
+    assert served == oracle, f"{name}: served tokens diverged from the oracle"
+    tokens = sum(len(v) for v in served.values())
+    record["modes"][name] = {
+        "nodelets": nod, "steps": steps, "tokens": tokens,
+        "wall_seconds": wall,
+        "tokens_per_second": tokens / wall if wall > 0 else 0.0,
+        "oracle_parity": True,
+        "queue_wait_p99": stats["queue_wait_p99"],
+        "service_p99": stats["service_p99"],
+        "total_p99": stats["total_p99"],
+        "slo_checked": stats["slo_checked"],
+        "slo_violations": stats["slo_violations"],
+        "slo_attainment": stats["slo_attainment"],
+    }
+    if require_p99_ms > 0:
+        assert stats["slo_checked"] > 0, f"{name}: SLO gate saw zero requests"
+        p99 = stats["total_p99"] * 1e3
+        assert p99 <= require_p99_ms, (
+            f"{name}: end-to-end p99 {p99:.1f} ms exceeds the "
+            f"--require-p99 gate of {require_p99_ms:g} ms")
+with open(out_path, "w") as f:
+    json.dump(record, f, indent=2, default=str)
+print("SERVE-DECODE-OK")
+"""
+
+
+def _run_decode_phase(
+    n_seqs: int, max_new: int, workers: int, slo_ms: float, require_p99_ms: float,
+) -> dict:
+    env = dict(os.environ)
+    src = str(Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    DECODE_STATS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    proc = subprocess.run(
+        [sys.executable, "-c", DECODE_SCRIPT, str(DECODE_STATS_PATH),
+         str(n_seqs), str(max_new), str(workers), str(slo_ms),
+         str(require_p99_ms)],
+        env=env, capture_output=True, text=True, timeout=3600,
+    )
+    if proc.returncode != 0 or "SERVE-DECODE-OK" not in proc.stdout:
+        raise RuntimeError(
+            f"serve decode subprocess failed (rc={proc.returncode}):\n"
+            f"stdout={proc.stdout}\nstderr={proc.stderr}"
+        )
+    return json.loads(DECODE_STATS_PATH.read_text())
+
+
 def _run_pool_phase(
     grid: int, scale: int, tokens: int, reps: int, workers: int,
     min_speedup: float,
@@ -335,17 +446,38 @@ def run(
     quick: bool = False,
     workers: "int | None" = None,
     min_pool_speedup: float = 0.0,
+    require_p99_ms: float = 0.0,
 ):
     if quick:
         grids, scale, per = (12, 16), 8, 8
         pool_sizes = (128, 10, 2048, 16)  # spmv grid, bfs scale, moe tokens, reps
+        decode_sizes = (4, 4)  # sequences, max_new_tokens
     elif full:
         grids, scale, per = (32, 48, 64), 11, 32
         pool_sizes = (256, 11, 4096, 24)
+        decode_sizes = (8, 8)
     else:
         grids, scale, per = (16, 24), 9, 12
         pool_sizes = (128, 10, 2048, 16)
+        decode_sizes = (6, 6)
     rows = []
+    decode = _run_decode_phase(
+        *decode_sizes, workers=2,
+        slo_ms=require_p99_ms if require_p99_ms > 0 else 10_000.0,
+        require_p99_ms=require_p99_ms,
+    )
+    for mode, d in decode["modes"].items():
+        rows.append(emit(
+            "serve", f"decode_{mode}", d["wall_seconds"],
+            op="moe_decode", substrate="local",
+            nodelets=d["nodelets"], steps=d["steps"], tokens=d["tokens"],
+            tokens_per_second=round(d["tokens_per_second"], 1),
+            oracle_parity=d["oracle_parity"],
+            total_p99=round(d["total_p99"], 6),
+            slo_checked=d["slo_checked"],
+            slo_violations=d["slo_violations"],
+            slo_attainment=d["slo_attainment"],
+        ))
     if workers is not None and workers > 1:
         pool = _run_pool_phase(*pool_sizes, workers, min_pool_speedup)
         pooled = pool["stats_workers_pooled"]

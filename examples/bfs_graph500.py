@@ -13,7 +13,7 @@ sys.path.insert(0, "src")
 import numpy as np
 
 from repro.core import Comm, MigratoryStrategy, bfs_effective_bandwidth, validate_parents
-from repro.engine import BFSInputs, BFSOp, run
+from repro.engine import BFSInputs, BFSOp, Request, run
 from repro.sparse import edges_to_csr, erdos_renyi_edges, partition_graph, rmat_edges
 
 if __name__ == "__main__":
@@ -39,11 +39,13 @@ if __name__ == "__main__":
     roots = rng.integers(0, n, size=args.roots)
     for root in roots:
         inputs = BFSInputs(pg, int(root))
-        parents, push = run(
+        parents, push = run(Request(
             BFSOp(), inputs, MigratoryStrategy(comm=Comm.REMOTE_WRITE),
             args.substrate,
-        )
-        _, mig = run(BFSOp(), inputs, MigratoryStrategy(comm=Comm.MIGRATE), args.substrate)
+        ))
+        _, mig = run(Request(
+            BFSOp(), inputs, MigratoryStrategy(comm=Comm.MIGRATE), args.substrate,
+        ))
         ok = validate_parents(pg, int(root), np.asarray(parents))
         print(
             f"root={root}: {push.metrics['mteps']:.2f} MTEPS "

@@ -13,7 +13,7 @@ from repro.core import (
     Layout, MigratoryStrategy, Scheme, bucketize, generate_alignment_pair,
     layout_blk, layout_hcb, pick_grid, plan_stats,
 )
-from repro.engine import GSANAInputs, GSANAOp, run
+from repro.engine import GSANAInputs, GSANAOp, Request, run
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
@@ -32,11 +32,11 @@ if __name__ == "__main__":
     )
     print(f"|V|={args.n} grid={grid}x{grid} bucket_cap={cap}")
 
-    (cand, score), rep = run(
+    (cand, score), rep = run(Request(
         GSANAOp(), inputs,
         MigratoryStrategy(layout=Layout.HCB, scheme=Scheme.PAIR),
         args.substrate,
-    )
+    ))
     print(f"similarity[{rep.substrate}]: {rep.seconds:.2f}s  "
           f"recall@{args.k}={rep.metrics['recall_at_k']:.3f}  "
           f"model-BW={rep.effective_gbps * 1e3:.0f} MB/s")

@@ -1,5 +1,5 @@
 """Quickstart: the paper's three strategies through the one engine entry
-point — ``engine.run(op, inputs, strategy, substrate)``.
+point — ``engine.run(Request(op, inputs, strategy, substrate))``.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +11,7 @@ from repro.core import (
     generate_alignment_pair, partition_ell, pick_grid,
 )
 from repro.engine import (
-    BFSInputs, BFSOp, GSANAInputs, GSANAOp, SpMVInputs, SpMVOp, run,
+    BFSInputs, BFSOp, GSANAInputs, GSANAOp, Request, SpMVInputs, SpMVOp, run,
 )
 from repro.sparse import edges_to_csr, erdos_renyi_edges, laplacian_2d, partition_graph
 
@@ -22,8 +22,8 @@ a = laplacian_2d(32)  # 1024 x 1024 five-point stencil
 x = jnp.asarray(np.random.default_rng(0).standard_normal(1024).astype(np.float32))
 inputs = SpMVInputs(partition_ell(a, P), x)
 
-y_rep, rep_report = run(SpMVOp(), inputs, MigratoryStrategy(replicate_x=True))
-y_str, str_report = run(SpMVOp(), inputs, MigratoryStrategy(replicate_x=False))
+y_rep, rep_report = run(Request(SpMVOp(), inputs, MigratoryStrategy(replicate_x=True)))
+y_str, str_report = run(Request(SpMVOp(), inputs, MigratoryStrategy(replicate_x=False)))
 assert np.allclose(
     np.asarray(gather_result(y_rep, 1024)), np.asarray(gather_result(y_str, 1024)),
     atol=1e-4,
@@ -33,8 +33,8 @@ print("S1 SpMV: replicated-x migrations =", rep_report.traffic.migrations,
 
 # --- S2: BFS — remote writes beat migrating threads (paper §5.2) -----------
 g = partition_graph(edges_to_csr(erdos_renyi_edges(12, 8), 1 << 12), P)
-parents, push = run(BFSOp(), BFSInputs(g, 0), MigratoryStrategy(comm=Comm.REMOTE_WRITE))
-_, mig = run(BFSOp(), BFSInputs(g, 0), MigratoryStrategy(comm=Comm.MIGRATE))
+parents, push = run(Request(BFSOp(), BFSInputs(g, 0), MigratoryStrategy(comm=Comm.REMOTE_WRITE)))
+_, mig = run(Request(BFSOp(), BFSInputs(g, 0), MigratoryStrategy(comm=Comm.MIGRATE)))
 print(f"S2 BFS: reached {push.metrics['reached']}/{1 << 12} vertices; "
       f"traffic migrate={mig.traffic.total_bytes / 1e6:.2f}MB "
       f"remote_write={push.traffic.total_bytes / 1e6:.2f}MB "
@@ -48,15 +48,15 @@ gi = GSANAInputs(
     vs1, vs2, bucketize(vs1, grid, cap=cap), bucketize(vs2, grid, cap=cap),
     k=4, nodelets=P, ground_truth=pi,
 )
-(cand, score), blk = run(GSANAOp(), gi, MigratoryStrategy(layout=Layout.BLK, scheme=Scheme.PAIR))
-_, hcb = run(GSANAOp(), gi, MigratoryStrategy(layout=Layout.HCB, scheme=Scheme.PAIR))
+(cand, score), blk = run(Request(GSANAOp(), gi, MigratoryStrategy(layout=Layout.BLK, scheme=Scheme.PAIR)))
+_, hcb = run(Request(GSANAOp(), gi, MigratoryStrategy(layout=Layout.HCB, scheme=Scheme.PAIR)))
 print(f"S3 GSANA: recall@4={blk.metrics['recall_at_k']:.3f}; migrations "
       f"BLK={blk.traffic.migrations} -> HCB={hcb.traffic.migrations} "
       f"({100 * (1 - hcb.traffic.migrations / blk.traffic.migrations):.0f}% fewer)")
 
 # --- "auto": let the traffic model pick, serve repeats from the plan cache --
-y_auto, auto = run(SpMVOp(), inputs, "auto")  # autotuner: replicate_x wins
-_, again = run(SpMVOp(), inputs, "auto")      # same plan key -> cache hit
+y_auto, auto = run(Request(SpMVOp(), inputs, "auto"))  # autotuner: replicate_x wins
+_, again = run(Request(SpMVOp(), inputs, "auto"))    # same plan key -> cache hit
 print(f"auto SpMV: strategy={auto.strategy} | compile={auto.compile_seconds*1e3:.0f}ms "
       f"then cache_hit={again.cache_hit} at {again.seconds*1e6:.0f}us/call")
 
@@ -65,7 +65,7 @@ from repro.engine import EngineService
 
 svc = EngineService(autotune=True)
 for _ in range(8):
-    svc.submit(SpMVOp(), inputs)
+    svc.submit(Request(SpMVOp(), inputs))
 responses = svc.drain()
 stats = svc.stats()
 print(f"EngineService: {stats.requests} requests, {stats.compiles} compile(s), "

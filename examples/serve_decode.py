@@ -1,12 +1,36 @@
-"""Batched serving example: prefill + greedy decode on any assigned arch.
+"""Decode serving example, end to end through the unified Request API.
 
-    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-3b --gen 32
+Builds the ``serve-moe`` config's expert FFNs, starts a worker-loop
+``EngineService`` with an SLO target, and drives a continuous-batched
+``DecodeServer`` whose every decode step travels as one ``Request`` —
+then cross-checks the served tokens against the single-process oracle.
+See DESIGN.md §1g for the walkthrough this example mirrors.
+
+    PYTHONPATH=src python examples/serve_decode.py
+    PYTHONPATH=src python examples/serve_decode.py --dispatch ep_push --slo-ms 2000
+
+The legacy LM prefill/decode driver still lives behind the launcher:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --gen 32
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
 
-from repro.launch.serve import main
+from repro.launch.serve import decode_serve_demo
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seqs", type=int, default=8)
+    ap.add_argument("--dispatch", choices=("ep_pull", "ep_push", "tp"), default="ep_pull")
+    ap.add_argument("--nodelets", type=int, default=4)
+    ap.add_argument("--slo-ms", type=float, default=5000.0)
+    ap.add_argument("--workers", type=int, default=2)
+    args = ap.parse_args()
+    report = decode_serve_demo(
+        args.seqs, dispatch=args.dispatch, nodelets=args.nodelets,
+        slo_ms=args.slo_ms, workers=args.workers,
+    )
+    if not report["oracle_parity"]:
+        raise SystemExit("served tokens diverged from the oracle")

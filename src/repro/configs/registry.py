@@ -7,7 +7,8 @@ import dataclasses
 from ..models.config import ModelConfig
 from . import (
     glm4_9b, llama3_2_3b, mistral_nemo_12b, mixtral_8x22b, moonshot_v1_16b_a3b,
-    phi3_vision_4_2b, qwen2_7b, rwkv6_3b, whisper_small, zamba2_2_7b,
+    phi3_vision_4_2b, qwen2_7b, rwkv6_3b, serve_moe, whisper_small,
+    zamba2_2_7b,
 )
 
 ARCHS = {
@@ -23,11 +24,22 @@ ARCHS = {
     "phi-3-vision-4.2b": phi3_vision_4_2b.config,
 }
 
+# auxiliary configs: resolvable by name but outside the assigned-arch sweep
+# registry (ARCHS drives the benchmark matrix; these drive demos/serving)
+AUX_CONFIGS = {
+    "serve-moe": serve_moe.config,
+}
+
 
 def get_config(arch: str) -> ModelConfig:
-    if arch not in ARCHS:
-        raise KeyError(f"unknown arch {arch!r}; choose from {sorted(ARCHS)}")
-    return ARCHS[arch]()
+    if arch in ARCHS:
+        return ARCHS[arch]()
+    if arch in AUX_CONFIGS:
+        return AUX_CONFIGS[arch]()
+    raise KeyError(
+        f"unknown arch {arch!r}; choose from "
+        f"{sorted([*ARCHS, *AUX_CONFIGS])}"
+    )
 
 
 def reduced_config(arch: str, dtype: str = "float32") -> ModelConfig:

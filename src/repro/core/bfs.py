@@ -134,8 +134,8 @@ def bfs(
     """
     from ..engine.substrate import substrate_for_mesh
 
-    return substrate_for_mesh(mesh, axis_name).bfs(
-        g, root, strategy or MigratoryStrategy(), max_rounds
+    return substrate_for_mesh(mesh, axis_name).kernel("bfs")(
+        g, root, strategy=strategy or MigratoryStrategy(), max_rounds=max_rounds
     )
 
 

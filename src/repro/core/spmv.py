@@ -186,7 +186,9 @@ def spmv(
     """
     from ..engine.substrate import substrate_for_mesh
 
-    return substrate_for_mesh(mesh, axis_name).spmv(a, x, strategy)
+    return substrate_for_mesh(mesh, axis_name).kernel("spmv")(
+        a, x, strategy=strategy
+    )
 
 
 def gather_result(y_striped: jax.Array, n: int) -> jax.Array:

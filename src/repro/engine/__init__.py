@@ -3,10 +3,14 @@ paper's three irregular algorithms, with built-in traffic & bandwidth
 accounting and an explicit plan -> compile -> execute pipeline
 (DESIGN.md §1).
 
-    from repro.engine import run, SpMVOp, SpMVInputs
-    y, report = run(SpMVOp(), SpMVInputs(a, x), strategy, substrate="mesh")
-    y, report = run("spmv", SpMVInputs(a, x), "auto")   # autotuned strategy
+    from repro.engine import Request, run, SpMVOp, SpMVInputs
+    y, report = run(Request(SpMVOp(), SpMVInputs(a, x), strategy, "mesh"))
+    y, report = run(Request("spmv", SpMVInputs(a, x), "auto"))  # autotuned
     print(report.to_json())   # seconds + traffic + cache_hit/compile_seconds
+
+``Request`` is the one entry shape for ``run`` and ``EngineService.submit``
+(per-request ``qos``/``timeout`` ride it); the legacy kwargs spellings
+still work but emit :class:`DeprecationWarning` (DESIGN.md §1g).
 
 Ops implement :class:`MigratoryOp`; backends implement :class:`Substrate`
 and register with :func:`register_substrate`. Ops and substrates meet only
@@ -70,6 +74,15 @@ from .moe_op import (
     moe_dispatch_reference,
     moe_dispatch_traffic,
 )
+from .decode import DecodeServer
+from .decode_op import (
+    MoEDecodeInputs,
+    MoEDecodeOp,
+    moe_decode_cost_model,
+    moe_decode_reference,
+    moe_decode_traffic,
+)
+from .request import Request
 from .runner import (
     build_plan,
     compile_plan,
@@ -78,6 +91,7 @@ from .runner import (
     resolve_strategy,
     run,
     run_plan,
+    run_request,
     single_call,
 )
 from .service import (
@@ -88,6 +102,7 @@ from .service import (
     ServiceResponse,
     ServiceStats,
     ServiceStopped,
+    ServiceTimeout,
 )
 from .substrate import (
     LocalSubstrate,
@@ -102,21 +117,27 @@ from .substrate import (
 
 __all__ = [
     "AdmissionError", "AutotuneResult", "BFSInputs", "BFSOp", "CompiledPlan",
+    "DecodeServer",
     "EngineService", "ExecutionPlan", "GRAIN_CANDIDATES", "GSANAInputs",
     "GSANAOp", "KernelRegistry", "LocalSubstrate", "MeshSubstrate",
-    "MigratoryOp", "MoEDispatchInputs", "MoEDispatchOp", "OPS", "OpSpec",
+    "MigratoryOp", "MoEDecodeInputs", "MoEDecodeOp",
+    "MoEDispatchInputs", "MoEDispatchOp", "OPS", "OpSpec",
     "OpNotSupportedError", "PALLAS_BLOCK_CANDIDATES", "PallasSubstrate",
     "PlanCache", "ProbeStore",
-    "RankedCandidate",
+    "RankedCandidate", "Request",
     "RunReport", "ServiceFuture", "ServiceRequest", "ServiceResponse",
-    "ServiceStats", "ServiceStopped", "SpMVInputs", "SpMVOp", "Substrate",
+    "ServiceStats", "ServiceStopped", "ServiceTimeout",
+    "SpMVInputs", "SpMVOp", "Substrate",
     "args_signature", "autotune", "build_plan", "candidate_grid",
     "capabilities", "choose_strategy", "compile_plan", "default_cache",
     "default_probe_store", "default_registry", "execute", "get_substrate",
-    "kernel", "list_substrates", "moe_dispatch_cost_model",
+    "kernel", "list_substrates",
+    "moe_decode_cost_model", "moe_decode_reference", "moe_decode_traffic",
+    "moe_dispatch_cost_model",
     "moe_dispatch_grid", "moe_dispatch_reference", "moe_dispatch_traffic",
     "placement_table", "plan_key", "rank_strategies", "register_op",
     "register_substrate",
-    "resolve_op", "resolve_strategy", "run", "run_plan", "single_call",
+    "resolve_op", "resolve_strategy", "run", "run_plan", "run_request",
+    "single_call",
     "strategy_dict", "substrate_for_mesh",
 ]

@@ -6,8 +6,8 @@ irregular algorithms fast on migratory hardware — and the right choice is
 workload-dependent (Rolinger & Krieger, 1812.05955). The autotuner makes
 that choice a systematized engine feature instead of a caller obligation:
 
-    strategy = choose_strategy("spmv", inputs)          # analytic, no execution
-    result, report = engine.run("spmv", inputs, "auto") # same thing, inline
+    strategy = choose_strategy("spmv", inputs)            # analytic, no execution
+    result, report = run(Request("spmv", inputs, "auto")) # same thing, inline
 
     tuned = autotune("bfs", inputs, probe_top_k=3)      # + measured probes
     best = tuned.best                                    # probes warm the plan

@@ -1,0 +1,364 @@
+"""One MoE decode step as an engine op — the serving tentpole (DESIGN.md §1g).
+
+``moe_decode`` runs a compact one-block MoE LM decode step for a
+continuous batch of sequences: embed the current token of every batch
+slot, one single-head attention sublayer over each slot's KV cache (each
+slot carries its own ``positions`` write cursor, so sequences at different
+depths share one step), then the MoE sublayer *through the engine's
+``moe_dispatch`` machinery* — routing, capacity binning, the S2
+collectives, and the real SwiGLU expert FFN (models/moe.py weights) — and
+the lm_head. Everything outside the dispatch runs through the SAME two
+compiled executables (``_decode_pre``/``_decode_post``) in the local and
+mesh kernels; the dispatch is the shared per-shard helper stack of
+engine/moe_op.py, so served decode is bit-identical to the single-process
+:func:`moe_decode_reference` oracle in all three dispatch modes
+(ep_push / ep_pull / tp) by construction.
+
+Params come from :func:`repro.models.transformer.moe_decode_params`,
+parameterized by a :class:`~repro.models.config.ModelConfig` (the
+``serve-moe`` entry in configs/). The op returns
+``(logits (B, V), new_k (B, S, D), new_v (B, S, D))`` — the caller (the
+serving plane's :class:`~repro.engine.decode.DecodeServer`) threads the
+caches back in on the next submit, which is exactly the "per-sequence KV
+state carried across submits" contract continuous batching needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.cost import CostEstimate
+from ..core.strategies import MigratoryStrategy, TrafficStats
+from ..models.layers import rmsnorm
+from ..models.moe import dispatch_from_strategy
+from .api import ExecutionPlan, OpNotSupportedError, plan_key
+from .moe_op import _dispatch_local, _dispatch_mesh, moe_dispatch_grid
+from .registry import OpSpec, kernel, register_op
+from .substrate import Substrate
+
+_PARAM_KEYS = (
+    "embed", "ln1", "ln2", "ln_f", "wq", "wk", "wv", "wo",
+    "router", "w_gate", "w_up", "w_down", "lm_head",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDecodeInputs:
+    """One continuous-batched decode step. ``tokens``/``positions`` are
+    (B,) int32 — the current token and KV write cursor of every batch slot
+    (padded slots just decode garbage that the server ignores; they must be
+    deterministic so the oracle replay stays bit-identical). ``k_cache``/
+    ``v_cache`` are (B, S, D). ``nodelets`` is the expert-parallel width
+    the dispatch maps onto; B must divide by it."""
+
+    params: dict
+    tokens: jax.Array
+    k_cache: jax.Array
+    v_cache: jax.Array
+    positions: jax.Array
+    nodelets: int = 1
+    experts_per_token: int = 2
+    capacity_factor: float = 1.25
+    norm_eps: float = 1e-5
+
+    @property
+    def num_experts(self) -> int:
+        return int(self.params["router"].shape[-1])
+
+
+def derive_decode_mode(inputs: MoEDecodeInputs, strategy: MigratoryStrategy) -> str:
+    """Same strategy -> dispatch-mode mapping as ``moe_dispatch``."""
+    return dispatch_from_strategy(
+        strategy, num_experts=inputs.num_experts, data_axis=inputs.nodelets
+    )
+
+
+# -- the decode math (dispatch-agnostic) ---------------------------------------
+#
+# Split into two jitted halves around the dispatch. Both kernels call the
+# SAME compiled executables for everything outside the dispatch —
+# bit-identity demands the same executable, not merely the same math: XLA
+# is free to fuse and reassociate float reductions differently in each
+# compile, and a whole-step jit on the mesh path was observed to drift the
+# logits by 1 ulp at nodelets=8.
+
+
+@functools.partial(jax.jit, static_argnames=("norm_eps",))
+def _decode_pre(p, tokens, k_cache, v_cache, positions, *, norm_eps):
+    """Embed -> attention over the cache -> residual + pre-MoE norm."""
+    B, S, D = k_cache.shape
+    x = jnp.take(p["embed"], tokens, axis=0)  # (B, D)
+    h = rmsnorm(x, p["ln1"], norm_eps)
+    q = h @ p["wq"]
+    k_new = h @ p["wk"]
+    v_new = h @ p["wv"]
+    b = jnp.arange(B)
+    k_cache = k_cache.at[b, positions].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[b, positions].set(v_new.astype(v_cache.dtype))
+    s = jnp.einsum(
+        "bd,bsd->bs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * jax.lax.rsqrt(jnp.float32(D))
+    mask = jnp.arange(S)[None, :] <= positions[:, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    att = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    x = x + jnp.einsum("bs,bsd->bd", att, v_cache) @ p["wo"]
+    h2 = rmsnorm(x, p["ln2"], norm_eps)
+    return x, h2, k_cache, v_cache
+
+
+@functools.partial(jax.jit, static_argnames=("norm_eps",))
+def _decode_post(p, x, expert_out, *, norm_eps):
+    """MoE residual -> final norm -> lm_head."""
+    x = x + expert_out
+    return rmsnorm(x, p["ln_f"], norm_eps) @ p["lm_head"]
+
+
+def _decode_local(
+    params, tokens, k_cache, v_cache, positions, *,
+    mode, nodelets, experts_per_token, capacity_factor, norm_eps,
+):
+    x, h2, k_cache, v_cache = _decode_pre(
+        params, tokens, k_cache, v_cache, positions, norm_eps=norm_eps
+    )
+    out = _dispatch_local(
+        h2, params["router"], params["w_gate"], params["w_up"],
+        params["w_down"], mode=mode, nodelets=nodelets,
+        experts_per_token=experts_per_token, capacity_factor=capacity_factor,
+    )
+    return _decode_post(params, x, out, norm_eps=norm_eps), k_cache, v_cache
+
+
+def _decode_mesh(
+    params, tokens, k_cache, v_cache, positions, *,
+    mode, nodelets, experts_per_token, capacity_factor, norm_eps,
+    mesh, axis_name,
+):
+    x, h2, k_cache, v_cache = _decode_pre(
+        params, tokens, k_cache, v_cache, positions, norm_eps=norm_eps
+    )
+    out = _dispatch_mesh(
+        h2, params["router"], params["w_gate"], params["w_up"],
+        params["w_down"], mode=mode, nodelets=nodelets,
+        experts_per_token=experts_per_token, capacity_factor=capacity_factor,
+        mesh=mesh, axis_name=axis_name,
+    )
+    # re-land the mesh-sharded dispatch output as a replicated local array:
+    # a sharded operand would specialize a second _decode_post executable
+    # whose fusion choices need not match the local kernel's bit-for-bit
+    out = jnp.asarray(np.asarray(out))
+    return _decode_post(params, x, out, norm_eps=norm_eps), k_cache, v_cache
+
+
+# -- kernels -------------------------------------------------------------------
+
+
+@kernel("moe_decode", "local")
+def _moe_decode_local(
+    sub: Substrate, params, tokens, k_cache, v_cache, positions, *,
+    strategy, nodelets, experts_per_token, capacity_factor, norm_eps,
+):
+    mode = dispatch_from_strategy(
+        strategy, num_experts=int(params["router"].shape[-1]), data_axis=nodelets
+    )
+    return _decode_local(
+        params, tokens, k_cache, v_cache, positions, mode=mode,
+        nodelets=nodelets, experts_per_token=experts_per_token,
+        capacity_factor=capacity_factor, norm_eps=norm_eps,
+    )
+
+
+@kernel("moe_decode", "mesh")
+def _moe_decode_mesh(
+    sub, params, tokens, k_cache, v_cache, positions, *,
+    strategy, nodelets, experts_per_token, capacity_factor, norm_eps,
+):
+    mode = dispatch_from_strategy(
+        strategy, num_experts=int(params["router"].shape[-1]), data_axis=nodelets
+    )
+    mesh = sub.mesh_for(nodelets)
+    axis_size = dict(mesh.shape).get(sub.axis_name)
+    if axis_size != nodelets:
+        raise OpNotSupportedError(
+            f"moe_decode needs a {nodelets}-way {sub.axis_name!r} mesh axis "
+            f"(inputs.nodelets), got {axis_size}"
+        )
+    return _decode_mesh(
+        params, tokens, k_cache, v_cache, positions, mode=mode,
+        nodelets=nodelets, experts_per_token=experts_per_token,
+        capacity_factor=capacity_factor, norm_eps=norm_eps,
+        mesh=mesh, axis_name=sub.axis_name,
+    )
+
+
+def moe_decode_reference(
+    inputs: MoEDecodeInputs, strategy: MigratoryStrategy | None = None
+) -> tuple:
+    """The single-process ``model.apply`` oracle: the exact decode math with
+    the local dispatch — what every served decode step must bit-match."""
+    strategy = strategy if strategy is not None else MigratoryStrategy()
+    return _decode_local(
+        inputs.params, inputs.tokens, inputs.k_cache, inputs.v_cache,
+        inputs.positions, mode=derive_decode_mode(inputs, strategy),
+        nodelets=inputs.nodelets, experts_per_token=inputs.experts_per_token,
+        capacity_factor=inputs.capacity_factor, norm_eps=inputs.norm_eps,
+    )
+
+
+# -- traffic model -------------------------------------------------------------
+
+
+def moe_decode_traffic(
+    inputs: MoEDecodeInputs, strategy: MigratoryStrategy
+) -> TrafficStats:
+    """Analytic dispatch traffic of one decode step (T = B tokens). Unlike
+    ``moe_dispatch`` there is no host routing replay — the serving plane
+    submits a fresh step every few milliseconds, so the model uses the
+    uniform-routing expectation for push mode: of the T*k kept slots, a
+    (P-1)/P fraction lands off-shard. Pull mode is exact (routing-free)."""
+    P, k = inputs.nodelets, inputs.experts_per_token
+    T = int(inputs.tokens.shape[0])
+    D = int(inputs.k_cache.shape[-1])
+    itemsize = jnp.dtype(inputs.k_cache.dtype).itemsize
+    mode = derive_decode_mode(inputs, strategy)
+    if mode == "tp":
+        return TrafficStats(0, 0, 0)
+    if mode == "ep_push":
+        remote = int(T * k * (P - 1) / P)
+        return TrafficStats(
+            migrations=0,
+            remote_writes=remote,
+            collective_bytes=remote * (2 * D * itemsize + 4),
+        )
+    gather = T * (P - 1) * D * itemsize + T * k * (P - 1) * 4
+    ret = T * k * (P - 1) * D * itemsize
+    return TrafficStats(
+        migrations=T * (P - 1), remote_writes=0, collective_bytes=gather + ret
+    )
+
+
+def moe_decode_cost_model(inputs: MoEDecodeInputs):
+    """Autotuner factory: rank S2 modes by modeled dispatch traffic (the
+    rest of the step is mode-invariant compute)."""
+    T = int(inputs.tokens.shape[0])
+    B, S, D = inputs.k_cache.shape
+    itemsize = jnp.dtype(inputs.k_cache.dtype).itemsize
+    # mode-invariant working set: both caches read + written, activations
+    stage_bytes = 4 * int(B) * int(S) * int(D) * itemsize
+
+    def estimate(st: MigratoryStrategy) -> CostEstimate:
+        traffic = moe_decode_traffic(inputs, st)
+        mode = derive_decode_mode(inputs, st)
+        launches = {"tp": 0, "ep_push": 3, "ep_pull": 2}[mode]
+        return CostEstimate(
+            strategy=st,
+            traffic_bytes=traffic.total_bytes,
+            balance_penalty=0.0,
+            detail={
+                "dispatch_mode": mode,
+                "migrations": traffic.migrations,
+                "batch": T,
+                "collective_launches": launches,
+                "memory_bytes_per_launch": stage_bytes,
+                "memory_access": "stream",
+            },
+            traffic=traffic,
+        )
+
+    return estimate
+
+
+# -- the op --------------------------------------------------------------------
+
+
+class MoEDecodeOp:
+    """MigratoryOp adapter: one continuous-batched MoE decode step."""
+
+    name = "moe_decode"
+
+    def plan(
+        self, inputs: MoEDecodeInputs, strategy: MigratoryStrategy,
+        substrate: Substrate,
+    ) -> ExecutionPlan:
+        B = int(inputs.tokens.shape[0])
+        if B % inputs.nodelets != 0:
+            raise ValueError(
+                f"moe_decode needs B % nodelets == 0, got B={B}, "
+                f"nodelets={inputs.nodelets}"
+            )
+        missing = [k for k in _PARAM_KEYS if k not in inputs.params]
+        if missing:
+            raise ValueError(
+                f"moe_decode params missing {missing}; build them with "
+                "repro.models.transformer.moe_decode_params(cfg, key)"
+            )
+        kern = substrate.kernel(self.name)
+        args = (
+            inputs.params, inputs.tokens, inputs.k_cache, inputs.v_cache,
+            inputs.positions,
+        )
+        statics = (
+            inputs.nodelets, inputs.experts_per_token,
+            inputs.capacity_factor, inputs.norm_eps,
+        )
+        nodelets, k, cf, eps = statics
+        return ExecutionPlan(
+            op=self.name,
+            strategy=strategy,
+            substrate=substrate.name,
+            inputs=inputs,
+            executor=lambda p, t, kc, vc, pos: kern(
+                p, t, kc, vc, pos, strategy=strategy, nodelets=nodelets,
+                experts_per_token=k, capacity_factor=cf, norm_eps=eps,
+            ),
+            args=args,
+            meta={"mode": derive_decode_mode(inputs, strategy)},
+            key=plan_key(self.name, substrate, strategy, args, static=statics),
+            # the kernels jit their own pre/dispatch/post stages and share
+            # the pre/post executables across substrates; a whole-executor
+            # jit here would refuse (and re-fuse) differently per substrate,
+            # breaking local/mesh bit-identity — and the mesh kernel's
+            # host-side re-landing of the dispatch output can't be traced
+            jit=False,
+        )
+
+    def traffic(self, plan: ExecutionPlan) -> TrafficStats:
+        return moe_decode_traffic(plan.inputs, plan.strategy)
+
+    def bytes_moved(self, plan: ExecutionPlan) -> int:
+        """Useful bytes of one step: full param read + caches read/written
+        + logits written."""
+        i = plan.inputs
+        B, S, D = i.k_cache.shape
+        it = jnp.dtype(i.k_cache.dtype).itemsize
+        params_bytes = sum(
+            w.size * jnp.dtype(w.dtype).itemsize
+            for w in jax.tree_util.tree_leaves(i.params)
+        )
+        V = int(i.params["lm_head"].shape[-1])
+        return params_bytes + 4 * int(B) * int(S) * int(D) * it + int(B) * V * it
+
+    def metrics(self, plan: ExecutionPlan, result: Any, seconds: float) -> dict[str, Any]:
+        i = plan.inputs
+        B, S, D = i.k_cache.shape
+        return {
+            "dispatch_mode": plan.meta["mode"],
+            "experts": i.num_experts,
+            "nodelets": i.nodelets,
+            "batch": int(B),
+            "cache_len": int(S),
+            "tokens_per_second": int(B) / seconds if seconds > 0 else 0.0,
+        }
+
+
+register_op(OpSpec(
+    name="moe_decode",
+    factory=MoEDecodeOp,
+    inputs_type=MoEDecodeInputs,
+    cost_model=moe_decode_cost_model,
+    grid=moe_dispatch_grid,
+))

@@ -16,12 +16,18 @@ cost model) **without editing any existing Substrate subclass** — pallas
 simply has no entry, so ``OpNotSupportedError`` falls out of the registry.
 
 The op executes the dispatch *transport* (routing, capacity binning, the
-collectives, and the gate-weighted combine) with identity experts — the
-expert FFN itself is the LM stack's job (models/moe.py); what the engine
-measures and models is the irregular data movement. Local and mesh kernels
-are bit-identical: per-shard math is shared helper code, the exchanges are
-pure permutations, and the pull-mode return trip uses a psum in which every
-slot has exactly one nonzero contributor (float-exact by construction).
+collectives, and the gate-weighted combine) and, when the inputs carry
+expert weights (``w_gate``/``w_up``/``w_down`` in the
+:func:`repro.models.moe.moe_params` layout), the real SwiGLU expert FFN at
+the owner stage — the same :func:`repro.models.moe.expert_ffn` math the LM
+stack runs, applied to the capacity buffers between commit and gather-back.
+Without weights the experts are identity and the op degenerates to the
+pure transport it was through PR 7. Local and mesh kernels are
+bit-identical either way: per-shard math is shared helper code, the
+exchanges are pure permutations, expert weights shard over E exactly as
+shard_map would slice them, and the pull-mode return trip uses a psum in
+which every slot has exactly one nonzero contributor (float-exact by
+construction).
 """
 from __future__ import annotations
 
@@ -44,7 +50,7 @@ from ..core.strategies import (
     strategy_grid,
 )
 from ..core.util import round_up
-from ..models.moe import _positions_in_expert, dispatch_from_strategy
+from ..models.moe import _positions_in_expert, dispatch_from_strategy, expert_ffn
 from .api import ExecutionPlan, OpNotSupportedError, plan_key
 from .registry import OpSpec, kernel, register_op
 from .substrate import Substrate
@@ -63,10 +69,47 @@ class MoEDispatchInputs:
     nodelets: int = 8
     experts_per_token: int = 2
     capacity_factor: float = 1.25
+    # optional expert weights (moe_params layout): present -> the op runs
+    # the real SwiGLU FFN at the owner stage; absent -> identity experts
+    w_gate: "jax.Array | None" = None  # (E, D, F)
+    w_up: "jax.Array | None" = None  # (E, D, F)
+    w_down: "jax.Array | None" = None  # (E, F, D)
 
     @property
     def num_experts(self) -> int:
         return int(self.router.shape[-1])
+
+    @property
+    def has_experts(self) -> bool:
+        return self.w_gate is not None
+
+    @property
+    def ffn_args(self) -> tuple:
+        """The traced weight args, in kernel order — () when identity."""
+        if not self.has_experts:
+            return ()
+        return (self.w_gate, self.w_up, self.w_down)
+
+    def validate_experts(self) -> None:
+        ws = (self.w_gate, self.w_up, self.w_down)
+        present = [w is not None for w in ws]
+        if not any(present):
+            return
+        if not all(present):
+            raise ValueError(
+                "moe_dispatch expert weights are all-or-none: pass "
+                "w_gate, w_up and w_down together"
+            )
+        E, D = self.num_experts, int(self.x.shape[-1])
+        F = int(self.w_gate.shape[-1])
+        want = {"w_gate": (E, D, F), "w_up": (E, D, F), "w_down": (E, F, D)}
+        for name, shape in want.items():
+            got = tuple(getattr(self, name).shape)
+            if got != shape:
+                raise ValueError(
+                    f"moe_dispatch {name} must have shape {shape} "
+                    f"(moe_params layout), got {got}"
+                )
 
 
 def _cap(capacity_factor: float, expected_slots: float) -> int:
@@ -95,9 +138,10 @@ def _route_shard(x_s: jax.Array, router: jax.Array, *, k: int):
     return gates.astype(x_s.dtype), experts.astype(jnp.int32)
 
 
-def _tp_shard(x_s, router, *, k, num_experts, cap):
+def _tp_shard(x_s, router, ffn=None, *, k, num_experts, cap):
     """S1 fallback: all experts resident, dispatch is a node-local scatter
-    into (E, cap, D) buffers and a gate-weighted gather back."""
+    into (E, cap, D) buffers, the (optional) expert FFN, and a gate-weighted
+    gather back."""
     t, d = x_s.shape
     gates, experts = _route_shard(x_s, router, k=k)
     ef = experts.reshape(-1)
@@ -108,6 +152,8 @@ def _tp_shard(x_s, router, *, k, num_experts, cap):
     buf = buf.at[jnp.where(keep, ef, 0), jnp.where(keep, pos, 0)].add(
         jnp.where(keep[:, None], xk, 0), mode="drop"
     )
+    if ffn is not None:
+        buf = expert_ffn(ffn, buf)
     vals = buf[jnp.where(keep, ef, 0), jnp.where(keep, pos, 0)]
     vals = jnp.where(keep[:, None], vals, 0)
     return jnp.sum((vals * gates.reshape(-1)[:, None]).reshape(t, k, d), axis=1)
@@ -131,10 +177,11 @@ def _push_pre(x_s, router, *, k, P, e_local, cap_pair):
     return send, send_e, gates, ow, ps, keep
 
 
-def _push_owner(recv, recv_e, shard_id, *, e_local, cap_e):
+def _push_owner(recv, recv_e, shard_id, ffn=None, *, e_local, cap_e):
     """Owner side of ep_push: commit received slots into per-local-expert
-    buffers (second capacity stage), run identity experts, and hand the slot
-    values back in the received (P_src, cap_pair) layout."""
+    buffers (second capacity stage), run the experts (identity when ``ffn``
+    is None, the owner's SwiGLU shard otherwise), and hand the slot values
+    back in the received (P_src, cap_pair) layout."""
     p_src, cap_pair, d = recv.shape
     rf = (recv_e - shard_id * e_local).reshape(-1)
     rf = jnp.where(recv_e.reshape(-1) >= 0, rf, e_local)  # e_local = pad bin
@@ -145,6 +192,8 @@ def _push_owner(recv, recv_e, shard_id, *, e_local, cap_e):
     buf = buf.at[jnp.where(rkeep, rf, 0), jnp.where(rkeep, rpos, 0)].add(
         jnp.where(rkeep[:, None], rx, 0), mode="drop"
     )
+    if ffn is not None:
+        buf = expert_ffn(ffn, buf)
     out = buf[jnp.where(rkeep, rf, 0), jnp.where(rkeep, rpos, 0)]
     out = jnp.where(rkeep[:, None], out, 0)
     return out.reshape(p_src, cap_pair, d)
@@ -157,10 +206,11 @@ def _push_post(back, gates, ow, ps, keep, *, t, k):
     return jnp.sum((vals * gates.reshape(-1)[:, None]).reshape(t, k, -1), axis=1)
 
 
-def _pull_owner(x_full, eg, shard_id, *, k, e_local, cap_e):
+def _pull_owner(x_full, eg, shard_id, ffn=None, *, k, e_local, cap_e):
     """Owner side of ep_pull: the full gathered slot stream, committed into
-    my experts' buffers; returns per-slot values, nonzero only for slots I
-    own AND kept (<= one nonzero contributor per slot across owners)."""
+    my experts' buffers (then through my expert shard when ``ffn`` is set);
+    returns per-slot values, nonzero only for slots I own AND kept (<= one
+    nonzero contributor per slot across owners)."""
     mine = (eg // e_local) == shard_id
     le = jnp.where(mine, eg - shard_id * e_local, e_local)
     pos = _positions_in_expert(le, e_local + 1)
@@ -170,6 +220,8 @@ def _pull_owner(x_full, eg, shard_id, *, k, e_local, cap_e):
     buf = buf.at[jnp.where(keep, le, 0), jnp.where(keep, pos, 0)].add(
         jnp.where(keep[:, None], xkg, 0), mode="drop"
     )
+    if ffn is not None:
+        buf = expert_ffn(ffn, buf)
     out = buf[jnp.where(keep, le, 0), jnp.where(keep, pos, 0)]
     return jnp.where(keep[:, None], out, 0)  # (T*k, D)
 
@@ -183,22 +235,46 @@ def _pull_combine(vals_local, gates, x_s, *, t, k):
 # -- local kernel: vmap emulation over the nodelet axis ------------------------
 
 
+def _ffn_dict(ws: tuple) -> "dict | None":
+    """(w_gate, w_up, w_down) kernel args -> expert_ffn params (or None)."""
+    if not ws:
+        return None
+    g, u, d = ws
+    return {"w_gate": g, "w_up": u, "w_down": d}
+
+
+def _ffn_shards(ffn: "dict | None", P: int) -> "dict | None":
+    """Slice replicated (E, ...) expert weights into the per-owner blocks
+    shard_map's ``P_(axis)`` in_spec would hand each shard — leading axis P,
+    so the local vmap emulation sees exactly the mesh shard's weights."""
+    if ffn is None:
+        return None
+    return {k: w.reshape(P, w.shape[0] // P, *w.shape[1:]) for k, w in ffn.items()}
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "nodelets", "experts_per_token", "capacity_factor"),
 )
-def _dispatch_local(x, router, *, mode, nodelets, experts_per_token, capacity_factor):
+def _dispatch_local(
+    x, router, w_gate=None, w_up=None, w_down=None, *,
+    mode, nodelets, experts_per_token, capacity_factor,
+):
     P, k = nodelets, experts_per_token
     T, D = x.shape
     E = router.shape[-1]
     t = T // P
     xs = x.reshape(P, t, D)
+    ffn = None if w_gate is None else {"w_gate": w_gate, "w_up": w_up, "w_down": w_down}
     if mode == "tp":
         cap = _cap(capacity_factor, t * k / E)
-        body = functools.partial(_tp_shard, k=k, num_experts=E, cap=cap)
+        # tp replicates the whole expert set per shard: weights ride in the
+        # closure, broadcast across the vmapped nodelet axis
+        body = functools.partial(_tp_shard, ffn=ffn, k=k, num_experts=E, cap=cap)
         return jax.vmap(body, in_axes=(0, None))(xs, router).reshape(T, D)
     e_local = E // P
     cap_e = _cap(capacity_factor, T * k / E)
+    ffn_s = _ffn_shards(ffn, P)  # ep modes: weights shard over E
     if mode == "ep_push":
         cap_pair = _cap(capacity_factor, t * k / P)
         pre = functools.partial(_push_pre, k=k, P=P, e_local=e_local, cap_pair=cap_pair)
@@ -206,7 +282,7 @@ def _dispatch_local(x, router, *, mode, nodelets, experts_per_token, capacity_fa
         recv = jnp.swapaxes(send, 0, 1)  # the all_to_all, as a transpose
         recv_e = jnp.swapaxes(send_e, 0, 1)
         owner = functools.partial(_push_owner, e_local=e_local, cap_e=cap_e)
-        out = jax.vmap(owner)(recv, recv_e, jnp.arange(P))
+        out = jax.vmap(owner)(recv, recv_e, jnp.arange(P), ffn_s)
         back = jnp.swapaxes(out, 0, 1)  # the return all_to_all
         post = functools.partial(_push_post, t=t, k=k)
         return jax.vmap(post)(back, gates, ow, ps, keep).reshape(T, D)
@@ -215,7 +291,9 @@ def _dispatch_local(x, router, *, mode, nodelets, experts_per_token, capacity_fa
         gates, experts = jax.vmap(route, in_axes=(0, None))(xs, router)
         eg = experts.reshape(-1)  # global slot stream, stripe-major
         owner = functools.partial(_pull_owner, k=k, e_local=e_local, cap_e=cap_e)
-        contrib = jax.vmap(owner, in_axes=(None, None, 0))(x, eg, jnp.arange(P))
+        contrib = jax.vmap(owner, in_axes=(None, None, 0, 0))(
+            x, eg, jnp.arange(P), ffn_s
+        )
         vals_all = contrib.sum(0)  # exact: <= 1 nonzero contributor per slot
         vals = vals_all.reshape(P, t * k, D)
         comb = functools.partial(_pull_combine, t=t, k=k)
@@ -227,7 +305,8 @@ def _dispatch_local(x, router, *, mode, nodelets, experts_per_token, capacity_fa
 
 
 def _dispatch_mesh(
-    x, router, *, mode, nodelets, experts_per_token, capacity_factor, mesh, axis_name
+    x, router, w_gate=None, w_up=None, w_down=None, *,
+    mode, nodelets, experts_per_token, capacity_factor, mesh, axis_name,
 ):
     from jax.sharding import PartitionSpec as P_
 
@@ -237,39 +316,49 @@ def _dispatch_mesh(
     T, D = x.shape
     E = router.shape[-1]
     t = T // P
+    ffn_args = () if w_gate is None else (w_gate, w_up, w_down)
     if mode == "tp":
         cap = _cap(capacity_factor, t * k / E)
+        w_spec = P_()  # tp: full expert set resident on every shard
 
-        def body(x_s, router):
-            return _tp_shard(x_s, router, k=k, num_experts=E, cap=cap)
+        def body(x_s, router, *ws):
+            return _tp_shard(
+                x_s, router, _ffn_dict(ws), k=k, num_experts=E, cap=cap
+            )
 
     elif mode == "ep_push":
         e_local = E // P
         cap_e = _cap(capacity_factor, T * k / E)
         cap_pair = _cap(capacity_factor, t * k / P)
+        w_spec = P_(axis_name)  # ep: each owner holds its E/P expert block
 
-        def body(x_s, router):
+        def body(x_s, router, *ws):
             send, send_e, gates, ow, ps, keep = _push_pre(
                 x_s, router, k=k, P=P, e_local=e_local, cap_pair=cap_pair
             )
             recv = jax.lax.all_to_all(send, axis_name, 0, 0, tiled=False)
             recv_e = jax.lax.all_to_all(send_e, axis_name, 0, 0, tiled=False)
             shard = jax.lax.axis_index(axis_name)
-            out = _push_owner(recv, recv_e, shard, e_local=e_local, cap_e=cap_e)
+            out = _push_owner(
+                recv, recv_e, shard, _ffn_dict(ws), e_local=e_local, cap_e=cap_e
+            )
             back = jax.lax.all_to_all(out, axis_name, 0, 0, tiled=False)
             return _push_post(back, gates, ow, ps, keep, t=t, k=k)
 
     elif mode == "ep_pull":
         e_local = E // P
         cap_e = _cap(capacity_factor, T * k / E)
+        w_spec = P_(axis_name)
 
-        def body(x_s, router):
+        def body(x_s, router, *ws):
             gates, experts = _route_shard(x_s, router, k=k)
             ef = experts.reshape(-1)
             x_full = jax.lax.all_gather(x_s, axis_name, tiled=True)  # (T, D)
             eg = jax.lax.all_gather(ef, axis_name, tiled=True)  # (T*k,)
             shard = jax.lax.axis_index(axis_name)
-            contrib = _pull_owner(x_full, eg, shard, k=k, e_local=e_local, cap_e=cap_e)
+            contrib = _pull_owner(
+                x_full, eg, shard, _ffn_dict(ws), k=k, e_local=e_local, cap_e=cap_e
+            )
             # return trip: each slot has exactly one nonzero contributor, so
             # the float psum is exact and order-free
             vals_all = jax.lax.psum(contrib, axis_name)
@@ -282,9 +371,11 @@ def _dispatch_mesh(
         raise ValueError(f"unknown dispatch mode {mode!r}")
 
     f = shard_map(
-        body, mesh, in_specs=(P_(axis_name), P_()), out_specs=P_(axis_name)
+        body, mesh,
+        in_specs=(P_(axis_name), P_()) + (w_spec,) * len(ffn_args),
+        out_specs=P_(axis_name),
     )
-    return f(x, router)
+    return f(x, router, *ffn_args)
 
 
 # -- kernels: the registry's proof (no Substrate subclass edited) --------------
@@ -292,21 +383,21 @@ def _dispatch_mesh(
 
 @kernel("moe_dispatch", "local")
 def _moe_dispatch_local(
-    sub: Substrate, x, router, *, strategy, nodelets, experts_per_token,
+    sub: Substrate, x, router, *ws, strategy, nodelets, experts_per_token,
     capacity_factor,
 ):
     mode = dispatch_from_strategy(
         strategy, num_experts=int(router.shape[-1]), data_axis=nodelets
     )
     return _dispatch_local(
-        x, router, mode=mode, nodelets=nodelets,
+        x, router, *ws, mode=mode, nodelets=nodelets,
         experts_per_token=experts_per_token, capacity_factor=capacity_factor,
     )
 
 
 @kernel("moe_dispatch", "mesh")
 def _moe_dispatch_mesh(
-    sub, x, router, *, strategy, nodelets, experts_per_token, capacity_factor
+    sub, x, router, *ws, strategy, nodelets, experts_per_token, capacity_factor
 ):
     mode = dispatch_from_strategy(
         strategy, num_experts=int(router.shape[-1]), data_axis=nodelets
@@ -321,7 +412,7 @@ def _moe_dispatch_mesh(
             f"(inputs.nodelets), got {axis_size}"
         )
     return _dispatch_mesh(
-        x, router, mode=mode, nodelets=nodelets,
+        x, router, *ws, mode=mode, nodelets=nodelets,
         experts_per_token=experts_per_token, capacity_factor=capacity_factor,
         mesh=mesh, axis_name=sub.axis_name,
     )
@@ -335,7 +426,8 @@ def moe_dispatch_reference(
     the service's ``moe_dispatch`` responses must be bit-identical to."""
     strategy = strategy if strategy is not None else MigratoryStrategy()
     return _dispatch_local(
-        inputs.x, inputs.router, mode=derive_mode(inputs, strategy),
+        inputs.x, inputs.router, *inputs.ffn_args,
+        mode=derive_mode(inputs, strategy),
         nodelets=inputs.nodelets, experts_per_token=inputs.experts_per_token,
         capacity_factor=inputs.capacity_factor,
     )
@@ -543,8 +635,11 @@ class MoEDispatchOp:
                 f"moe_dispatch needs T % nodelets == 0, got T={T}, "
                 f"nodelets={inputs.nodelets}"
             )
+        inputs.validate_experts()
         kern = substrate.kernel(self.name)
-        args = (inputs.x, inputs.router)
+        # expert weights are traced args: plan_key covers their shapes and
+        # the executor threads them straight into the kernel
+        args = (inputs.x, inputs.router) + inputs.ffn_args
         statics = (
             inputs.nodelets, inputs.experts_per_token, inputs.capacity_factor,
         )
@@ -554,8 +649,8 @@ class MoEDispatchOp:
             strategy=strategy,
             substrate=substrate.name,
             inputs=inputs,
-            executor=lambda x, r: kern(
-                x, r, strategy=strategy, nodelets=nodelets,
+            executor=lambda x, r, *ws: kern(
+                x, r, *ws, strategy=strategy, nodelets=nodelets,
                 experts_per_token=k, capacity_factor=cf,
             ),
             args=args,
@@ -573,11 +668,14 @@ class MoEDispatchOp:
 
     def bytes_moved(self, plan: ExecutionPlan) -> int:
         """Useful bytes of one dispatch: tokens read + combined output
-        written + router weights read."""
+        written + router weights read + expert weights read (when present)."""
         i = plan.inputs
         T, D = i.x.shape
         itemsize = jnp.dtype(i.x.dtype).itemsize
-        return 2 * T * D * itemsize + i.router.size * jnp.dtype(i.router.dtype).itemsize
+        total = 2 * T * D * itemsize + i.router.size * jnp.dtype(i.router.dtype).itemsize
+        for w in i.ffn_args:
+            total += w.size * jnp.dtype(w.dtype).itemsize
+        return total
 
     def metrics(self, plan: ExecutionPlan, result: Any, seconds: float) -> dict[str, Any]:
         i = plan.inputs
@@ -589,6 +687,7 @@ class MoEDispatchOp:
             "dispatch_mode": mode,
             "experts": i.num_experts,
             "nodelets": i.nodelets,
+            "expert_ffn": i.has_experts,
             "routed_slots": routed,
             "dropped_slots": routed - kept,
             "drop_fraction": (routed - kept) / max(routed, 1),

@@ -339,3 +339,10 @@ class _OpsView(Mapping):
 
 
 OPS = _OpsView()
+
+
+# op modules that self-register their OpSpecs/kernels: importing them here
+# guarantees registration wherever the engine is entered (runner imports
+# this module before resolving any op name)
+from . import moe_op as _moe_op  # noqa: E402,F401
+from . import decode_op as _decode_op  # noqa: E402,F401

@@ -1,0 +1,89 @@
+"""The unified request shape of the engine's public surface (DESIGN.md §1g).
+
+Across PRs 1–5 the engine grew three inconsistent call shapes —
+``engine.run(op, inputs, strategy, substrate)`` kwargs,
+``EngineService.submit(op, inputs, ...)`` kwargs, and the legacy
+``Substrate.spmv(...)``-style per-op methods. :class:`Request` collapses
+them into one entry value:
+
+    req = Request("spmv", SpMVInputs(a, x), strategy="auto", substrate="mesh")
+    y, report = engine.run(req)             # one-shot
+    fut = service.submit(req)               # batch ticket or async future
+
+``engine.run`` and ``EngineService.submit`` accept a Request identically in
+batch, async, and pooled modes. The old positional/kwargs forms still work
+as thin wrappers that emit :class:`DeprecationWarning`; the per-op substrate
+methods are gone (resolve kernels via ``substrate.kernel(op_name)``).
+
+Serving-only fields ride along:
+
+- ``qos``: per-request scheduling weight. Overrides the service's per-op
+  ``qos`` table for this request's plan-key group (higher runs first).
+- ``timeout``: per-request deadline in seconds from admission. A request
+  still queued when its deadline passes is shed instead of run — its future
+  raises :class:`~repro.engine.service.ServiceTimeout` and the shed is
+  counted in ``ServiceStats.timed_out``. ``engine.run`` ignores ``timeout``
+  (the caller is already blocking on the one request).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+from ..core.strategies import MigratoryStrategy
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One unit of engine work: what to run, on what, under which strategy,
+    plus the serving QoS/deadline envelope."""
+
+    op: Any
+    inputs: Any
+    strategy: "MigratoryStrategy | str | None" = None
+    substrate: Any = None  # Substrate | str | None (None = callee default)
+    qos: "float | None" = None
+    timeout: "float | None" = None
+
+    def __post_init__(self):
+        if self.qos is not None and float(self.qos) <= 0:
+            raise ValueError(f"qos must be > 0, got {self.qos!r}")
+        if self.timeout is not None and float(self.timeout) < 0:
+            raise ValueError(f"timeout must be >= 0, got {self.timeout!r}")
+
+
+def warn_kwargs_form(entry: str) -> None:
+    """One deprecation warning for a legacy kwargs call, attributed to the
+    user's call site (4 frames up: caller -> entry -> coerce -> here)."""
+    warnings.warn(
+        f"{entry}(op, inputs, ...) kwargs form is deprecated; pass a "
+        f"repro.engine.Request instead: {entry}(Request(op, inputs, ...))",
+        DeprecationWarning,
+        stacklevel=4,
+    )
+
+
+def coerce_request(
+    op: Any,
+    inputs: Any = None,
+    strategy: "MigratoryStrategy | str | None" = None,
+    substrate: Any = None,
+    *,
+    entry: str,
+) -> Request:
+    """Normalize an entry-point call to a :class:`Request`.
+
+    A Request passed as ``op`` is returned as-is (mixing it with kwargs is
+    an error — the Request is the whole call); anything else is the legacy
+    kwargs form, wrapped with a :class:`DeprecationWarning`.
+    """
+    if isinstance(op, Request):
+        if inputs is not None or strategy is not None or substrate is not None:
+            raise TypeError(
+                f"{entry}(Request, ...) takes no extra inputs/strategy/"
+                "substrate arguments — put them on the Request"
+            )
+        return op
+    warn_kwargs_form(entry)
+    return Request(op=op, inputs=inputs, strategy=strategy, substrate=substrate)

@@ -25,6 +25,7 @@ from . import ops as _ops  # noqa: F401  (imports register the built-in OpSpecs)
 from .api import ExecutionPlan, MigratoryOp, RunReport
 from .cache import CompiledPlan, PlanCache, default_cache
 from .registry import default_registry
+from .request import Request, coerce_request
 from .substrate import Substrate, get_substrate
 
 
@@ -188,20 +189,46 @@ def run_plan(
     return result, report
 
 
-def run(
-    op: "MigratoryOp | str",
-    inputs: Any,
-    strategy: "MigratoryStrategy | str | None" = None,
-    substrate: "Substrate | str" = "local",
+def run_request(
+    request: Request,
     *,
     iters: int = 3,
     warmup: int = 1,
     cache: PlanCache | None = None,
 ) -> tuple[Any, RunReport]:
-    """Execute ``op`` on ``substrate`` under ``strategy``; return
-    ``(result, RunReport)``.
+    """Execute one :class:`~repro.engine.request.Request`; return
+    ``(result, RunReport)``. The non-deprecated core behind :func:`run` —
+    ``request.qos``/``request.timeout`` are serving-plane fields and are
+    ignored here (the caller is already blocking on this one request)."""
+    op = resolve_op(request.op)
+    sub = get_substrate(
+        request.substrate if request.substrate is not None else "local"
+    )
+    plan = op.plan(
+        request.inputs, resolve_strategy(op, request.inputs, request.strategy, sub), sub
+    )
+    return run_plan(plan, op, iters=iters, warmup=warmup, cache=cache)
 
-    ``op``: a MigratoryOp instance or name ("spmv" | "bfs" | "gsana").
+
+def run(
+    op: "Request | MigratoryOp | str",
+    inputs: Any = None,
+    strategy: "MigratoryStrategy | str | None" = None,
+    substrate: "Substrate | str | None" = None,
+    *,
+    iters: int = 3,
+    warmup: int = 1,
+    cache: PlanCache | None = None,
+) -> tuple[Any, RunReport]:
+    """Execute one request; return ``(result, RunReport)``.
+
+    The entry shape is a :class:`~repro.engine.request.Request`:
+
+        y, report = run(Request("spmv", SpMVInputs(a, x), "auto", "mesh"))
+
+    ``op``: the Request — or, deprecated, a MigratoryOp instance/name with
+    the fields spread as arguments (emits ``DeprecationWarning``; behavior
+    is identical via :func:`run_request`).
     ``strategy``: a MigratoryStrategy, ``None`` (paper defaults), or
     ``"auto"`` (traffic-model autotuner, engine/autotune.py).
     ``substrate``: a Substrate instance or name ("local" | "mesh" | "pallas").
@@ -210,7 +237,5 @@ def run(
     call, compile included on a cache miss.
     ``cache``: plan cache override (default: the process-wide cache).
     """
-    op = resolve_op(op)
-    sub = get_substrate(substrate)
-    plan = op.plan(inputs, resolve_strategy(op, inputs, strategy, sub), sub)
-    return run_plan(plan, op, iters=iters, warmup=warmup, cache=cache)
+    request = coerce_request(op, inputs, strategy, substrate, entry="run")
+    return run_request(request, iters=iters, warmup=warmup, cache=cache)

@@ -6,7 +6,7 @@ and nothing runs until ``drain()`` executes everything, grouped by plan key
 so each group compiles at most once.
 
     svc = EngineService()
-    t = svc.submit("spmv", inputs)               # -> int ticket
+    t = svc.submit(Request("spmv", inputs))      # -> int ticket
     responses = svc.drain()                      # one compile per plan key
 
 **Worker-loop mode** (the serving path): ``start()`` spawns an *execution
@@ -29,7 +29,7 @@ under execution instead of adding to it.
 
     svc = EngineService(workers=4, max_queue_depth=256, qos={"bfs": 2.0})
     svc.start()
-    fut = svc.submit("spmv", inputs)             # -> ServiceFuture, non-blocking
+    fut = svc.submit(Request("spmv", inputs))    # -> ServiceFuture, non-blocking
     resp = fut.result(timeout=60)                # ServiceResponse
     svc.stop()                                   # drains by default
     print(svc.stats().worker_occupancy)          # per-worker utilization
@@ -66,6 +66,7 @@ import numpy as np
 from ..core.strategies import MigratoryStrategy
 from .api import RunReport
 from .cache import PlanCache
+from .request import Request, coerce_request
 from .runner import build_plan, resolve_op, single_call
 from .substrate import Substrate, get_substrate
 
@@ -99,6 +100,12 @@ class ServiceStopped(RuntimeError):
     futures whose queued request was cancelled by stop(drain=False)."""
 
 
+class ServiceTimeout(RuntimeError):
+    """A request's per-request deadline (``Request.timeout``) passed while
+    it was still queued: the service shed it instead of running it (counted
+    in ``ServiceStats.timed_out``)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class ServiceRequest:
     ticket: int
@@ -107,6 +114,8 @@ class ServiceRequest:
     strategy: "MigratoryStrategy | str | None"
     substrate: "Substrate | str"
     t_admit: float = 0.0  # perf_counter at admission (queue-wait percentiles)
+    qos: "float | None" = None  # per-request weight override (Request.qos)
+    timeout: "float | None" = None  # deadline seconds from admission
 
 
 @dataclasses.dataclass
@@ -306,9 +315,17 @@ class ServiceStats:
       the fraction of compile time hidden under execution (0 in batch mode).
     - ``queue_wait_p50/p95/p99`` — per-request admission -> run-start wait;
       ``service_p50/p95/p99`` — per-request run duration (ROADMAP "latency
-      accounting"). Estimated over the most recent ``_LATENCY_WINDOW``
-      executed requests; dedup-served requests wait for neither and are
-      excluded.
+      accounting"); ``total_p50/p95/p99`` — admission -> completion, the
+      end-to-end latency a client observes (queue wait + service time).
+      Estimated over the most recent ``_LATENCY_WINDOW`` executed requests;
+      dedup-served requests wait for neither and are excluded.
+    - SLO accounting (``slo_target_seconds`` on the constructor): every
+      executed request's *total* latency is checked against the declared
+      target — ``slo_checked``/``slo_violations`` count them cumulatively
+      and ``slo_attainment`` is the within-target fraction. ``timed_out``
+      counts requests shed at their per-request ``Request.timeout``
+      deadline instead of running (their futures raise
+      :class:`ServiceTimeout`; they are neither errors nor SLO samples).
     - ``dedup_hits`` — requests answered from the value-keyed response cache
       without executing (``dedup=True`` services only). ``dedup_coalesced``
       is the in-flight subset: duplicates that attached to a *pending*
@@ -340,12 +357,19 @@ class ServiceStats:
     dedup_coalesced: int = 0  # ... of which attached to an in-flight primary
     workers: int = 1  # executor-pool width (1 = the pre-pool pipeline)
     steals: int = 0  # groups (or group tails) migrated to an idle worker
+    timed_out: int = 0  # requests shed at their per-request deadline
     queue_wait_p50: float = 0.0
     queue_wait_p95: float = 0.0
     queue_wait_p99: float = 0.0
     service_p50: float = 0.0
     service_p95: float = 0.0
     service_p99: float = 0.0
+    total_p50: float = 0.0  # admission -> completion (queue wait + service)
+    total_p95: float = 0.0
+    total_p99: float = 0.0
+    slo_target_seconds: "float | None" = None
+    slo_checked: int = 0  # executed requests measured against the target
+    slo_violations: int = 0  # ... of which exceeded it
     worker_busy_seconds: "list[float]" = dataclasses.field(default_factory=list)
     worker_requests: "list[int]" = dataclasses.field(default_factory=list)
     worker_steals: "list[int]" = dataclasses.field(default_factory=list)
@@ -359,6 +383,14 @@ class ServiceStats:
     def amortization(self) -> float:
         """Requests served per compile — the batching win."""
         return self.requests / self.compiles if self.compiles else float(self.requests)
+
+    @property
+    def slo_attainment(self) -> "float | None":
+        """Fraction of SLO-checked requests whose total latency met the
+        declared target; None when no target was declared (or nothing ran)."""
+        if self.slo_target_seconds is None or self.slo_checked == 0:
+            return None
+        return 1.0 - self.slo_violations / self.slo_checked
 
     def to_dict(self) -> dict[str, Any]:
         return {
@@ -381,12 +413,20 @@ class ServiceStats:
             "dedup_coalesced": self.dedup_coalesced,
             "workers": self.workers,
             "steals": self.steals,
+            "timed_out": self.timed_out,
             "queue_wait_p50": self.queue_wait_p50,
             "queue_wait_p95": self.queue_wait_p95,
             "queue_wait_p99": self.queue_wait_p99,
             "service_p50": self.service_p50,
             "service_p95": self.service_p95,
             "service_p99": self.service_p99,
+            "total_p50": self.total_p50,
+            "total_p95": self.total_p95,
+            "total_p99": self.total_p99,
+            "slo_target_seconds": self.slo_target_seconds,
+            "slo_checked": self.slo_checked,
+            "slo_violations": self.slo_violations,
+            "slo_attainment": self.slo_attainment,
             "worker_busy_seconds": self.worker_busy_seconds,
             "worker_requests": self.worker_requests,
             "worker_steals": self.worker_steals,
@@ -436,6 +476,7 @@ class EngineService:
         pipeline_depth: int = 2,
         dedup: bool = False,
         dedup_max_entries: int = 256,
+        slo_target_seconds: "float | None" = None,
     ):
         if admission not in ("block", "reject"):
             raise ValueError(
@@ -459,6 +500,11 @@ class EngineService:
         self.pipeline_depth = max(1, pipeline_depth)
         self.dedup = dedup
         self.dedup_max_entries = max(1, dedup_max_entries)
+        if slo_target_seconds is not None and float(slo_target_seconds) <= 0:
+            raise ValueError(
+                f"slo_target_seconds must be > 0, got {slo_target_seconds!r}"
+            )
+        self.slo_target_seconds = slo_target_seconds
         # value-keyed response store: content hash -> served ServiceResponse
         self._dedup_store: "collections.OrderedDict[str, ServiceResponse]" = (
             collections.OrderedDict()
@@ -468,6 +514,7 @@ class EngineService:
         # per-request latency samples (bounded; see ServiceStats docstring)
         self._queue_waits: deque = deque(maxlen=_LATENCY_WINDOW)
         self._service_times: deque = deque(maxlen=_LATENCY_WINDOW)
+        self._total_latencies: deque = deque(maxlen=_LATENCY_WINDOW)
         self._pending: list[ServiceRequest] = []
         self._next_ticket = 0
         self._stats = ServiceStats()
@@ -522,6 +569,11 @@ class EngineService:
     def qos_weight(self, op_name: str) -> float:
         return float(self.qos.get(op_name, 1.0))
 
+    def _effective_qos(self, item: _WorkItem) -> float:
+        """Per-request ``Request.qos`` override, else the per-op table."""
+        q = item.request.qos
+        return float(q) if q is not None else self.qos_weight(item.op.name)
+
     def _resolve_workers(self) -> int:
         if isinstance(self.workers, int):
             return max(1, self.workers)
@@ -552,21 +604,33 @@ class EngineService:
 
     def submit(
         self,
-        op: Any,
-        inputs: Any,
+        op: "Request | Any",
+        inputs: Any = None,
         strategy: "MigratoryStrategy | str | None" = None,
         substrate: "Substrate | str | None" = None,
     ) -> "int | ServiceFuture":
-        """Enqueue one request. Batch mode returns its int ticket (serve via
-        ``drain()``); worker-loop mode returns a :class:`ServiceFuture`.
-        Full queues block or raise per the admission policy. With
-        ``dedup=True``, a worker-mode request whose content hash matches an
-        already-*served* response resolves immediately, and one matching a
-        *pending* identical request coalesces onto its future — neither
-        enters the queue (batch mode dedups inside ``drain()``)."""
+        """Enqueue one :class:`~repro.engine.request.Request`. Batch mode
+        returns its int ticket (serve via ``drain()``); worker-loop mode
+        returns a :class:`ServiceFuture`. The deprecated kwargs form
+        (``submit(op, inputs, ...)``) still works with a
+        ``DeprecationWarning``. ``Request.qos`` overrides the service's
+        per-op weight for this request's group; ``Request.timeout`` is a
+        deadline from admission — still-queued past it, the request is shed
+        (:class:`ServiceTimeout`). Full queues block or raise per the
+        admission policy. With ``dedup=True``, a worker-mode request whose
+        content hash matches an already-*served* response resolves
+        immediately, and one matching a *pending* identical request
+        coalesces onto its future — neither enters the queue (batch mode
+        dedups inside ``drain()``)."""
+        request = coerce_request(op, inputs, strategy, substrate, entry="submit")
+        op, inputs, strategy = request.op, request.inputs, request.strategy
         if strategy is None and self.autotune:
             strategy = "auto"
-        sub = substrate if substrate is not None else self.default_substrate
+        sub = (
+            request.substrate
+            if request.substrate is not None
+            else self.default_substrate
+        )
         dkey = None
         # batch mode hashes inside drain() instead — a submit-time hash could
         # never serve a hit there (responses only exist once drain runs)
@@ -589,10 +653,12 @@ class EngineService:
             req = ServiceRequest(
                 ticket=ticket,
                 op=op,
-                inputs=inputs,
+                inputs=request.inputs,
                 strategy=strategy,
                 substrate=sub,
                 t_admit=time.perf_counter(),
+                qos=request.qos,
+                timeout=request.timeout,
             )
             if self._running:
                 future = ServiceFuture(ticket)
@@ -887,7 +953,7 @@ class EngineService:
                     item.plan = plan
         return _Group(
             key=items[0].plan.key,
-            qos=self.qos_weight(items[0].op.name),
+            qos=self._effective_qos(items[0]),
             first_ticket=items[0].request.ticket,
             slot=slot,
             stealable=not affinity,
@@ -1035,6 +1101,7 @@ class EngineService:
                 id(req.inputs),
                 strat_id,
                 sub if isinstance(sub, str) else id(sub),
+                req.qos,  # a per-request weight makes its own group (ordering)
             )
             if gkey not in groups:
                 order.append(gkey)
@@ -1060,7 +1127,7 @@ class EngineService:
             out.append(members)
         return sorted(
             out,
-            key=lambda g: (-self.qos_weight(g[0].op.name), g[0].request.ticket),
+            key=lambda g: (-self._effective_qos(g[0]), g[0].request.ticket),
         )
 
     def _compile_item(self, item: _WorkItem, slot: int) -> None:
@@ -1108,6 +1175,8 @@ class EngineService:
         t0 = time.perf_counter()
         if item.dedup_key is not None and self._try_serve_dedup(item):
             return
+        if self._shed_if_expired(item, t0):
+            return
         try:
             result, report = single_call(
                 item.plan, item.op, cache=self.cache, slot=slot
@@ -1130,6 +1199,12 @@ class EngineService:
             self._resolve_waiters_locked(item, response)
             if item.request.t_admit:
                 self._queue_waits.append(max(0.0, t0 - item.request.t_admit))
+                total = max(0.0, t1 - item.request.t_admit)
+                self._total_latencies.append(total)
+                if self.slo_target_seconds is not None:
+                    self._stats.slo_checked += 1
+                    if total > self.slo_target_seconds:
+                        self._stats.slo_violations += 1
             self._service_times.append(t1 - t0)
             self._account_locked(report)
             self._finish_locked()
@@ -1166,6 +1241,39 @@ class EngineService:
             self._resolve_waiters_locked(item, response)
             self._finish_locked()
             return True
+
+    def _shed_if_expired(self, item: _WorkItem, now: float) -> bool:
+        """Deadline shedding: a request whose ``Request.timeout`` elapsed
+        while it sat in the queue is dropped instead of run — its future
+        (and any coalesced waiters') raises :class:`ServiceTimeout`, counted
+        in ``ServiceStats.timed_out`` (not ``errors``, not an SLO sample).
+        Returns True when the item was shed."""
+        timeout = item.request.timeout
+        if timeout is None or not item.request.t_admit:
+            return False
+        waited = now - item.request.t_admit
+        if waited <= timeout:
+            return False
+        exc = ServiceTimeout(
+            f"request {item.request.ticket} shed: queued {waited:.3f}s past "
+            f"its {timeout:.3f}s deadline"
+        )
+        item.future._reject(exc)
+        with self._lock:
+            self._live.pop(item.request.ticket, None)
+            if (
+                item.dedup_key is not None
+                and self._dedup_pending.get(item.dedup_key) is item
+            ):
+                del self._dedup_pending[item.dedup_key]
+            for ticket, fut in item.waiters:
+                fut._reject(exc)
+                self._live.pop(ticket, None)
+                self._stats.timed_out += 1
+            item.waiters.clear()
+            self._stats.timed_out += 1
+            self._finish_locked()
+        return True
 
     def _finish_error(self, item: _WorkItem, exc: BaseException) -> None:
         item.future._reject(exc)
@@ -1305,6 +1413,7 @@ class EngineService:
             )
             waits = list(self._queue_waits)  # copy only; sort off-lock —
             services = list(self._service_times)  # submit()/pipeline contend here
+            totals = list(self._total_latencies)
             # report every slot ever used, not just the current width: a
             # restart with a narrower pool must not drop accumulated
             # per-worker counters (sum(worker_steals) == steals always)
@@ -1331,6 +1440,7 @@ class EngineService:
                 worker_occupancy=[
                     b / window if window > 0 else 0.0 for b in busy
                 ],
+                slo_target_seconds=self.slo_target_seconds,
             )
         waits.sort()
         services.sort()
@@ -1340,6 +1450,10 @@ class EngineService:
         snapshot.service_p50 = _percentile(services, 0.50)
         snapshot.service_p95 = _percentile(services, 0.95)
         snapshot.service_p99 = _percentile(services, 0.99)
+        totals.sort()
+        snapshot.total_p50 = _percentile(totals, 0.50)
+        snapshot.total_p95 = _percentile(totals, 0.95)
+        snapshot.total_p99 = _percentile(totals, 0.99)
         return snapshot
 
     def throughput_report(self) -> dict[str, Any]:

@@ -18,8 +18,9 @@ raises :class:`~repro.engine.api.OpNotSupportedError`. New backends
 register with :func:`register_substrate` and gain every op whose kernels
 they register; new ops (e.g. ``moe_dispatch``, engine/moe_op.py) register
 kernels against existing kinds without touching the classes here. The old
-``substrate.spmv(...)``-style methods survive as legacy shims delegating to
-the registry so pre-registry call sites migrate incrementally.
+``substrate.spmv(...)``-style per-op methods are gone (removed with the
+:class:`~repro.engine.request.Request` redesign, DESIGN.md §1g) — resolve
+kernels with ``substrate.kernel(op_name)``.
 """
 from __future__ import annotations
 
@@ -110,17 +111,6 @@ class Substrate:
         """Hashable identity for the compiled-plan cache: two substrate
         instances with equal fingerprints are interchangeable executors."""
         return (self.name,)
-
-    # -- legacy shims (pre-registry API; delegate to the kernel table) ---------
-
-    def spmv(self, a, x, strategy: MigratoryStrategy) -> jax.Array:
-        return self.kernel("spmv")(a, x, strategy=strategy)
-
-    def bfs(self, g, root, strategy: MigratoryStrategy, max_rounds=None) -> jax.Array:
-        return self.kernel("bfs")(g, root, strategy=strategy, max_rounds=max_rounds)
-
-    def gsana(self, vs1, vs2, b1, b2, k: int, strategy: MigratoryStrategy):
-        return self.kernel("gsana")(vs1, vs2, b1, b2, k, strategy=strategy)
 
 
 class LocalSubstrate(Substrate):

@@ -7,7 +7,8 @@ LM decode path: prefill a batch of prompts, then greedy-decode.
 
 Irregular-op path: drive an ``EngineService`` with a mixed SpMV/BFS request
 stream (autotuned strategies, shared compiled-plan cache) and print the
-aggregate throughput report — the engine's production-serving smoke.
+aggregate throughput report — the engine's production-serving smoke. All
+submissions go through the unified :class:`repro.engine.Request` shape.
 ``--ops`` uses the batched drain; ``--ops-async`` starts the worker loop and
 feeds it from a synthetic *open-loop* traffic generator (requests arrive at
 ``--ops-rate`` req/s with jitter, independent of service progress — the
@@ -18,6 +19,13 @@ compile/execute pipeline.
     PYTHONPATH=src python -m repro.launch.serve --ops --ops-requests 32
     PYTHONPATH=src python -m repro.launch.serve --ops-async --ops-rate 100 \
         --ops-requests 64 --ops-admission reject
+
+MoE decode serving path (DESIGN.md §1g): continuous-batched decode of the
+``serve-moe`` config through the worker-loop service with an SLO target,
+cross-checked token-for-token against the single-process oracle.
+
+    PYTHONPATH=src python -m repro.launch.serve --decode-serve \
+        --serve-dispatch ep_pull --serve-slo-ms 2000
 """
 from __future__ import annotations
 
@@ -63,12 +71,13 @@ def ops_demo(n_requests: int, shapes: tuple[int, ...] = (16, 24), seed: int = 0)
     Requests rotate over a few problem signatures, so each drain compiles
     once per signature and serves the rest from the plan cache.
     """
-    from ..engine import EngineService
+    from ..engine import EngineService, Request
 
     pick = _ops_workload(shapes, seed)
     svc = EngineService(autotune=True)
     for i in range(n_requests):
-        svc.submit(*pick(i))
+        op, inputs = pick(i)
+        svc.submit(Request(op, inputs))
     responses = svc.drain()
     report = svc.throughput_report()
     stats = svc.stats()
@@ -96,7 +105,7 @@ def ops_demo_async(
     2x QoS weight, so mixed bursts schedule BFS groups first."""
     import numpy as np
 
-    from ..engine import AdmissionError, EngineService
+    from ..engine import AdmissionError, EngineService, Request
 
     pick = _ops_workload(shapes, seed)
     rng = np.random.default_rng(seed)
@@ -114,7 +123,8 @@ def ops_demo_async(
     try:
         for i in range(n_requests):
             try:
-                futures.append(svc.submit(*pick(i)))
+                op, inputs = pick(i)
+                futures.append(svc.submit(Request(op, inputs)))
             except AdmissionError:
                 pass  # open loop drops on the floor; counted in stats.rejected
             if interval:
@@ -141,6 +151,75 @@ def ops_demo_async(
     return report
 
 
+def decode_serve_demo(
+    n_seqs: int = 8,
+    capacity: int = 8,
+    max_new: int = 8,
+    workers: "int | str" = 2,
+    slo_ms: float = 5000.0,
+    nodelets: int = 4,
+    dispatch: str = "ep_pull",
+    seed: int = 0,
+) -> dict:
+    """Continuous-batched MoE decode serving (DESIGN.md §1g): the ``serve-moe``
+    config's expert FFNs run behind ``moe_dispatch`` transport, every decode
+    step travels as one :class:`Request` through the worker-loop service with
+    an SLO target, and the served tokens are cross-checked bit-for-bit against
+    the single-process oracle."""
+    import numpy as np
+
+    from ..configs import get_config
+    from ..core import Comm, MigratoryStrategy
+    from ..engine import DecodeServer, EngineService
+    from ..models.transformer import moe_decode_params
+
+    cfg = get_config("serve-moe")
+    params = moe_decode_params(cfg, jax.random.PRNGKey(seed))
+    strategy = {
+        "ep_pull": MigratoryStrategy(comm=Comm.MIGRATE),
+        "ep_push": MigratoryStrategy(comm=Comm.REMOTE_WRITE),
+    }.get(dispatch)
+    nod = 1 if dispatch == "tp" else nodelets
+    rng = np.random.default_rng(seed)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, size=int(rng.integers(2, 6))).tolist()
+        for _ in range(n_seqs)
+    ]
+
+    def drive(server):
+        # staggered joins: half the sequences arrive while others are decoding
+        for i, prompt in enumerate(prompts):
+            server.add(prompt, max_new_tokens=max_new)
+            if i % 2:
+                server.step()
+        server.run_until_drained()
+        return dict(server.results)
+
+    svc = EngineService(workers=workers, slo_target_seconds=slo_ms / 1e3)
+    svc.start()
+    try:
+        served = drive(DecodeServer(
+            cfg, params, capacity=capacity, max_len=32, nodelets=nod,
+            strategy=strategy, service=svc,
+        ))
+    finally:
+        svc.stop()
+    stats = svc.stats()
+    oracle = drive(DecodeServer(
+        cfg, params, capacity=capacity, max_len=32, nodelets=nod,
+        strategy=strategy, oracle=True,
+    ))
+    parity = served == oracle
+    print(f"served {len(served)} sequences (dispatch={dispatch}, nodelets={nod}), "
+          f"oracle parity: {parity}")
+    print(f"latency p50/p99: {stats.total_p50*1e3:.1f}/{stats.total_p99*1e3:.1f} ms; "
+          f"SLO {slo_ms:.0f} ms -> {stats.slo_violations}/{stats.slo_checked} violations "
+          f"(attainment {stats.slo_attainment})")
+    report = {**svc.throughput_report(), "oracle_parity": parity}
+    print(json.dumps(report, default=str))
+    return report
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -160,8 +239,22 @@ def main(argv=None) -> None:
                     help="admission policy when the async queue is full")
     ap.add_argument("--ops-workers", default="1",
                     help="executor-pool width for --ops-async (int or 'auto')")
+    ap.add_argument("--decode-serve", action="store_true",
+                    help="continuous-batched MoE decode serving with SLO stats")
+    ap.add_argument("--serve-seqs", type=int, default=8)
+    ap.add_argument("--serve-dispatch", choices=("ep_pull", "ep_push", "tp"),
+                    default="ep_pull")
+    ap.add_argument("--serve-nodelets", type=int, default=4)
+    ap.add_argument("--serve-slo-ms", type=float, default=5000.0,
+                    help="per-request SLO target in ms for --decode-serve")
     args = ap.parse_args(argv)
 
+    if args.decode_serve:
+        workers = args.ops_workers if args.ops_workers == "auto" else int(args.ops_workers)
+        decode_serve_demo(args.serve_seqs, dispatch=args.serve_dispatch,
+                          nodelets=args.serve_nodelets, slo_ms=args.serve_slo_ms,
+                          workers=max(2, workers) if workers != "auto" else workers)
+        return
     if args.ops_async:
         workers = args.ops_workers if args.ops_workers == "auto" else int(args.ops_workers)
         ops_demo_async(args.ops_requests, rate=args.ops_rate,

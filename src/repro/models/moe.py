@@ -93,6 +93,17 @@ def _expert_ffn(cfg: ModelConfig, p: dict, xs: jax.Array) -> jax.Array:
     return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
 
 
+def expert_ffn(params: dict, xs: jax.Array) -> jax.Array:
+    """Public expert-stack entry: each expert's SwiGLU over its capacity
+    buffer. ``params`` holds ``w_gate``/``w_up`` (E, D, F) and ``w_down``
+    (E, F, D) — the :func:`moe_params` layout; ``xs`` is (E, C, D). This is
+    the exact math the engine's ``moe_dispatch`` op applies at the owner
+    stage, so engine-served experts and the LM stack share one definition.
+    Zero rows map to zero rows (no biases) — padded capacity slots stay
+    inert through the FFN."""
+    return _expert_ffn(None, params, xs)
+
+
 def _local_dispatch(cfg: ModelConfig, xt, gates, experts, capacity):
     """Scatter local tokens into per-expert buffers (drop past capacity).
 

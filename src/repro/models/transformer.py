@@ -159,6 +159,35 @@ def loss_fn(ctx: Ctx, params: dict, batch: dict) -> jax.Array:
 # -- serving -------------------------------------------------------------------
 
 
+def moe_decode_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    """Flat single-block MoE decode-serving params for the engine's
+    ``moe_decode`` op (engine/decode_op.py): one single-head attention
+    sublayer (head dim = d_model), one MoE sublayer in the
+    :func:`repro.models.moe.moe_params` layout, rmsnorms at ones. Use a
+    float32 config (``serve-moe`` in configs/) when served output must be
+    bit-comparable to the single-process oracle."""
+    d = cfg.d_model
+    dt = _dt(cfg)
+    init = jax.nn.initializers.normal(0.02)
+    ks = jax.random.split(key, 7)
+    moe = moe_params(cfg, ks[0])
+    return {
+        "embed": init(ks[1], (cfg.vocab_size, d), dt),
+        "ln1": jnp.ones((d,), dt),
+        "ln2": jnp.ones((d,), dt),
+        "ln_f": jnp.ones((d,), dt),
+        "wq": init(ks[2], (d, d), dt),
+        "wk": init(ks[3], (d, d), dt),
+        "wv": init(ks[4], (d, d), dt),
+        "wo": init(ks[5], (d, d), dt),
+        "router": moe["router"],
+        "w_gate": moe["w_gate"],
+        "w_up": moe["w_up"],
+        "w_down": moe["w_down"],
+        "lm_head": init(ks[6], (d, cfg.vocab_size), dt),
+    }
+
+
 def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> KVCaches:
     shape = (cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.hd)
     return KVCaches(

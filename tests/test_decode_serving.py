@@ -1,0 +1,283 @@
+"""End-to-end MoE decode serving (ISSUE 8): real expert FFNs behind
+``moe_dispatch`` transport, the ``moe_decode`` op through the engine, and
+``DecodeServer``'s continuous batching — every route bit-identical to the
+single-process oracle across all three dispatch modes and a staggered
+join/leave schedule. Mesh parity for the decode step runs in a subprocess
+with 8 forced host devices (``@pytest.mark.slow``), mirroring the
+``moe_dispatch`` parity test in test_registry.py.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Comm, MigratoryStrategy
+from repro.engine import (
+    DecodeServer,
+    EngineService,
+    MoEDecodeInputs,
+    MoEDispatchInputs,
+    PlanCache,
+    Request,
+    moe_decode_reference,
+    moe_decode_traffic,
+    run,
+)
+from repro.models.config import ModelConfig
+from repro.models.moe import expert_ffn, moe_params
+from repro.models.transformer import moe_decode_params
+
+EP_PULL = MigratoryStrategy(comm=Comm.MIGRATE)
+EP_PUSH = MigratoryStrategy(comm=Comm.REMOTE_WRITE)
+
+# (label, strategy, nodelets): serve-moe has 8 experts, so nodelets=4 gives
+# the two expert-parallel modes and nodelets=1 the tp replication fallback
+MODES = (("ep_pull", EP_PULL, 4), ("ep_push", EP_PUSH, 4), ("tp", None, 1))
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("serve-moe")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return moe_decode_params(cfg, jax.random.PRNGKey(0))
+
+
+# -- expert FFNs ride the dispatch transport -----------------------------------
+
+
+def test_dispatch_applies_expert_ffn_identically_across_modes():
+    """With expert weights attached, all three transports compute the same
+    expert outputs at no-drop capacity — the FFN runs where the tokens land,
+    and where they land never changes what they compute."""
+    mcfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=1,
+        num_kv_heads=1, d_ff=32, vocab_size=64, num_experts=8,
+        experts_per_token=2, moe_d_ff=24, dtype="float32", remat=False,
+    )
+    mp = moe_params(mcfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    common = dict(
+        x=x, router=mp["router"], w_gate=mp["w_gate"], w_up=mp["w_up"],
+        w_down=mp["w_down"], experts_per_token=2, capacity_factor=8.0,
+    )
+    outs = {}
+    for label, st, nod in MODES:
+        inputs = MoEDispatchInputs(nodelets=nod, **common)
+        y, rep = run(
+            Request("moe_dispatch", inputs, st, "local"),
+            iters=1, warmup=0, cache=PlanCache(),
+        )
+        assert rep.metrics["expert_ffn"] is True
+        outs[label] = np.asarray(y)
+        # the FFN actually ran: identity transport would return gated x
+        assert not np.allclose(outs[label], 0.0)
+    np.testing.assert_array_equal(outs["ep_pull"], outs["tp"])
+    np.testing.assert_array_equal(outs["ep_push"], outs["tp"])
+
+
+def test_expert_ffn_wrapper_keeps_zero_rows_zero():
+    """The public wrapper the engine shares with the LM layer: padded
+    capacity slots (zero rows) must stay exactly zero through the SwiGLU."""
+    mcfg_params = moe_params(
+        ModelConfig(
+            name="t2", family="moe", num_layers=1, d_model=8, num_heads=1,
+            num_kv_heads=1, d_ff=16, vocab_size=32, num_experts=4,
+            experts_per_token=2, moe_d_ff=12, dtype="float32", remat=False,
+        ),
+        jax.random.PRNGKey(3),
+    )
+    ffn = {k: mcfg_params[k] for k in ("w_gate", "w_up", "w_down")}
+    xs = jnp.zeros((4, 3, 8), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(expert_ffn(ffn, xs)), 0.0)
+
+
+def test_dispatch_rejects_partial_expert_weights():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32))
+    router = jnp.asarray(rng.standard_normal((8, 4)).astype(np.float32))
+    w = jnp.zeros((4, 8, 12), jnp.float32)
+    inputs = MoEDispatchInputs(x=x, router=router, w_gate=w)  # missing up/down
+    with pytest.raises(ValueError, match="all-or-none"):
+        run(Request("moe_dispatch", inputs), iters=1, warmup=0, cache=PlanCache())
+
+
+# -- moe_decode through the engine ---------------------------------------------
+
+
+def _decode_inputs(cfg, params, batch=8, seq=16, seed=0, nodelets=4):
+    rng = np.random.default_rng(seed)
+    d = cfg.d_model
+    return MoEDecodeInputs(
+        params=params,
+        tokens=jnp.asarray(rng.integers(1, cfg.vocab_size, batch), jnp.int32),
+        k_cache=jnp.zeros((batch, seq, d), jnp.float32),
+        v_cache=jnp.zeros((batch, seq, d), jnp.float32),
+        positions=jnp.zeros((batch,), jnp.int32),
+        nodelets=nodelets,
+        experts_per_token=cfg.experts_per_token,
+        capacity_factor=cfg.capacity_factor,
+    )
+
+
+@pytest.mark.parametrize("label,strategy,nodelets", MODES)
+def test_moe_decode_engine_matches_oracle(cfg, params, label, strategy, nodelets):
+    """The acceptance parity at the op level: one decode step served through
+    the engine is bit-identical to the direct single-process reference."""
+    inputs = _decode_inputs(cfg, params, nodelets=nodelets)
+    out, rep = run(
+        Request("moe_decode", inputs, strategy, "local"),
+        iters=1, warmup=0, cache=PlanCache(),
+    )
+    ref = moe_decode_reference(inputs, strategy)
+    assert rep.metrics["dispatch_mode"] == label
+    for got, want in zip(out, ref):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    traffic = moe_decode_traffic(inputs, strategy)
+    if label == "tp":
+        assert traffic.total_bytes == 0
+    else:
+        assert traffic.collective_bytes > 0
+
+
+def test_moe_decode_rejects_bad_batch_or_params(cfg, params):
+    inputs = _decode_inputs(cfg, params, batch=6, nodelets=4)  # 6 % 4 != 0
+    with pytest.raises(ValueError, match="nodelets"):
+        run(Request("moe_decode", inputs), iters=1, warmup=0, cache=PlanCache())
+    short = {k: v for k, v in params.items() if k != "lm_head"}
+    bad = _decode_inputs(cfg, dict(short, **{}), batch=8, nodelets=4)
+    with pytest.raises(ValueError, match="lm_head"):
+        run(Request("moe_decode", bad), iters=1, warmup=0, cache=PlanCache())
+
+
+# -- DecodeServer continuous batching ------------------------------------------
+
+
+def _drive(server, prompts, schedule):
+    """Feed prompts per the (step_at_add,) schedule — sequences join while
+    others are mid-decode, finish at different steps, and free slots refill
+    from the waiting queue (continuous batching)."""
+    for (prompt, max_new), step_now in zip(prompts, schedule):
+        server.add(prompt, max_new_tokens=max_new)
+        for _ in range(step_now):
+            server.step()
+    server.run_until_drained()
+    return dict(server.results)
+
+
+@pytest.mark.parametrize("label,strategy,nodelets", MODES)
+def test_served_decode_bit_identical_to_oracle(cfg, params, label, strategy, nodelets):
+    """ISSUE 8 acceptance: continuous-batched decode through EngineService
+    (batch AND worker modes) emits exactly the oracle's tokens under a
+    join/leave schedule, for every dispatch mode."""
+    rng = np.random.default_rng(7)
+    prompts = [
+        (rng.integers(1, cfg.vocab_size, size=int(n)).tolist(), int(m))
+        for n, m in zip(rng.integers(2, 6, size=6), (3, 5, 2, 4, 3, 2))
+    ]
+    schedule = (0, 1, 0, 2, 0, 1)  # joins interleaved with decode steps
+    mk = dict(capacity=4, max_len=16, nodelets=nodelets, strategy=strategy)
+
+    oracle = _drive(
+        DecodeServer(cfg, params, oracle=True, **mk), prompts, schedule
+    )
+    assert sorted(oracle) == list(range(len(prompts)))  # ids are add-order
+    assert all(len(oracle[i]) == m for i, (_, m) in enumerate(prompts))
+
+    direct = _drive(DecodeServer(cfg, params, **mk), prompts, schedule)
+    assert direct == oracle
+
+    batch_svc = EngineService(cache=PlanCache())
+    batched = _drive(
+        DecodeServer(cfg, params, service=batch_svc, **mk), prompts, schedule
+    )
+    assert batched == oracle
+
+    worker_svc = EngineService(cache=PlanCache(), slo_target_seconds=600.0)
+    worker_svc.start()
+    try:
+        worked = _drive(
+            DecodeServer(cfg, params, service=worker_svc, **mk), prompts, schedule
+        )
+    finally:
+        worker_svc.stop()
+    assert worked == oracle
+    stats = worker_svc.stats()
+    assert stats.slo_checked > 0 and stats.slo_violations == 0
+    assert stats.total_p99 > 0.0
+
+
+def test_decode_server_admission_and_retirement(cfg, params):
+    """Waiting sequences admit FIFO as slots retire; results appear exactly
+    once per sequence with the declared number of generated tokens."""
+    server = DecodeServer(cfg, params, capacity=2, max_len=16, nodelets=1,
+                          oracle=True)
+    ids = [server.add([5, 6], max_new_tokens=2) for _ in range(4)]
+    assert len(server._waiting) == 2  # capacity 2: last two queue
+    server.run_until_drained()
+    assert sorted(server.results) == sorted(ids)
+    assert all(len(toks) == 2 for toks in server.results.values())
+    with pytest.raises(ValueError):
+        server.add([], max_new_tokens=1)
+    with pytest.raises(ValueError):
+        server.add([1] * 20, max_new_tokens=1)  # prompt + new > max_len
+
+
+# -- local/mesh decode parity (subprocess, 8 forced host devices) --------------
+
+DECODE_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.core import Comm, MigratoryStrategy
+from repro.engine import MoEDecodeInputs, PlanCache, Request, run
+from repro.models.transformer import moe_decode_params
+
+cfg = get_config("serve-moe")
+params = moe_decode_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(1)
+B, S, D = 8, 16, cfg.d_model
+for P in (4, 8):
+    inputs = MoEDecodeInputs(
+        params=params,
+        tokens=jnp.asarray(rng.integers(1, cfg.vocab_size, B), jnp.int32),
+        k_cache=jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32)),
+        v_cache=jnp.asarray(rng.standard_normal((B, S, D)).astype(np.float32)),
+        positions=jnp.asarray(rng.integers(0, S - 1, B), jnp.int32),
+        nodelets=P,
+        experts_per_token=cfg.experts_per_token,
+        capacity_factor=cfg.capacity_factor,
+    )
+    for comm in (Comm.MIGRATE, Comm.REMOTE_WRITE):
+        st = MigratoryStrategy(comm=comm)
+        yl, rl = run(Request("moe_decode", inputs, st, "local"),
+                     iters=1, warmup=0, cache=PlanCache())
+        ym, rm = run(Request("moe_decode", inputs, st, "mesh"),
+                     iters=1, warmup=0, cache=PlanCache())
+        for a, b in zip(yl, ym):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (P, comm)
+        assert rl.metrics["dispatch_mode"] == rm.metrics["dispatch_mode"]
+        assert rl.traffic.total_bytes == rm.traffic.total_bytes
+print("DECODE-PARITY-OK")
+"""
+
+
+@pytest.mark.slow
+def test_decode_local_mesh_parity_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run(
+        [sys.executable, "-c", DECODE_PARITY_SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr}"
+    assert "DECODE-PARITY-OK" in r.stdout

@@ -152,20 +152,22 @@ def test_opspec_cost_model_registered_into_core():
     assert "dispatch_mode" in est.detail
 
 
-# -- legacy shims --------------------------------------------------------------
+# -- legacy shims (removed with the Request redesign) --------------------------
 
 
-def test_legacy_method_shims_delegate_to_registry():
-    """Pre-registry call sites (``substrate.spmv(...)``) still work and are
-    bit-identical to the kernel-resolved path."""
+def test_legacy_method_shims_are_gone():
+    """The pre-registry per-op methods (``substrate.spmv(...)``) were
+    deleted — kernels resolve only through the registry, and a missing
+    registration is a typed capability error."""
+    sub = get_substrate("local")
+    for legacy in ("spmv", "bfs", "gsana"):
+        assert not hasattr(sub, legacy), f"legacy shim {legacy} resurfaced"
+    # the registry path still serves the op
     a = laplacian_2d(8)
     x = jnp.asarray(np.random.default_rng(3).standard_normal(64).astype(np.float32))
     inputs = SpMVInputs(partition_ell(a, 8), x)
-    st = MigratoryStrategy()
-    sub = get_substrate("local")
-    y_shim = sub.spmv(inputs.a, x, st)
-    y_kern = sub.kernel("spmv")(inputs.a, x, strategy=st)
-    np.testing.assert_array_equal(np.asarray(y_shim), np.asarray(y_kern))
+    y_kern = sub.kernel("spmv")(inputs.a, x, strategy=MigratoryStrategy())
+    assert np.asarray(y_kern).size == x.size
     with pytest.raises(OpNotSupportedError):
         get_substrate("pallas").kernel("moe_dispatch")
 

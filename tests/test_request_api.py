@@ -1,0 +1,201 @@
+"""The unified ``Request`` entry shape (ISSUE 8): one dataclass drives both
+``engine.run`` and ``EngineService.submit`` (batch and worker modes alike),
+the legacy kwargs spellings survive as thin deprecated wrappers that warn
+and produce identical results, per-request ``qos`` overrides the service's
+per-op weight table, and per-request ``timeout`` sheds expired work with a
+typed ``ServiceTimeout`` counted in the stats.
+"""
+import time
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import MigratoryStrategy, partition_ell
+from repro.engine import (
+    EngineService,
+    PlanCache,
+    Request,
+    ServiceTimeout,
+    SpMVInputs,
+    run,
+)
+from repro.sparse import laplacian_2d
+
+
+@pytest.fixture(scope="module")
+def spmv_inputs():
+    a = laplacian_2d(12)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(144).astype(np.float32))
+    return SpMVInputs(partition_ell(a, 8), x)
+
+
+# -- Request construction and validation ---------------------------------------
+
+
+def test_request_validates_qos_and_timeout(spmv_inputs):
+    Request("spmv", spmv_inputs, qos=2.0, timeout=1.0)  # fine
+    with pytest.raises(ValueError, match="qos"):
+        Request("spmv", spmv_inputs, qos=0.0)
+    with pytest.raises(ValueError, match="qos"):
+        Request("spmv", spmv_inputs, qos=-1.0)
+    with pytest.raises(ValueError, match="timeout"):
+        Request("spmv", spmv_inputs, timeout=-0.5)
+
+
+def test_request_mixed_with_positional_args_is_a_type_error(spmv_inputs):
+    """Passing a Request AND the legacy positional fields is ambiguous —
+    rejected loudly rather than silently preferring one side."""
+    req = Request("spmv", spmv_inputs)
+    with pytest.raises(TypeError):
+        run(req, spmv_inputs)
+    svc = EngineService()
+    with pytest.raises(TypeError):
+        svc.submit(req, spmv_inputs)
+
+
+# -- engine.run equivalence ----------------------------------------------------
+
+
+def test_run_kwargs_form_warns_and_matches_request_form(spmv_inputs):
+    st = MigratoryStrategy()
+    y_req, rep_req = run(
+        Request("spmv", spmv_inputs, st, "local"),
+        iters=1, warmup=0, cache=PlanCache(),
+    )
+    with pytest.warns(DeprecationWarning, match="Request"):
+        y_kw, rep_kw = run(
+            "spmv", spmv_inputs, st, "local", iters=1, warmup=0, cache=PlanCache(),
+        )
+    np.testing.assert_array_equal(np.asarray(y_req), np.asarray(y_kw))
+    assert rep_req.traffic.total_bytes == rep_kw.traffic.total_bytes
+    assert rep_req.substrate == rep_kw.substrate == "local"
+
+
+def test_run_request_form_does_not_warn(spmv_inputs):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        run(Request("spmv", spmv_inputs), iters=1, warmup=0, cache=PlanCache())
+
+
+# -- EngineService.submit equivalence ------------------------------------------
+
+
+def test_submit_kwargs_form_warns_and_matches_request_form_batch(spmv_inputs):
+    st = MigratoryStrategy(replicate_x=False)
+    svc = EngineService(cache=PlanCache())
+    t1 = svc.submit(Request("spmv", spmv_inputs, st))
+    with pytest.warns(DeprecationWarning, match="Request"):
+        t2 = svc.submit("spmv", spmv_inputs, st)
+    responses = {r.ticket: r for r in svc.drain()}
+    np.testing.assert_array_equal(
+        np.asarray(responses[t1].result), np.asarray(responses[t2].result)
+    )
+
+
+def test_submit_request_form_worker_loop(spmv_inputs):
+    svc = EngineService(cache=PlanCache())
+    svc.start()
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            fut = svc.submit(Request("spmv", spmv_inputs))
+            resp = fut.result(timeout=600)
+    finally:
+        svc.stop()
+    seq, _ = run(
+        Request("spmv", spmv_inputs), iters=1, warmup=0, cache=PlanCache(),
+    )
+    np.testing.assert_array_equal(np.asarray(resp.result), np.asarray(seq))
+
+
+# -- per-request qos and timeout -----------------------------------------------
+
+
+def test_per_request_qos_splits_scheduling_groups(spmv_inputs):
+    """Per-request qos is part of the scheduling-group identity: identical
+    requests share one batch, but a boosted duplicate forms its own group
+    (so its weight orders it independently) while results stay identical."""
+    same = EngineService(cache=PlanCache())
+    same.submit(Request("spmv", spmv_inputs))
+    same.submit(Request("spmv", spmv_inputs))
+    r_same = same.drain()
+    assert same.stats().batches == 1  # one signature, one group
+
+    split = EngineService(cache=PlanCache())
+    split.submit(Request("spmv", spmv_inputs))
+    split.submit(Request("spmv", spmv_inputs, qos=100.0))
+    r_split = split.drain()
+    assert split.stats().batches == 2  # qos=100 group scheduled separately
+    for a, b in ((r_same[0], r_same[1]), (r_split[0], r_split[1])):
+        np.testing.assert_array_equal(np.asarray(a.result), np.asarray(b.result))
+
+
+def test_per_request_timeout_sheds_expired_work(spmv_inputs):
+    """A request whose deadline passed before execution is rejected with
+    ServiceTimeout and counted in stats.timed_out, never silently served."""
+    svc = EngineService(cache=PlanCache(), batch_window=0.3)
+    svc.start()
+    try:
+        fut = svc.submit(Request("spmv", spmv_inputs, timeout=0.01))
+        time.sleep(0.1)  # let the deadline lapse inside the batch window
+        with pytest.raises(ServiceTimeout):
+            fut.result(timeout=600)
+        # the service keeps serving: an undeadlined request still completes
+        ok = svc.submit(Request("spmv", spmv_inputs)).result(timeout=600)
+        assert ok.result is not None
+    finally:
+        svc.stop()
+    stats = svc.stats()
+    assert stats.timed_out == 1
+
+
+# -- SLO accounting ------------------------------------------------------------
+
+
+def test_slo_stats_accounting(spmv_inputs):
+    """With a declared slo_target_seconds every completed request is checked:
+    a generous target shows full attainment, an impossible one shows zero,
+    and the end-to-end (queue-wait + service) percentiles are populated."""
+    svc = EngineService(cache=PlanCache(), slo_target_seconds=600.0)
+    svc.start()
+    try:
+        futs = [svc.submit(Request("spmv", spmv_inputs)) for _ in range(4)]
+        for f in futs:
+            f.result(timeout=600)
+    finally:
+        svc.stop()
+    stats = svc.stats()
+    assert stats.slo_target_seconds == 600.0
+    assert stats.slo_checked == 4
+    assert stats.slo_violations == 0
+    assert stats.slo_attainment == 1.0
+    assert stats.total_p99 >= stats.total_p50 > 0.0
+    # end-to-end latency can never be under the pure service time
+    assert stats.total_p99 >= stats.service_p50
+    d = stats.to_dict()
+    for key in ("slo_checked", "slo_violations", "slo_attainment",
+                "total_p50", "total_p95", "total_p99", "timed_out"):
+        assert key in d
+
+    tight = EngineService(cache=PlanCache(), slo_target_seconds=1e-12)
+    tight.start()
+    try:
+        tight.submit(Request("spmv", spmv_inputs)).result(timeout=600)
+    finally:
+        tight.stop()
+    tstats = tight.stats()
+    assert tstats.slo_checked == 1
+    assert tstats.slo_violations == 1
+    assert tstats.slo_attainment == 0.0
+
+
+def test_no_slo_target_means_no_slo_accounting(spmv_inputs):
+    svc = EngineService(cache=PlanCache())
+    svc.submit(Request("spmv", spmv_inputs))
+    svc.drain()
+    stats = svc.stats()
+    assert stats.slo_target_seconds is None
+    assert stats.slo_checked == 0
+    assert stats.slo_attainment is None
