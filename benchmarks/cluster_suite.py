@@ -1,0 +1,207 @@
+"""Cluster serving benchmark: 2-worker multi-process throughput + parity.
+
+Launches a localhost cluster (coordinator + N worker subprocesses, each
+running its own ``EngineService``), serves a mixed SpMV/BFS/MoE-dispatch
+request stream through ``Coordinator.submit`` (the request-level wire
+path), and **fails closed** on the two §1h acceptance properties:
+
+- **parity** — every cross-process response must be bit-identical to the
+  in-process ``engine.run`` oracle for the same ``Request``; one mismatch
+  fails the run (exit 1 via RuntimeError), zero responses also fails;
+- **distribution** — with ``n_workers >= 2``, at least two workers must
+  have served a nonzero number of requests. A "cluster" where one worker
+  served everything (or where the submit path silently fell back
+  in-process) is not a cluster result and must not pass green.
+
+The suite also drives a small ``substrate="cluster"`` batch through the
+in-process engine so the kernel-level forwarding path (``ClusterSubstrate
+-> Coordinator.kernel_call -> worker _KernelCache``) is measured alongside
+the request-level path, and writes the per-worker/coordinator stats
+artifact ``experiments/cluster_stats.json`` (CI uploads it; it is written
+*before* the gates assert so a gate failure still leaves the diagnosis).
+
+Throughput rows report sustained req/s for the cross-process stream next
+to the single-process baseline on the identical stream. At smoke sizes
+the wire + IPC overhead dominates tiny kernels, so the ratio is reported,
+not gated — the gated signal here is correctness of distribution, which
+is what the PR-5 pool gates cannot see.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from .util import emit
+
+STATS_PATH = (
+    Path(__file__).resolve().parents[1] / "experiments" / "cluster_stats.json"
+)
+
+
+def _workload(n_requests: int, seed: int = 0):
+    """Mixed-op request stream: SpMV (two signatures) / BFS / MoE dispatch."""
+    import jax.numpy as jnp
+
+    from repro.core import partition_ell
+    from repro.engine import (
+        BFSInputs,
+        MoEDispatchInputs,
+        Request,
+        SpMVInputs,
+    )
+    from repro.sparse import (
+        edges_to_csr,
+        erdos_renyi_edges,
+        laplacian_2d,
+        partition_graph,
+    )
+
+    rng = np.random.default_rng(seed)
+    spmv_pool = []
+    for n in (12, 16):
+        a = partition_ell(laplacian_2d(n), 8)
+        x = jnp.asarray(rng.standard_normal(n * n).astype(np.float32))
+        spmv_pool.append(SpMVInputs(a, x))
+    g = partition_graph(edges_to_csr(erdos_renyi_edges(8, 6, seed=seed), 256), 8)
+    bfs_inputs = BFSInputs(g, 0)
+    moe_inputs = MoEDispatchInputs(
+        x=jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32)),
+        router=jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32)),
+        nodelets=4,
+    )
+
+    requests = []
+    for i in range(n_requests):
+        if i % 4 == 2:
+            requests.append(Request("bfs", bfs_inputs))
+        elif i % 4 == 3:
+            requests.append(Request("moe_dispatch", moe_inputs))
+        else:
+            requests.append(Request("spmv", spmv_pool[i % 2]))
+    return requests
+
+
+def _bit_identical(a, b) -> bool:
+    import jax
+
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def run(full: bool = False, quick: bool = False, n_workers: int = 2) -> list:
+    from repro.cluster import launch_cluster
+    from repro.engine import EngineService, Request, run as engine_run
+
+    n_requests = 12 if quick else (48 if full else 24)
+    requests = _workload(n_requests)
+    rows: list = []
+
+    # in-process oracle + single-process baseline on the identical stream
+    # (oracles computed first so the cluster phase measures serving alone)
+    t0 = time.perf_counter()
+    oracles = [engine_run(r, iters=1, warmup=0)[0] for r in requests]
+    local_wall = time.perf_counter() - t0
+    rows.append(emit(
+        "cluster", "local_baseline", local_wall,
+        requests=n_requests, req_per_s=n_requests / max(local_wall, 1e-9),
+    ))
+
+    t_launch = time.perf_counter()
+    with launch_cluster(n_workers) as cluster:
+        startup = time.perf_counter() - t_launch
+        t0 = time.perf_counter()
+        futures = [cluster.submit(r) for r in requests]
+        responses = [f.result() for f in futures]
+        wall = time.perf_counter() - t0
+
+        mismatches = sum(
+            0 if _bit_identical(resp.result, oracle) else 1
+            for resp, oracle in zip(responses, oracles)
+        )
+
+        # kernel-level path: the PR-5 pool (worker-loop mode) over
+        # process-spanning placement slots
+        svc = EngineService(substrate="cluster", workers=n_workers).start()
+        try:
+            t0 = time.perf_counter()
+            pool_futures = [
+                svc.submit(Request(r.op, r.inputs, r.strategy, "cluster"))
+                for r in requests[: max(4, n_requests // 4)]
+            ]
+            pool_responses = [f.result(timeout=300) for f in pool_futures]
+            pool_wall = time.perf_counter() - t0
+        finally:
+            svc.stop()
+        pool_mismatches = sum(
+            0 if _bit_identical(resp.result, oracle) else 1
+            for resp, oracle in zip(pool_responses, oracles)
+        )
+        resize = svc.stats().resize_signal()
+
+        stats = cluster.stats()
+        worker_stats = {
+            w["worker_id"]: cluster.coordinator.worker_stats(w["worker_id"])
+            for w in stats["workers"]
+            if w["state"] == "healthy"
+        }
+
+    served = {w["worker_id"]: int(w["served"]) for w in stats["workers"]}
+    workers_used = sum(1 for n in served.values() if n > 0)
+    rows.append(emit(
+        "cluster", f"submit_{n_workers}w", wall,
+        requests=len(responses), req_per_s=len(responses) / max(wall, 1e-9),
+        workers=n_workers, workers_used=workers_used,
+        mismatches=mismatches, startup_seconds=round(startup, 3),
+        vs_local=round(local_wall / max(wall, 1e-9), 3),
+    ))
+    rows.append(emit(
+        "cluster", f"pool_{n_workers}w", pool_wall,
+        requests=len(pool_responses),
+        req_per_s=len(pool_responses) / max(pool_wall, 1e-9),
+        kernel_calls=int(stats["kernel_calls"]),
+        mismatches=pool_mismatches, resize_signal=resize,
+    ))
+
+    STATS_PATH.parent.mkdir(parents=True, exist_ok=True)
+    STATS_PATH.write_text(json.dumps({
+        "n_workers": n_workers,
+        "requests": len(responses),
+        "wall_seconds": wall,
+        "local_wall_seconds": local_wall,
+        "per_worker_served": served,
+        "mismatches": mismatches,
+        "pool_mismatches": pool_mismatches,
+        "resize_signal": resize,
+        "coordinator": stats,
+        "worker_service_stats": worker_stats,
+    }, indent=2, default=str))
+    print(f"# wrote {STATS_PATH}")
+
+    # the fail-closed gates run after the artifact lands on disk, so a red
+    # run still uploads the stats that explain it
+    if not responses:
+        raise RuntimeError("cluster suite served zero requests")
+    if mismatches or pool_mismatches:
+        raise RuntimeError(
+            f"cluster parity broken: {mismatches} submit-path and "
+            f"{pool_mismatches} pool-path responses diverged from engine.run"
+        )
+    if workers_used < min(2, n_workers):
+        raise RuntimeError(
+            f"requests were not distributed: per-worker served={served} "
+            f"(need >= {min(2, n_workers)} workers with nonzero served)"
+        )
+    if stats["kernel_calls"] <= 0:
+        raise RuntimeError(
+            "substrate='cluster' pool phase forwarded zero kernel calls "
+            "cross-process"
+        )
+    return rows

@@ -27,14 +27,16 @@ from pathlib import Path
 SUITES = {}
 
 # subprocess-heavy suites skipped in --quick smoke runs (still runnable
-# explicitly via --bench NAME; the mesh-8dev CI job does exactly that)
-SLOW_SUITES = ("moe_dispatch", "mesh")
+# explicitly via --bench NAME / --cluster N; the mesh-8dev and
+# cluster-smoke CI jobs do exactly that)
+SLOW_SUITES = ("moe_dispatch", "mesh", "cluster")
 
 
 def _register():
     from . import (
         autotune_suite,
         bfs_suite,
+        cluster_suite,
         gsana_suite,
         kernels_suite,
         mesh_suite,
@@ -54,6 +56,7 @@ def _register():
         "moe": moe_suite.run,
         "moe_dispatch": moe_dispatch.run,
         "mesh": mesh_suite.run,
+        "cluster": cluster_suite.run,
     })
 
 
@@ -100,6 +103,13 @@ def main(argv=None) -> None:
         "1.0: the fast path must not be a slow path)",
     )
     ap.add_argument(
+        "--cluster", type=int, default=None, metavar="N",
+        help="run the cluster suite on an N-worker localhost cluster "
+        "(multi-process serving plane; fail-closed parity + distribution "
+        "gates asserted inside the suite; writes "
+        "experiments/cluster_stats.json)",
+    )
+    ap.add_argument(
         "--machine-file", default=None,
         help="run suites against this pinned machine file "
         "(sets REPRO_MACHINE_PATH for this process)",
@@ -125,6 +135,12 @@ def main(argv=None) -> None:
         ap.error("--require-pool-speedup needs --workers >= 2 to have a pool to gate")
     if args.workers is not None and args.bench not in (None, "serve"):
         ap.error("--workers drives the serve suite's pool phase; use --bench serve")
+    if args.cluster is not None:
+        if args.bench not in (None, "cluster"):
+            ap.error("--cluster runs the cluster suite; drop --bench or use "
+                     "--bench cluster")
+        if args.cluster < 1:
+            ap.error("--cluster needs at least 1 worker (CI uses 2)")
     # the SLO gate fails closed too: gating p99 without the serve suite's
     # decode phase in the run would exit green having measured nothing
     if args.require_p99 > 0 and args.bench not in (None, "serve"):
@@ -150,6 +166,8 @@ def main(argv=None) -> None:
         if args.bench not in SUITES:
             ap.error(f"unknown suite {args.bench!r}; choose from {sorted(SUITES)}")
         names = [args.bench]
+    elif args.cluster is not None:
+        names = ["cluster"]  # --cluster N == --bench cluster with N workers
     else:
         names = [n for n in SUITES if not (args.quick and n in SLOW_SUITES)]
     print("bench,case,us_per_call,derived")
@@ -167,6 +185,11 @@ def main(argv=None) -> None:
                 full=args.full, quick=args.quick, workers=args.workers,
                 min_pool_speedup=args.require_pool_speedup,
                 require_p99_ms=args.require_p99,
+            ))
+        elif name == "cluster":
+            all_rows.extend(SUITES[name](
+                full=args.full, quick=args.quick,
+                n_workers=args.cluster if args.cluster is not None else 2,
             ))
         else:
             all_rows.extend(SUITES[name](full=args.full, quick=args.quick))

@@ -1,0 +1,64 @@
+"""Cluster plane: multi-process serving substrate, launcher, failover.
+
+The serving plane, out of one process (DESIGN.md §1h):
+
+    from repro.cluster import launch_cluster
+    from repro.engine import Request
+
+    with launch_cluster(n_workers=2) as cluster:
+        fut = cluster.submit(Request("spmv", SpMVInputs(a, x)))
+        resp = fut.result()            # served by a worker process
+        # ... or drive the PR-5 pool across processes:
+        svc = EngineService(substrate="cluster", workers="auto")
+
+Pieces: a length-prefixed JSON protocol (:mod:`.protocol`), worker
+processes each running their own ``EngineService`` (:mod:`.worker`), a
+coordinator owning admission/routing/heartbeats/failover
+(:mod:`.coordinator`), a ``"cluster"`` substrate whose placement slots
+span processes (:mod:`.substrate`), and a launcher with pluggable
+process backends (:mod:`.launch`). Importing this package registers the
+substrate.
+"""
+from .coordinator import (
+    ClusterError,
+    ClusterFuture,
+    ClusterResponse,
+    Coordinator,
+    RemoteOpError,
+    WorkerFailure,
+    WorkerState,
+)
+from .launch import (
+    Cluster,
+    K8sBackend,
+    LaunchBackend,
+    LocalProcessBackend,
+    WorkerSpec,
+    launch_cluster,
+)
+from .substrate import (
+    ClusterSubstrate,
+    activate_cluster,
+    active_cluster,
+    deactivate_cluster,
+)
+
+__all__ = [
+    "Cluster",
+    "ClusterError",
+    "ClusterFuture",
+    "ClusterResponse",
+    "ClusterSubstrate",
+    "Coordinator",
+    "K8sBackend",
+    "LaunchBackend",
+    "LocalProcessBackend",
+    "RemoteOpError",
+    "WorkerFailure",
+    "WorkerSpec",
+    "WorkerState",
+    "activate_cluster",
+    "active_cluster",
+    "deactivate_cluster",
+    "launch_cluster",
+]

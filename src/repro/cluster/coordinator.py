@@ -1,0 +1,643 @@
+"""Cluster coordinator: admission, routing, health, and failover (§1h).
+
+The coordinator owns the client-facing end of the control plane. It
+listens on a localhost socket; workers dial in and say ``hello``; from
+then on each worker is a :class:`WorkerHandle` with a reader thread, a
+health state, and an in-flight table. Two submission paths share the
+machinery:
+
+- :meth:`Coordinator.submit` — a whole :class:`Request` crosses the wire
+  and the worker's own ``EngineService`` serves it (the serving path;
+  warm plan-cache executables live *in the worker*). Requests are routed
+  by **placement key** (op name x input signature x strategy identity):
+  the first request of a key pins it to the least-loaded live worker, and
+  every later request with the same key — i.e. the same compiled
+  executable — goes to the same process. That is the Emu discipline one
+  level up: migrate the *request* to the process that owns the data
+  (here: the warm executable), never migrate the executable.
+- :meth:`Coordinator.kernel_call` — one substrate kernel invocation
+  (the :class:`~repro.cluster.substrate.ClusterSubstrate` path), pinned
+  to a worker by the substrate's placement variant.
+
+**Health**: a monitor thread pings every worker each
+``heartbeat_interval``; a worker whose last ``pong`` is older than
+``heartbeat_timeout`` — or whose connection EOFs, the fast path for a
+SIGKILLed process — is declared dead.
+
+**Failover**: when a worker dies, its placement pins are dropped (keys
+re-place on survivors on next submit — "slots redistributed") and every
+in-flight request it held is retried **once** on a surviving worker. Safe
+because ops are pure: re-running a request cannot double-apply anything.
+A request whose retry also dies fails its future with
+:class:`WorkerFailure` — every submitted future terminates, always.
+Remote *computation* errors are not retried (they are deterministic); they
+re-raise as :class:`RemoteOpError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import logging
+import secrets
+import socket
+import threading
+import time
+from typing import Any
+
+from ..engine.api import args_signature
+from ..engine.request import Request
+from ..engine.wire import decode_value, encode_value
+from .protocol import Channel, ProtocolError
+
+log = logging.getLogger("repro.cluster")
+
+
+class ClusterError(RuntimeError):
+    """The cluster cannot serve (no live workers / not listening / stopped)."""
+
+
+class WorkerFailure(ClusterError):
+    """The worker executing a request died, and so did its one retry."""
+
+
+class RemoteOpError(RuntimeError):
+    """The request itself raised on the worker (not a transport failure)."""
+
+    def __init__(self, etype: str, message: str, worker_id: int):
+        super().__init__(f"[worker {worker_id}] {etype}: {message}")
+        self.etype = etype
+        self.worker_id = worker_id
+
+
+class WorkerState(str, enum.Enum):
+    STARTING = "starting"
+    HEALTHY = "healthy"
+    DEAD = "dead"
+
+
+@dataclasses.dataclass
+class ClusterResponse:
+    """What a resolved cluster future yields."""
+
+    ticket: int
+    result: Any
+    report: Any  # RunReport for submit(); None for kernel calls
+    worker_id: int
+    retried: bool = False
+
+
+class ClusterFuture:
+    """Terminates exactly once: a response, a remote error, or failover
+    exhaustion. Same blocking surface as ``ServiceFuture``."""
+
+    def __init__(self, ticket: int):
+        self.ticket = ticket
+        self._done = threading.Event()
+        self._response: "ClusterResponse | None" = None
+        self._exception: "BaseException | None" = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: "float | None" = None) -> ClusterResponse:
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"cluster request {self.ticket} still pending")
+        if self._exception is not None:
+            raise self._exception
+        assert self._response is not None
+        return self._response
+
+    def exception(self, timeout: "float | None" = None) -> "BaseException | None":
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"cluster request {self.ticket} still pending")
+        return self._exception
+
+    def _resolve(self, response: ClusterResponse) -> None:
+        self._response = response
+        self._done.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._exception = exc
+        self._done.set()
+
+
+@dataclasses.dataclass
+class _Inflight:
+    ticket: int
+    future: ClusterFuture
+    #: resend template (everything but the ticket) — what failover replays
+    message: "dict[str, Any]"
+    decode_report: bool
+    retried: bool = False
+
+
+class WorkerHandle:
+    """Coordinator-side view of one worker process."""
+
+    def __init__(self, worker_id: int, channel: Channel, hello: dict):
+        self.worker_id = worker_id
+        self.channel = channel
+        self.pid: "int | None" = hello.get("pid")
+        self.substrate: str = hello.get("substrate", "local")
+        self.slots: int = int(hello.get("slots", 1))
+        self.state = WorkerState.HEALTHY
+        self.last_pong = time.monotonic()
+        self.served = 0
+        self.inflight: "dict[int, _Inflight]" = {}
+        self.reader: "threading.Thread | None" = None
+
+    def describe(self) -> dict:
+        return {
+            "worker_id": self.worker_id,
+            "pid": self.pid,
+            "state": self.state.value,
+            "substrate": self.substrate,
+            "slots": self.slots,
+            "served": self.served,
+            "inflight": len(self.inflight),
+        }
+
+
+class Coordinator:
+    def __init__(
+        self,
+        *,
+        heartbeat_interval: float = 0.5,
+        heartbeat_timeout: float = 5.0,
+        max_inflight: int = 512,
+        call_timeout: float = 300.0,
+        token: "str | None" = None,
+    ):
+        self.heartbeat_interval = heartbeat_interval
+        self.heartbeat_timeout = heartbeat_timeout
+        self.max_inflight = max_inflight
+        self.call_timeout = call_timeout
+        self.token = token if token is not None else secrets.token_hex(8)
+        self._lock = threading.RLock()
+        self._space = threading.Condition(self._lock)  # admission: slot freed
+        self._joined = threading.Condition(self._lock)  # wait_ready()
+        self._workers: "dict[int, WorkerHandle]" = {}
+        self._tickets = itertools.count(1)
+        self._inflight_total = 0
+        self._placement: "dict[Any, int]" = {}  # placement key -> worker_id
+        self._generation = 0  # bumps on every join/death (topology identity)
+        self._listener: "socket.socket | None" = None
+        self._threads: "list[threading.Thread]" = []
+        self._stopping = False
+        # counters for stats()
+        self._submitted = 0
+        self._kernel_calls = 0
+        self._retries = 0
+        self._failovers = 0
+        self._remote_errors = 0
+
+    # -- lifecycle -------------------------------------------------------------
+
+    def listen(self, host: str = "127.0.0.1", port: int = 0) -> "tuple[str, int]":
+        """Bind the control socket and start the accept + monitor threads.
+        Returns the bound ``(host, port)`` workers should dial."""
+        listener = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        listener.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        listener.bind((host, port))
+        listener.listen(64)
+        self._listener = listener
+        for target, name in ((self._accept_loop, "accept"), (self._monitor_loop, "monitor")):
+            thread = threading.Thread(
+                target=target, name=f"cluster-{name}", daemon=True
+            )
+            thread.start()
+            self._threads.append(thread)
+        return listener.getsockname()[:2]
+
+    @property
+    def address(self) -> "tuple[str, int]":
+        if self._listener is None:
+            raise ClusterError("coordinator is not listening (call listen())")
+        return self._listener.getsockname()[:2]
+
+    def wait_ready(self, n_workers: int, timeout: float = 120.0) -> None:
+        """Block until ``n_workers`` workers are registered and healthy."""
+        deadline = time.monotonic() + timeout
+        with self._joined:
+            while len(self.healthy_workers()) < n_workers:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise ClusterError(
+                        f"only {len(self.healthy_workers())} of {n_workers} "
+                        f"workers joined within {timeout:.0f}s"
+                    )
+                self._joined.wait(remaining)
+
+    def shutdown(self) -> None:
+        """Stop serving: tell workers to exit, fail leftover futures."""
+        with self._lock:
+            if self._stopping:
+                return
+            self._stopping = True
+            workers = list(self._workers.values())
+            self._space.notify_all()
+        for worker in workers:
+            try:
+                worker.channel.send({"kind": "shutdown"})
+            except Exception:
+                pass
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+        time.sleep(0.05)  # give shutdown frames a beat to flush
+        for worker in workers:
+            worker.channel.close()
+            self._sweep_inflight(worker, ClusterError("cluster shut down"))
+
+    # -- membership ------------------------------------------------------------
+
+    def healthy_workers(self) -> "list[WorkerHandle]":
+        with self._lock:
+            return [
+                w for w in self._workers.values() if w.state == WorkerState.HEALTHY
+            ]
+
+    def worker(self, worker_id: int) -> WorkerHandle:
+        with self._lock:
+            return self._workers[worker_id]
+
+    def topology_fingerprint(self) -> tuple:
+        """Hashable cluster-topology identity for plan-cache fingerprints:
+        which workers exist, where, and the membership generation — plans
+        compiled against one topology never serve another."""
+        with self._lock:
+            members = tuple(
+                (w.worker_id, w.substrate, w.slots)
+                for w in sorted(self._workers.values(), key=lambda w: w.worker_id)
+                if w.state == WorkerState.HEALTHY
+            )
+            return (self._generation, members)
+
+    def _accept_loop(self) -> None:
+        assert self._listener is not None
+        while not self._stopping:
+            try:
+                sock, _addr = self._listener.accept()
+            except OSError:
+                return  # listener closed — shutting down
+            sock.settimeout(None)
+            threading.Thread(
+                target=self._register, args=(sock,), daemon=True
+            ).start()
+
+    def _register(self, sock: socket.socket) -> None:
+        channel = Channel(sock)
+        try:
+            hello = channel.recv()
+        except ProtocolError:
+            channel.close()
+            return
+        if hello is None or hello.get("kind") != "hello":
+            channel.close()
+            return
+        if self.token and hello.get("token") != self.token:
+            log.warning("rejecting worker with bad token")
+            channel.close()
+            return
+        worker = WorkerHandle(int(hello["worker_id"]), channel, hello)
+        with self._joined:
+            stale = self._workers.get(worker.worker_id)
+            if stale is not None and stale.state != WorkerState.DEAD:
+                log.warning(
+                    "worker %d reconnected while marked %s; replacing",
+                    worker.worker_id, stale.state.value,
+                )
+                stale.channel.close()
+            self._workers[worker.worker_id] = worker
+            self._generation += 1
+            self._joined.notify_all()
+        reader = threading.Thread(
+            target=self._reader_loop,
+            args=(worker,),
+            name=f"cluster-reader-{worker.worker_id}",
+            daemon=True,
+        )
+        worker.reader = reader
+        reader.start()
+        log.info(
+            "worker %d joined (pid=%s, substrate=%s, slots=%d)",
+            worker.worker_id, worker.pid, worker.substrate, worker.slots,
+        )
+
+    # -- submission ------------------------------------------------------------
+
+    def submit(self, request: Request) -> ClusterFuture:
+        """Serve one Request on the cluster; returns a future that always
+        terminates (result, remote error, or :class:`WorkerFailure`)."""
+        payload = request.to_wire()  # raises WireError before admission
+        op_name = payload["op"]
+        strategy = request.strategy
+        strategy_id = (
+            strategy.cache_key() if hasattr(strategy, "cache_key") else strategy
+        )
+        placement_key = (op_name, strategy_id, args_signature((request.inputs,)))
+        message = {"kind": "submit", "request": payload}
+        with self._space:
+            while (
+                self._inflight_total >= self.max_inflight and not self._stopping
+            ):
+                self._space.wait(1.0)
+            if self._stopping:
+                raise ClusterError("coordinator is shut down")
+            worker = self._place(placement_key)
+            self._submitted += 1
+        return self._dispatch(worker, message, decode_report=True)
+
+    def kernel_call(
+        self,
+        op: str,
+        args: tuple,
+        kwargs: dict,
+        *,
+        worker_pin: "int | None" = None,
+        timeout: "float | None" = None,
+    ) -> Any:
+        """Execute one substrate kernel on a worker (blocking). Pinned calls
+        go to ``worker_pin`` while it is healthy; a death mid-call fails
+        over exactly like a submit."""
+        message = {
+            "kind": "kernel_call",
+            "op": op,
+            "args": encode_value(tuple(args)),
+            "kwargs": encode_value(dict(kwargs)),
+        }
+        with self._lock:
+            if self._stopping:
+                raise ClusterError("coordinator is shut down")
+            worker = None
+            if worker_pin is not None:
+                candidate = self._workers.get(worker_pin)
+                if candidate is not None and candidate.state == WorkerState.HEALTHY:
+                    worker = candidate
+            if worker is None:
+                worker = self._least_loaded()
+            self._kernel_calls += 1
+        future = self._dispatch(worker, message, decode_report=False)
+        timeout = self.call_timeout if timeout is None else timeout
+        try:
+            response = future.result(timeout=timeout)
+        except TimeoutError:
+            # hung worker the heartbeat hasn't condemned yet (e.g. pings
+            # answered but compute wedged): condemn it ourselves; failover
+            # resubmits the call, so wait once more for the retry
+            self._on_death(worker, f"kernel call exceeded {timeout:.0f}s")
+            response = future.result(timeout=timeout)
+        return response.result
+
+    def _place(self, key: Any) -> WorkerHandle:
+        """Sticky placement: first arrival of a key pins it to the
+        least-loaded live worker; later arrivals follow the pin. Dead
+        workers' pins were dropped at death, so their keys re-place here —
+        the slot-redistribution half of failover."""
+        pinned = self._placement.get(key)
+        if pinned is not None:
+            worker = self._workers.get(pinned)
+            if worker is not None and worker.state == WorkerState.HEALTHY:
+                return worker
+        worker = self._least_loaded()
+        self._placement[key] = worker.worker_id
+        return worker
+
+    def _least_loaded(self) -> WorkerHandle:
+        healthy = [
+            w for w in self._workers.values() if w.state == WorkerState.HEALTHY
+        ]
+        if not healthy:
+            raise ClusterError("no healthy workers")
+        pins: "dict[int, int]" = {w.worker_id: 0 for w in healthy}
+        for wid in self._placement.values():
+            if wid in pins:
+                pins[wid] += 1
+        return min(
+            healthy, key=lambda w: (len(w.inflight), pins[w.worker_id], w.worker_id)
+        )
+
+    def _dispatch(
+        self,
+        worker: WorkerHandle,
+        message: "dict[str, Any]",
+        *,
+        decode_report: bool,
+        retried: bool = False,
+        future: "ClusterFuture | None" = None,
+    ) -> ClusterFuture:
+        with self._lock:
+            if worker.state == WorkerState.DEAD:
+                # died between placement and dispatch: reroute immediately
+                # (raises ClusterError when no one is left)
+                worker = self._least_loaded()
+            ticket = next(self._tickets)
+            if future is None:
+                future = ClusterFuture(ticket)
+            entry = _Inflight(ticket, future, message, decode_report, retried)
+            worker.inflight[ticket] = entry
+            self._inflight_total += 1
+        try:
+            worker.channel.send({**message, "ticket": ticket})
+        except Exception as exc:  # connection died between place and send
+            self._on_death(worker, f"send failed: {exc}")
+        return future
+
+    # -- worker I/O ------------------------------------------------------------
+
+    def _reader_loop(self, worker: WorkerHandle) -> None:
+        while True:
+            try:
+                message = worker.channel.recv()
+            except ProtocolError as exc:
+                self._on_death(worker, f"protocol error: {exc}")
+                return
+            if message is None:
+                if worker.state != WorkerState.DEAD and not self._stopping:
+                    self._on_death(worker, "connection closed")
+                return
+            try:
+                self._on_message(worker, message)
+            except Exception:
+                log.exception(
+                    "error handling %r from worker %d",
+                    message.get("kind"), worker.worker_id,
+                )
+
+    def _on_message(self, worker: WorkerHandle, message: dict) -> None:
+        kind = message["kind"]
+        if kind == "pong":
+            worker.last_pong = time.monotonic()
+            return
+        if kind == "log":
+            level = getattr(logging, message.get("level", "INFO"), logging.INFO)
+            logging.getLogger(
+                f"repro.cluster.w{worker.worker_id}.{message.get('logger', '?')}"
+            ).log(level, "%s", message.get("msg", ""))
+            return
+        if kind in ("result", "error"):
+            with self._space:
+                entry = worker.inflight.pop(message["ticket"], None)
+                if entry is not None:
+                    self._inflight_total -= 1
+                    self._space.notify_all()
+            if entry is None:
+                return  # already failed over; late answer is redundant
+            if kind == "error":
+                with self._lock:
+                    self._remote_errors += 1
+                entry.future._fail(
+                    RemoteOpError(
+                        message.get("etype", "Exception"),
+                        message.get("error", ""),
+                        worker.worker_id,
+                    )
+                )
+                return
+            worker.served += 1
+            report = message.get("report")
+            entry.future._resolve(
+                ClusterResponse(
+                    ticket=entry.ticket,
+                    result=decode_value(message["result"]),
+                    report=(
+                        decode_value(report)
+                        if entry.decode_report and report is not None
+                        else None
+                    ),
+                    worker_id=worker.worker_id,
+                    retried=entry.retried,
+                )
+            )
+            return
+        if kind == "stats_reply":
+            with self._lock:
+                entry = worker.inflight.pop(message["ticket"], None)
+                self._inflight_total -= 1 if entry else 0
+            if entry is not None:
+                entry.future._resolve(
+                    ClusterResponse(
+                        entry.ticket, message.get("stats"), None, worker.worker_id
+                    )
+                )
+            return
+        log.warning("unknown message kind %r from worker %d", kind, worker.worker_id)
+
+    # -- health + failover -----------------------------------------------------
+
+    def _monitor_loop(self) -> None:
+        while not self._stopping:
+            time.sleep(self.heartbeat_interval)
+            if self._stopping:  # woke into a shutdown: channels are closing
+                return
+            now = time.monotonic()
+            for worker in self.healthy_workers():
+                if now - worker.last_pong > self.heartbeat_timeout:
+                    self._on_death(
+                        worker,
+                        f"missed heartbeats for {now - worker.last_pong:.1f}s",
+                    )
+                    continue
+                try:
+                    worker.channel.send({"kind": "ping"})
+                except Exception as exc:
+                    self._on_death(worker, f"ping failed: {exc}")
+
+    def _on_death(self, worker: WorkerHandle, reason: str) -> None:
+        """Declare ``worker`` dead: drop its placement pins, retry its
+        in-flight work once on survivors, fail what was already retried."""
+        with self._joined:
+            if worker.state == WorkerState.DEAD or self._stopping:
+                return  # already handled, or a shutdown tearing channels down
+            worker.state = WorkerState.DEAD
+            self._generation += 1
+            self._failovers += 1
+            dropped = [
+                key for key, wid in self._placement.items()
+                if wid == worker.worker_id
+            ]
+            for key in dropped:
+                del self._placement[key]
+            orphans = list(worker.inflight.values())
+            worker.inflight.clear()
+            self._inflight_total -= len(orphans)
+            self._space.notify_all()
+            self._joined.notify_all()
+        log.warning(
+            "worker %d is dead (%s): redistributing %d placement pins, "
+            "retrying %d in-flight request(s)",
+            worker.worker_id, reason, len(dropped), len(orphans),
+        )
+        worker.channel.close()
+        for entry in orphans:
+            if entry.retried:
+                entry.future._fail(
+                    WorkerFailure(
+                        f"request {entry.ticket} lost worker "
+                        f"{worker.worker_id} ({reason}) after one retry"
+                    )
+                )
+                continue
+            try:
+                with self._lock:
+                    survivor = self._least_loaded()
+                    self._retries += 1
+                self._dispatch(
+                    survivor,
+                    entry.message,
+                    decode_report=entry.decode_report,
+                    retried=True,
+                    future=entry.future,
+                )
+            except ClusterError as exc:
+                entry.future._fail(
+                    WorkerFailure(
+                        f"request {entry.ticket} lost worker "
+                        f"{worker.worker_id} ({reason}) and no healthy "
+                        f"worker remains: {exc}"
+                    )
+                )
+
+    def _sweep_inflight(self, worker: WorkerHandle, exc: BaseException) -> None:
+        with self._lock:
+            orphans = list(worker.inflight.values())
+            worker.inflight.clear()
+            self._inflight_total -= len(orphans)
+        for entry in orphans:
+            entry.future._fail(exc)
+
+    # -- introspection ---------------------------------------------------------
+
+    def worker_stats(self, worker_id: int, timeout: float = 30.0) -> dict:
+        """The worker's own ``ServiceStats.to_dict()`` snapshot, fetched
+        over the wire."""
+        worker = self.worker(worker_id)
+        future = self._dispatch(
+            worker, {"kind": "stats"}, decode_report=False
+        )
+        return future.result(timeout=timeout).result
+
+    def stats(self) -> "dict[str, Any]":
+        """Control-plane counters + per-worker health and serve counts."""
+        with self._lock:
+            workers = [w.describe() for w in self._workers.values()]
+            served = sum(w.served for w in self._workers.values())
+            return {
+                "workers": workers,
+                "n_workers": len(workers),
+                "n_healthy": sum(
+                    1 for w in workers if w["state"] == WorkerState.HEALTHY.value
+                ),
+                "generation": self._generation,
+                "submitted": self._submitted,
+                "kernel_calls": self._kernel_calls,
+                "served": served,
+                "inflight": self._inflight_total,
+                "retries": self._retries,
+                "failovers": self._failovers,
+                "remote_errors": self._remote_errors,
+                "placement_pins": len(self._placement),
+            }

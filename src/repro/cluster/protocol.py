@@ -1,0 +1,110 @@
+"""Length-prefixed JSON framing for the cluster control plane (DESIGN.md §1h).
+
+One frame = an 8-byte big-endian length header + a UTF-8 JSON object. The
+object is a *message*: a dict with a ``"kind"`` discriminator and plain
+JSON fields; any field that carries engine values (request payloads, kernel
+arguments, results, reports) is pre-encoded with
+:mod:`repro.engine.wire` so arrays cross dtype/shape-exact. Keeping the
+envelope plain JSON means a frame is greppable on the wire and the codec
+for *values* lives in exactly one place.
+
+Message kinds:
+
+======================  =========  ==========================================
+kind                    direction  fields
+======================  =========  ==========================================
+``hello``               w -> c     ``worker_id, pid, token, substrate, slots``
+``pong``                w -> c     ``inflight`` (reply to ``ping``)
+``result``              w -> c     ``ticket, result, report`` (wire-encoded)
+``error``               w -> c     ``ticket, etype, error`` (repr strings)
+``stats_reply``         w -> c     ``ticket, stats`` (plain dict)
+``log``                 w -> c     ``level, logger, msg`` (forwarded record)
+``ping``                c -> w     (heartbeat; reader answers while busy)
+``submit``              c -> w     ``ticket, request`` (``Request.to_wire()``)
+``kernel_call``         c -> w     ``ticket, op, args, kwargs`` (wire-encoded)
+``stats``               c -> w     ``ticket``
+``shutdown``            c -> w     (drain and exit)
+======================  =========  ==========================================
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+from typing import Any
+
+_HEADER = struct.Struct(">Q")
+#: hard frame-size guard: a corrupt header must not trigger a giant alloc
+MAX_FRAME_BYTES = 1 << 33
+
+
+class ProtocolError(RuntimeError):
+    """A malformed frame (oversized, truncated, or not a JSON object)."""
+
+
+def _recv_exact(sock: socket.socket, n: int) -> "bytes | None":
+    """Read exactly ``n`` bytes; None on a clean EOF at a frame boundary."""
+    chunks: list[bytes] = []
+    got = 0
+    while got < n:
+        try:
+            chunk = sock.recv(min(n - got, 1 << 20))
+        except OSError:
+            return None  # peer reset / socket closed under us == EOF
+        if not chunk:
+            if got:
+                raise ProtocolError(f"truncated frame: got {got} of {n} bytes")
+            return None
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+class Channel:
+    """A message channel over one connected socket.
+
+    ``send`` is serialized by an internal lock (any thread may reply);
+    ``recv`` is single-reader by convention (each side runs one reader
+    thread). ``recv`` returns ``None`` on EOF — the peer is gone.
+    """
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._send_lock = threading.Lock()
+        self._closed = False
+
+    def send(self, message: "dict[str, Any]") -> None:
+        data = json.dumps(message, separators=(",", ":")).encode("utf-8")
+        if len(data) > MAX_FRAME_BYTES:
+            raise ProtocolError(f"frame of {len(data)} bytes exceeds the cap")
+        with self._send_lock:
+            self._sock.sendall(_HEADER.pack(len(data)) + data)
+
+    def recv(self) -> "dict[str, Any] | None":
+        header = _recv_exact(self._sock, _HEADER.size)
+        if header is None:
+            return None
+        (length,) = _HEADER.unpack(header)
+        if length > MAX_FRAME_BYTES:
+            raise ProtocolError(f"frame of {length} bytes exceeds the cap")
+        body = _recv_exact(self._sock, length)
+        if body is None:
+            return None
+        message = json.loads(body.decode("utf-8"))
+        if not isinstance(message, dict) or "kind" not in message:
+            raise ProtocolError("frame is not a message object with a 'kind'")
+        return message
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass

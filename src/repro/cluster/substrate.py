@@ -1,0 +1,158 @@
+"""`ClusterSubstrate`: worker processes as placement slots (§1h).
+
+Registered as ``"cluster"`` via the ordinary
+:func:`~repro.engine.substrate.register_substrate` hook, so the whole
+PR-5 serving plane — plan-cache pinning, placement variants, QoS —
+carries over *unchanged* at the process level:
+
+- :meth:`placement_slots` spans the live worker processes, so
+  ``EngineService(substrate="cluster", workers="auto")`` sizes its pool to
+  the cluster;
+- :meth:`placement_variant` pins pool slot *k* to one worker process
+  (``worker_pin``), and :meth:`cache_fingerprint` embeds both the pin and
+  the coordinator's topology fingerprint — a plan compiled against one
+  membership generation never serves another (exactly how mesh device
+  windows behave, one level up);
+- :meth:`kernel` returns a **forwarder**: the kernel call (args + kwargs,
+  wire-encoded) executes on the pinned worker, which runs the real kernel
+  from its own registry against its own substrate. Capability is the
+  *remote* kind's registry — the cluster supports what its workers
+  support.
+
+``placement_policy = "affinity"`` (the warm executable lives in one
+process) and ``jit_plans = False`` (the forwarder does socket I/O;
+tracing it into ``jax.jit`` would bake one reply in as a constant — the
+planner keeps cluster plans eager; the *worker* side does the jitting).
+
+The registry factory takes no arguments, so ``get_substrate("cluster")``
+resolves through the **active cluster**: the coordinator installed by
+:func:`activate_cluster` (done by ``launch_cluster``). Without one, a
+clear error tells you to launch first.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable
+
+from ..engine.api import OpNotSupportedError
+from ..engine.registry import default_registry
+from ..engine.substrate import Substrate, register_substrate
+from .coordinator import ClusterError, Coordinator
+
+_ACTIVE_LOCK = threading.Lock()
+_ACTIVE: "Coordinator | None" = None
+
+
+def activate_cluster(coordinator: Coordinator) -> None:
+    """Install ``coordinator`` as what ``get_substrate("cluster")`` binds to."""
+    global _ACTIVE
+    with _ACTIVE_LOCK:
+        _ACTIVE = coordinator
+
+
+def deactivate_cluster(coordinator: "Coordinator | None" = None) -> None:
+    """Uninstall the active cluster (no-op if ``coordinator`` is stale)."""
+    global _ACTIVE
+    with _ACTIVE_LOCK:
+        if coordinator is None or _ACTIVE is coordinator:
+            _ACTIVE = None
+
+
+def active_cluster() -> Coordinator:
+    with _ACTIVE_LOCK:
+        if _ACTIVE is None:
+            raise ClusterError(
+                "no active cluster — launch one first "
+                "(repro.cluster.launch_cluster(n_workers=...) or "
+                "launch/serve.py --cluster N)"
+            )
+        return _ACTIVE
+
+
+class ClusterSubstrate(Substrate):
+    """Executes kernels on the cluster's worker processes."""
+
+    name = "cluster"
+    placement_policy = "affinity"
+    jit_plans = False
+
+    def __init__(
+        self,
+        coordinator: "Coordinator | None" = None,
+        worker_pin: "int | None" = None,
+    ):
+        self._coordinator = coordinator
+        self.worker_pin = worker_pin
+
+    @property
+    def coordinator(self) -> Coordinator:
+        return self._coordinator if self._coordinator is not None else active_cluster()
+
+    def remote_kind(self) -> str:
+        """The kernel-registry kind calls resolve under *on the worker* —
+        the workers' substrate name (homogeneous pools; the launcher
+        enforces one substrate per cluster). Falls back to ``"local"``
+        (the default worker substrate) when no cluster is active, so the
+        capability/placement tables stay readable after a mere import —
+        only *executing* a kernel requires a live coordinator."""
+        try:
+            workers = self.coordinator.healthy_workers()
+        except ClusterError:
+            return "local"
+        return workers[0].substrate if workers else "local"
+
+    @property
+    def substrate_kind(self) -> str:
+        # the cluster supports what its workers support: capability rows
+        # and drift checks must agree with kernel()'s resolution
+        return self.remote_kind()
+
+    def supports(self, op_name: str) -> bool:
+        return default_registry().has_kernel(op_name, self.remote_kind())
+
+    def kernel(self, op_name: str) -> Callable:
+        if not self.supports(op_name):
+            raise OpNotSupportedError(
+                f"op {op_name!r} has no kernel for the cluster's remote "
+                f"kind {self.remote_kind()!r}"
+            )
+        pin = self.worker_pin
+
+        def forward(*args: Any, **kwargs: Any) -> Any:
+            # resolved per call, not at plan time: a plan may outlive a
+            # coordinator, and an inactive cluster should fail with the
+            # launch hint only when work actually needs a worker
+            return self.coordinator.kernel_call(
+                op_name, args, kwargs, worker_pin=pin
+            )
+
+        return forward
+
+    def placement_slots(self) -> int:
+        try:
+            return max(1, len(self.coordinator.healthy_workers()))
+        except ClusterError:
+            return 1
+
+    def placement_variant(self, slot: int, n_slots: int) -> "ClusterSubstrate":
+        try:
+            workers = sorted(
+                w.worker_id for w in self.coordinator.healthy_workers()
+            )
+        except ClusterError:
+            return self
+        if not workers:
+            return self
+        return ClusterSubstrate(
+            self._coordinator, worker_pin=workers[slot % len(workers)]
+        )
+
+    def cache_fingerprint(self) -> tuple:
+        return (
+            self.name,
+            self.coordinator.topology_fingerprint(),
+            self.worker_pin,
+        )
+
+
+register_substrate("cluster", ClusterSubstrate)

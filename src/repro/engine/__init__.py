@@ -83,6 +83,13 @@ from .decode_op import (
     moe_decode_traffic,
 )
 from .request import Request
+from .wire import (
+    WIRE_VERSION,
+    WireError,
+    canonical_bytes,
+    decode_value,
+    encode_value,
+)
 from .runner import (
     build_plan,
     compile_plan,
@@ -128,9 +135,13 @@ __all__ = [
     "RunReport", "ServiceFuture", "ServiceRequest", "ServiceResponse",
     "ServiceStats", "ServiceStopped", "ServiceTimeout",
     "SpMVInputs", "SpMVOp", "Substrate",
+    "WIRE_VERSION", "WireError",
     "args_signature", "autotune", "build_plan", "candidate_grid",
-    "capabilities", "choose_strategy", "compile_plan", "default_cache",
-    "default_probe_store", "default_registry", "execute", "get_substrate",
+    "canonical_bytes",
+    "capabilities", "choose_strategy", "compile_plan", "decode_value",
+    "default_cache",
+    "default_probe_store", "default_registry", "encode_value", "execute",
+    "get_substrate",
     "kernel", "list_substrates",
     "moe_decode_cost_model", "moe_decode_reference", "moe_decode_traffic",
     "moe_dispatch_cost_model",

@@ -52,6 +52,65 @@ class Request:
         if self.timeout is not None and float(self.timeout) < 0:
             raise ValueError(f"timeout must be >= 0, got {self.timeout!r}")
 
+    def to_wire(self) -> dict:
+        """The stable wire form of this request (DESIGN.md §1h): a JSON-
+        compatible dict with dtype/shape-preserving array encoding, shared
+        by the cluster protocol and the dedup content hash. ``op`` travels
+        by name and ``substrate`` by registered name — the receiving
+        process resolves both through its own registries, so a Request
+        round-trips between processes with different object identities but
+        identical computation."""
+        from .wire import WIRE_VERSION, WireError, encode_value
+
+        op = self.op
+        if not isinstance(op, str):
+            op = getattr(op, "name", None)
+            if not isinstance(op, str):
+                raise WireError(
+                    f"op {self.op!r} has no registry name; pass the op by "
+                    "name for wire transport"
+                )
+        substrate = self.substrate
+        if substrate is not None and not isinstance(substrate, str):
+            from .substrate import Substrate, list_substrates
+
+            if not isinstance(substrate, Substrate) or (
+                substrate.name not in list_substrates()
+            ):
+                raise WireError(
+                    f"substrate {substrate!r} is not a registered substrate "
+                    "name; only registered substrates cross the wire"
+                )
+            substrate = substrate.name
+        return {
+            "v": WIRE_VERSION,
+            "op": op,
+            "inputs": encode_value(self.inputs),
+            "strategy": encode_value(self.strategy),
+            "substrate": substrate,
+            "qos": None if self.qos is None else float(self.qos),
+            "timeout": None if self.timeout is None else float(self.timeout),
+        }
+
+    @classmethod
+    def from_wire(cls, payload: dict) -> "Request":
+        """Rebuild a Request from :meth:`to_wire` output."""
+        from .wire import WIRE_VERSION, WireError, decode_value
+
+        version = payload.get("v")
+        if version != WIRE_VERSION:
+            raise WireError(
+                f"wire version mismatch: got {version!r}, expected {WIRE_VERSION}"
+            )
+        return cls(
+            op=payload["op"],
+            inputs=decode_value(payload["inputs"]),
+            strategy=decode_value(payload["strategy"]),
+            substrate=payload.get("substrate"),
+            qos=payload.get("qos"),
+            timeout=payload.get("timeout"),
+        )
+
 
 def warn_kwargs_form(entry: str) -> None:
     """One deprecation warning for a legacy kwargs call, attributed to the

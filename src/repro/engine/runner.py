@@ -56,6 +56,19 @@ def resolve_strategy(
     return strategy
 
 
+def _bind_plan(
+    op: MigratoryOp, inputs: Any, strategy: Any, sub: Substrate
+) -> ExecutionPlan:
+    """op.plan + the substrate's planning overrides: a substrate whose
+    executors the tracer cannot see (``jit_plans=False``, e.g. cluster
+    forwarding over sockets) forces the plan eager regardless of what the
+    op declared."""
+    plan = op.plan(inputs, resolve_strategy(op, inputs, strategy, sub), sub)
+    if not sub.jit_plans:
+        plan.jit = False
+    return plan
+
+
 def build_plan(
     op: "MigratoryOp | str",
     inputs: Any,
@@ -65,7 +78,7 @@ def build_plan(
     """Stage 1: plan. Resolve op/strategy/substrate and bind the inputs."""
     op = resolve_op(op)
     sub = get_substrate(substrate)
-    return op.plan(inputs, resolve_strategy(op, inputs, strategy, sub), sub)
+    return _bind_plan(op, inputs, strategy, sub)
 
 
 def compile_plan(
@@ -204,9 +217,7 @@ def run_request(
     sub = get_substrate(
         request.substrate if request.substrate is not None else "local"
     )
-    plan = op.plan(
-        request.inputs, resolve_strategy(op, request.inputs, request.strategy, sub), sub
-    )
+    plan = _bind_plan(op, request.inputs, request.strategy, sub)
     return run_plan(plan, op, iters=iters, warmup=warmup, cache=cache)
 
 

@@ -59,10 +59,6 @@ import time
 from collections import deque
 from typing import Any
 
-import jax
-
-import numpy as np
-
 from ..core.strategies import MigratoryStrategy
 from .api import RunReport
 from .cache import PlanCache
@@ -196,48 +192,27 @@ class _Group:
     items: "deque[_WorkItem]" = dataclasses.field(default_factory=deque)
 
 
-def _hash_value(h, value: Any) -> None:
-    """Feed one input value into the content hash, by *bytes* for arrays.
-
-    The op input containers (SpMVInputs, MoEDispatchInputs, ...) are plain
-    frozen dataclasses, not registered pytree nodes — ``tree_flatten`` would
-    return them as single leaves whose ``repr`` truncates large arrays, so
-    dataclasses are recursed field-by-field explicitly and every array-like
-    is hashed by its full buffer."""
-    if hasattr(value, "shape") and hasattr(value, "dtype"):
-        arr = np.asarray(value)
-        h.update(repr((arr.shape, str(arr.dtype))).encode())
-        h.update(arr.tobytes())
-        return
-    if dataclasses.is_dataclass(value) and not isinstance(value, type):
-        h.update(type(value).__name__.encode())
-        for field in dataclasses.fields(value):
-            h.update(field.name.encode())
-            _hash_value(h, getattr(value, field.name))
-        return
-    leaves, treedef = jax.tree_util.tree_flatten(value)
-    if len(leaves) == 1 and leaves[0] is value:
-        h.update(repr(value).encode())  # true scalar leaf (int, str, enum, ...)
-        return
-    h.update(repr(treedef).encode())
-    for leaf in leaves:
-        _hash_value(h, leaf)
-
-
 def _content_hash(op: Any, inputs: Any, strategy: Any, substrate: Any) -> str:
     """Value-keyed identity of one request: op name x strategy identity x
     substrate fingerprint x the *bytes* of every input leaf. Two requests
     with equal hashes are the same computation — ops are pure — so the
-    service may answer the second from the first's response."""
+    service may answer the second from the first's response.
+
+    Built on the engine's stable wire encoding
+    (:func:`~repro.engine.wire.canonical_bytes`, DESIGN.md §1h), the same
+    bytes a :class:`~repro.engine.request.Request` serializes to for the
+    cluster protocol — so "identical computation" means exactly one thing
+    whether a duplicate is answered in-process or routed to a worker, and
+    the hash is stable across processes."""
+    from .wire import canonical_bytes
+
     h = hashlib.sha256()
     op_name = op if isinstance(op, str) else getattr(op, "name", repr(op))
-    h.update(repr(op_name).encode())
     strat_id = (
         strategy.cache_key() if isinstance(strategy, MigratoryStrategy) else strategy
     )
-    h.update(repr(strat_id).encode())
+    h.update(canonical_bytes((op_name, strat_id, inputs)))
     h.update(repr(get_substrate(substrate).cache_fingerprint()).encode())
-    _hash_value(h, inputs)
     return h.hexdigest()
 
 
@@ -374,6 +349,10 @@ class ServiceStats:
     worker_requests: "list[int]" = dataclasses.field(default_factory=list)
     worker_steals: "list[int]" = dataclasses.field(default_factory=list)
     worker_occupancy: "list[float]" = dataclasses.field(default_factory=list)
+    #: peak per-worker occupancy observed across stats() snapshots — the
+    #: monotone high-water mark an autoscaler compares against its grow
+    #: threshold even if the pool has since gone idle
+    occupancy_hwm: float = 0.0
 
     @property
     def requests_per_second(self) -> float:
@@ -391,6 +370,32 @@ class ServiceStats:
         if self.slo_target_seconds is None or self.slo_checked == 0:
             return None
         return 1.0 - self.slo_violations / self.slo_checked
+
+    def resize_signal(
+        self, *, grow_above: float = 0.75, shrink_below: float = 0.25
+    ) -> str:
+        """``"grow" | "hold" | "shrink"`` from per-worker occupancy — the
+        elastic-pool resize trigger (ROADMAP) a cluster autoscaler drives.
+
+        - **grow**: mean occupancy at/above ``grow_above`` — every extra
+          worker would have found work; so would an extra process.
+        - **shrink**: more than one worker and even the *busiest* sits
+          at/below ``shrink_below`` — the pool would fit in fewer workers
+          with headroom to spare.
+        - **hold**: everything in between, or nothing observed yet.
+
+        Computed on this snapshot's occupancy columns (busy ÷ serving
+        window); :attr:`occupancy_hwm` carries the historical peak for
+        autoscalers that want hysteresis against a recent burst."""
+        occ = self.worker_occupancy
+        if not occ or self.wall_seconds <= 0.0:
+            return "hold"
+        mean = sum(occ) / len(occ)
+        if mean >= grow_above:
+            return "grow"
+        if len(occ) > 1 and max(occ) <= shrink_below:
+            return "shrink"
+        return "hold"
 
     def to_dict(self) -> dict[str, Any]:
         return {
@@ -431,6 +436,8 @@ class ServiceStats:
             "worker_requests": self.worker_requests,
             "worker_steals": self.worker_steals,
             "worker_occupancy": self.worker_occupancy,
+            "occupancy_hwm": self.occupancy_hwm,
+            "resize_signal": self.resize_signal(),
             "requests_per_second": self.requests_per_second,
             "amortization": self.amortization,
         }
@@ -558,6 +565,7 @@ class EngineService:
         self._drain_wall = 0.0
         self._t_first: "float | None" = None
         self._t_last: "float | None" = None
+        self._occ_hwm = 0.0  # peak per-worker occupancy across snapshots
 
     def __len__(self) -> int:
         """Unserved requests: batch-pending plus worker-admitted in flight."""
@@ -1421,6 +1429,9 @@ class EngineService:
             reqs = list(self._worker_reqs)
             steals = list(self._worker_steal_counts)
             window = max(0.0, worker_wall)
+            occupancy = [b / window if window > 0 else 0.0 for b in busy]
+            if occupancy:
+                self._occ_hwm = max(self._occ_hwm, max(occupancy))
             snapshot = dataclasses.replace(
                 self._stats,
                 wall_seconds=self._drain_wall + window,
@@ -1437,9 +1448,8 @@ class EngineService:
                 worker_busy_seconds=busy,
                 worker_requests=reqs,
                 worker_steals=steals,
-                worker_occupancy=[
-                    b / window if window > 0 else 0.0 for b in busy
-                ],
+                worker_occupancy=occupancy,
+                occupancy_hwm=self._occ_hwm,
                 slo_target_seconds=self.slo_target_seconds,
             )
         waits.sort()

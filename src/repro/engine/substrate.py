@@ -64,6 +64,11 @@ class Substrate:
     #: to one slot (its compiled executable targets that slot's devices) and
     #: is never stolen.
     placement_policy: str = "spread"
+    #: False marks every plan built against this substrate uncompilable by
+    #: ``jax.jit`` — its executors do host-side work the tracer cannot see
+    #: (e.g. the cluster substrate's socket round trip). The planner flips
+    #: ``ExecutionPlan.jit`` off so the plan cache keeps such plans eager.
+    jit_plans: bool = True
 
     def placement_slots(self) -> int:
         """How many pool workers this substrate can keep independently busy.

@@ -1,0 +1,176 @@
+"""Stable wire serialization for engine values (DESIGN.md §1h).
+
+One canonical, JSON-compatible encoding shared by two consumers that must
+agree on request identity:
+
+- the **cluster protocol** (:mod:`repro.cluster.protocol`): a ``Request``
+  crosses a process boundary as ``Request.to_wire()`` and is rebuilt with
+  ``Request.from_wire()`` — dtype/shape-preserving, bit-exact array round
+  trips (raw buffer in base64, no float repr loss);
+- the **dedup content hash** (:func:`~repro.engine.service._content_hash`):
+  the sha256 of :func:`canonical_bytes` over the same encoding, so "two
+  requests are the same computation" means exactly "they serialize to the
+  same wire bytes" — a request deduped in-process and a request routed to a
+  worker share one identity.
+
+Encoding rules (``encode_value``):
+
+- JSON scalars (``None``/bool/int/float/str) pass through.
+- Array-likes (anything with ``shape``+``dtype``) become
+  ``{"__wire__": "nd", "dtype", "shape", "data"}`` with ``data`` the
+  base64 of the C-order buffer. Decoding returns a NumPy array — the
+  kernels convert lazily, and NumPy preserves dtypes (e.g. int64) that an
+  eager ``jnp.asarray`` would downcast under default x64 settings.
+- Dataclasses become ``{"__wire__": "dc", "cls": "module:qualname",
+  "fields": {...}}``. Decoding imports the class, **restricted to
+  ``repro.*`` modules** — the wire format never instantiates arbitrary
+  types.
+- Enums (``{"__wire__": "enum"}``) and tuples (``{"__wire__": "tuple"}``)
+  are tagged so they survive JSON's list/str flattening; dicts are tagged
+  with sorted items so plain mappings can't collide with wire tags and the
+  canonical bytes are order-independent.
+- Anything else falls back to ``{"__wire__": "repr"}`` — good enough to
+  *hash* (dedup identity keeps working for exotic inputs) but refused by
+  ``decode_value`` (a cluster cannot rebuild a value from its repr).
+
+``canonical_bytes`` is ``json.dumps(encode_value(v), sort_keys=True)``
+encoded UTF-8: deterministic across processes and Python hash seeds.
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import enum
+import importlib
+import json
+from typing import Any
+
+import numpy as np
+
+WIRE_VERSION = 1
+
+_TAG = "__wire__"
+_ALLOWED_MODULE_PREFIX = "repro."
+
+
+class WireError(ValueError):
+    """A value cannot be encoded for, or decoded from, the wire."""
+
+
+def _class_path(cls: type) -> str:
+    return f"{cls.__module__}:{cls.__qualname__}"
+
+
+def _resolve_class(path: str) -> type:
+    module, _, qualname = path.partition(":")
+    if not (module.startswith(_ALLOWED_MODULE_PREFIX) or module == "repro"):
+        raise WireError(
+            f"refusing to resolve wire class {path!r}: only repro.* types "
+            "may cross the wire"
+        )
+    obj: Any = importlib.import_module(module)
+    for part in qualname.split("."):
+        obj = getattr(obj, part)
+    if not isinstance(obj, type):
+        raise WireError(f"wire class path {path!r} is not a class")
+    return obj
+
+
+def encode_value(value: Any) -> Any:
+    """Encode ``value`` into the JSON-compatible wire form (module doc)."""
+    if isinstance(value, enum.Enum):
+        # before the scalar pass-through: str/int-mixin enums (Comm, Layout,
+        # Scheme) must round-trip as enum members, not bare scalars
+        return {
+            _TAG: "enum",
+            "cls": _class_path(type(value)),
+            "value": encode_value(value.value),
+        }
+    if value is None or isinstance(value, (bool, int, str)):
+        return value
+    if isinstance(value, float):
+        return value  # json round-trips NaN/Infinity via its literals
+    if hasattr(value, "shape") and hasattr(value, "dtype"):
+        arr = np.ascontiguousarray(np.asarray(value))
+        if arr.dtype == object:
+            raise WireError("object-dtype arrays cannot cross the wire")
+        return {
+            _TAG: "nd",
+            "dtype": str(arr.dtype),
+            "shape": list(arr.shape),
+            "data": base64.b64encode(arr.tobytes()).decode("ascii"),
+        }
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        return {
+            _TAG: "dc",
+            "cls": _class_path(type(value)),
+            "fields": {
+                f.name: encode_value(getattr(value, f.name))
+                for f in dataclasses.fields(value)
+            },
+        }
+    if isinstance(value, tuple):
+        return {_TAG: "tuple", "items": [encode_value(v) for v in value]}
+    if isinstance(value, list):
+        return {_TAG: "list", "items": [encode_value(v) for v in value]}
+    if isinstance(value, dict):
+        items = [
+            [encode_value(k), encode_value(v)] for k, v in value.items()
+        ]
+        items.sort(key=lambda kv: json.dumps(kv[0], sort_keys=True, default=str))
+        return {_TAG: "dict", "items": items}
+    # hash-only fallback: identity for dedup, but not reconstructable
+    return {_TAG: "repr", "repr": repr(value), "cls": _class_path(type(value))}
+
+
+def decode_value(value: Any) -> Any:
+    """Rebuild a value from its wire form. Raises :class:`WireError` for
+    hash-only (``repr``) payloads and non-``repro.*`` classes."""
+    if value is None or isinstance(value, (bool, int, float, str)):
+        return value
+    if isinstance(value, list):  # bare lists never appear, but be lenient
+        return [decode_value(v) for v in value]
+    if not isinstance(value, dict):
+        raise WireError(f"unexpected wire value of type {type(value).__name__}")
+    tag = value.get(_TAG)
+    if tag == "nd":
+        raw = base64.b64decode(value["data"])
+        arr = np.frombuffer(raw, dtype=np.dtype(value["dtype"]))
+        return arr.reshape(tuple(value["shape"])).copy()
+    if tag == "enum":
+        cls = _resolve_class(value["cls"])
+        return cls(decode_value(value["value"]))
+    if tag == "dc":
+        cls = _resolve_class(value["cls"])
+        fields = {k: decode_value(v) for k, v in value["fields"].items()}
+        return cls(**fields)
+    if tag == "tuple":
+        return tuple(decode_value(v) for v in value["items"])
+    if tag == "list":
+        return [decode_value(v) for v in value["items"]]
+    if tag == "dict":
+        return {decode_value(k): decode_value(v) for k, v in value["items"]}
+    if tag == "repr":
+        raise WireError(
+            f"value of type {value.get('cls')!r} was encoded hash-only "
+            "(repr fallback) and cannot be decoded"
+        )
+    raise WireError(f"unknown wire tag {tag!r}")
+
+
+def canonical_bytes(value: Any) -> bytes:
+    """Deterministic byte encoding of ``value`` — the dedup-hash payload.
+    Stable across processes: sorted keys, no whitespace, UTF-8."""
+    return json.dumps(
+        encode_value(value), sort_keys=True, separators=(",", ":")
+    ).encode("utf-8")
+
+
+def dumps(value: Any) -> bytes:
+    """Wire bytes for a protocol message body (canonical form, so equal
+    values produce equal frames)."""
+    return canonical_bytes(value)
+
+
+def loads(data: bytes) -> Any:
+    return decode_value(json.loads(data.decode("utf-8")))

@@ -26,6 +26,13 @@ cross-checked token-for-token against the single-process oracle.
 
     PYTHONPATH=src python -m repro.launch.serve --decode-serve \
         --serve-dispatch ep_pull --serve-slo-ms 2000
+
+Cluster path (DESIGN.md §1h): serve the same mixed-op stream on an
+N-worker multi-process cluster with a bit-parity cross-check against
+single-process ``engine.run``; ``--cluster-kill-one`` SIGKILLs a worker
+mid-stream to demonstrate heartbeat/EOF failover.
+
+    PYTHONPATH=src python -m repro.launch.serve --cluster 2 [--cluster-kill-one]
 """
 from __future__ import annotations
 
@@ -220,6 +227,64 @@ def decode_serve_demo(
     return report
 
 
+def cluster_demo(
+    n_workers: int,
+    n_requests: int = 24,
+    shapes: tuple[int, ...] = (16, 24),
+    seed: int = 0,
+    kill_one: bool = False,
+) -> dict:
+    """Serve the mixed irregular-op stream on a multi-process cluster
+    (DESIGN.md §1h) and cross-check every response bit-for-bit against
+    single-process ``engine.run``. ``kill_one=True`` SIGKILLs one worker
+    mid-stream to demonstrate failover: every future still terminates and
+    parity still holds (in-flight requests are retried once on a
+    survivor)."""
+    import numpy as np
+
+    from ..cluster import launch_cluster
+    from ..engine import Request, run
+
+    pick = _ops_workload(shapes, seed)
+    requests = [Request(*pick(i)) for i in range(n_requests)]
+    t_start = time.perf_counter()
+    with launch_cluster(n_workers) as cluster:
+        t_up = time.perf_counter() - t_start
+        t0 = time.perf_counter()
+        futures = [cluster.submit(r) for r in requests]
+        if kill_one and n_workers > 1:
+            victim = cluster.coordinator.healthy_workers()[0].worker_id
+            print(f"SIGKILLing worker {victim} mid-stream ...")
+            cluster.kill_worker(victim)
+        responses = [f.result() for f in futures]  # every future terminates
+        wall = time.perf_counter() - t0
+        mismatches = 0
+        for request, response in zip(requests, responses):
+            oracle, _ = run(request, iters=1, warmup=0)
+            if not np.array_equal(np.asarray(response.result), np.asarray(oracle)):
+                mismatches += 1
+        stats = cluster.stats()
+    per_worker = {
+        w["worker_id"]: w["served"] for w in stats["workers"]
+    }
+    print(f"cluster up ({n_workers} workers) in {t_up:.1f}s; served "
+          f"{len(responses)} requests in {wall*1e3:.0f} ms "
+          f"({len(responses)/max(wall, 1e-9):.0f} req/s)")
+    print(f"per-worker served: {per_worker}, retries: {stats['retries']}, "
+          f"failovers: {stats['failovers']}, mismatches: {mismatches}")
+    report = {
+        "n_workers": n_workers,
+        "requests": len(responses),
+        "wall_seconds": wall,
+        "mismatches": mismatches,
+        "cluster": stats,
+    }
+    print(json.dumps(report, default=str))
+    if mismatches:
+        raise SystemExit(f"{mismatches} responses diverged from engine.run")
+    return report
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b")
@@ -247,8 +312,19 @@ def main(argv=None) -> None:
     ap.add_argument("--serve-nodelets", type=int, default=4)
     ap.add_argument("--serve-slo-ms", type=float, default=5000.0,
                     help="per-request SLO target in ms for --decode-serve")
+    ap.add_argument("--cluster", type=int, default=0, metavar="N",
+                    help="serve the mixed-op stream on an N-worker localhost "
+                         "cluster (multi-process, DESIGN.md §1h) with "
+                         "bit-parity cross-check against engine.run")
+    ap.add_argument("--cluster-kill-one", action="store_true",
+                    help="with --cluster: SIGKILL one worker mid-stream to "
+                         "demonstrate failover")
     args = ap.parse_args(argv)
 
+    if args.cluster:
+        cluster_demo(args.cluster, n_requests=args.ops_requests,
+                     kill_one=args.cluster_kill_one)
+        return
     if args.decode_serve:
         workers = args.ops_workers if args.ops_workers == "auto" else int(args.ops_workers)
         decode_serve_demo(args.serve_seqs, dispatch=args.serve_dispatch,

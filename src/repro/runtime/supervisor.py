@@ -105,6 +105,80 @@ def run_supervised(
             raise
 
 
+@dataclasses.dataclass
+class ProcessEvent:
+    """One supervision observation: a watched process exited."""
+
+    name: str
+    returncode: "int | None"
+    restarted: bool
+    restarts: int
+
+
+class ProcessSupervisor:
+    """The restart half of the supervisor, generalized to OS processes.
+
+    :func:`run_supervised` supervises a training loop in-process; the
+    cluster launcher (``repro.cluster.launch``) needs the same policy —
+    bounded restarts, audible exits — over worker *subprocesses*. The
+    supervisor stays transport-agnostic: ``watch()`` takes the process
+    handle plus ``alive``/``restart`` callables (the launch backend's),
+    and :meth:`poll` reports exits as :class:`ProcessEvent`\\ s, invoking
+    ``restart`` while the per-process budget (``max_restarts``) lasts.
+    ``max_restarts=0`` is pure exit detection — the cluster coordinator's
+    failover handles the work; the supervisor handles the *process*.
+    """
+
+    def __init__(self, max_restarts: int = 0):
+        self.max_restarts = max_restarts
+        self._watched: dict[str, dict] = {}
+
+    def watch(
+        self,
+        name: str,
+        handle: Any,
+        *,
+        alive: Callable[[Any], bool],
+        restart: "Callable[[], Any] | None" = None,
+    ) -> None:
+        self._watched[name] = {
+            "handle": handle, "alive": alive, "restart": restart,
+            "restarts": 0, "down": False,
+        }
+
+    def handles(self) -> "dict[str, Any]":
+        return {name: w["handle"] for name, w in self._watched.items()}
+
+    def poll(self) -> "list[ProcessEvent]":
+        """Check every watched process once; restart the dead within
+        budget. Idempotent on processes already seen down."""
+        events: list[ProcessEvent] = []
+        for name, w in self._watched.items():
+            if w["down"] or w["alive"](w["handle"]):
+                continue
+            returncode = getattr(w["handle"], "returncode", None)
+            can_restart = (
+                w["restart"] is not None and w["restarts"] < self.max_restarts
+            )
+            if can_restart:
+                w["restarts"] += 1
+                w["handle"] = w["restart"]()
+                log.warning(
+                    "process %s exited (rc=%s); restarted (%d/%d)",
+                    name, returncode, w["restarts"], self.max_restarts,
+                )
+            else:
+                w["down"] = True
+                log.warning(
+                    "process %s exited (rc=%s); restart budget exhausted",
+                    name, returncode,
+                )
+            events.append(
+                ProcessEvent(name, returncode, can_restart, w["restarts"])
+            )
+        return events
+
+
 def straggler_report(step_times: list, threshold: float = 1.5) -> dict:
     """Flag steps slower than threshold x median — the metric a straggler
     mitigation (re-balance/evict) loop watches."""

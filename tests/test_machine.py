@@ -358,3 +358,59 @@ def test_probe_store_roundtrip_carries_this_machine(tmp_path):
     assert entry["machine"] == json.dumps(
         machine_fingerprint(), sort_keys=True, default=str
     )
+
+
+# -- op cost-model memory declarations (§1f calibration contract) --------------
+
+
+def test_moe_dispatch_declares_memory_class_and_model_consumes_it():
+    """ISSUE 9 satellite pin: ``moe_dispatch``'s cost model declares its
+    per-launch working set (``memory_bytes_per_launch`` + stream access
+    class), and ``PerformanceModel.predict_parts`` charges exactly that —
+    launches x bytes at STREAM rate — not the generic bytes_moved/gather
+    fallback. Guards the declaration from silently regressing to the
+    fallback (a 4x rate error on the synthetic profile)."""
+    import dataclasses
+
+    from repro.engine import MoEDispatchInputs, rank_strategies
+
+    rng = np.random.default_rng(0)
+    inputs = MoEDispatchInputs(
+        x=jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32)),
+        router=jnp.asarray(rng.standard_normal((16, 8)).astype(np.float32)),
+        nodelets=4,
+    )
+    profile = _calibrated_profile()
+    model = PerformanceModel(profile)
+    ranked = rank_strategies("moe_dispatch", inputs, machine=profile)
+    assert ranked
+    local = profile.substrate("local")
+    assert local.access_bw("stream") != local.access_bw("gather")
+    for est in ranked:
+        detail = est.detail
+        assert detail["memory_access"] == "stream"
+        assert detail["memory_bytes_per_launch"] > 0
+        assert "collective_launches" in detail
+
+        parts = model.predict_parts(est, "local")
+        launches = max(1.0, float(detail["collective_launches"]))
+        expected = (
+            launches * float(detail["memory_bytes_per_launch"])
+            / local.access_bw("stream")
+        )
+        assert parts["memory"] == pytest.approx(expected)
+
+        # strip the declaration: the model must fall back to charging
+        # bytes_moved at gather rate, which predicts a different memory term
+        stripped = dataclasses.replace(est, detail={
+            k: v for k, v in detail.items()
+            if k not in ("memory_bytes_per_launch", "memory_access")
+        })
+        fallback = model.predict_parts(
+            stripped, "local",
+            bytes_moved=float(detail["memory_bytes_per_launch"]),
+        )
+        assert fallback["memory"] == pytest.approx(
+            float(detail["memory_bytes_per_launch"]) / local.access_bw("gather")
+        )
+        assert fallback["memory"] != pytest.approx(parts["memory"])
