@@ -25,6 +25,16 @@ to the single-process baseline on the identical stream. At smoke sizes
 the wire + IPC overhead dominates tiny kernels, so the ratio is reported,
 not gated — the gated signal here is correctness of distribution, which
 is what the PR-5 pool gates cannot see.
+
+The **data-plane phase** (PR 10) serves the decode-serving traffic shape
+— one large shared operand plus a fresh small vector per request — and
+compares actual bytes on the wire (protocol v2: out-of-band segments +
+content-addressed blobs, submit coalescing) against what the v1 encoding
+(8-byte prefix + fully inline base64 JSON) would have spent on the same
+stream. ``--require-wire-reduction X`` turns the ratio into a fail-closed
+gate: v1/v2 must be >= X and the shared operand must actually have been
+served by reference (``blob_hits > 0``), both also recorded in the stats
+artifact.
 """
 from __future__ import annotations
 
@@ -84,6 +94,42 @@ def _workload(n_requests: int, seed: int = 0):
     return requests
 
 
+def _data_plane_workload(n_requests: int, seed: int = 7):
+    """Decode-serving traffic shape: one large shared operand (crosses as a
+    content-addressed blob) + a fresh small vector per request (crosses as
+    a raw frame segment — the per-step delta)."""
+    import jax.numpy as jnp
+
+    from repro.core import partition_ell
+    from repro.engine import Request, SpMVInputs
+    from repro.sparse import laplacian_2d
+
+    rng = np.random.default_rng(seed)
+    # cols + vals are ~80 KiB each — above the 64 KiB blob threshold
+    a = partition_ell(laplacian_2d(64), 8)
+    n = 64 * 64
+    return [
+        Request(
+            "spmv",
+            SpMVInputs(
+                a, jnp.asarray(rng.standard_normal(n).astype(np.float32))
+            ),
+        )
+        for _ in range(n_requests)
+    ]
+
+
+def _v1_frame_bytes(request) -> int:
+    """Bytes the v1 wire (8-byte length prefix + fully inline base64 JSON
+    frame) would have spent on one submit of this request."""
+    payload = request.to_wire()  # no segments/blob_sink == the v1 encoding
+    frame = json.dumps(
+        {"kind": "submit", "request": payload, "ticket": 0},
+        separators=(",", ":"),
+    ).encode("utf-8")
+    return 8 + len(frame)
+
+
 def _bit_identical(a, b) -> bool:
     import jax
 
@@ -96,7 +142,12 @@ def _bit_identical(a, b) -> bool:
     )
 
 
-def run(full: bool = False, quick: bool = False, n_workers: int = 2) -> list:
+def run(
+    full: bool = False,
+    quick: bool = False,
+    n_workers: int = 2,
+    require_wire_reduction: "float | None" = None,
+) -> list:
     from repro.cluster import launch_cluster
     from repro.engine import EngineService, Request, run as engine_run
 
@@ -146,6 +197,30 @@ def run(full: bool = False, quick: bool = False, n_workers: int = 2) -> list:
         )
         resize = svc.stats().resize_signal()
 
+        # data-plane phase: repeated-large-input stream; the shared operand
+        # ships once per worker as a blob, later submits carry only deltas
+        dp_n = 8 if quick else (24 if full else 12)
+        dp_requests = _data_plane_workload(dp_n)
+        dp_oracles = [engine_run(r, iters=1, warmup=0)[0] for r in dp_requests]
+        before = cluster.stats()
+        t0 = time.perf_counter()
+        dp_responses = [
+            f.result() for f in [cluster.submit(r) for r in dp_requests]
+        ]
+        dp_wall = time.perf_counter() - t0
+        after = cluster.stats()
+        dp_mismatches = sum(
+            0 if _bit_identical(resp.result, oracle) else 1
+            for resp, oracle in zip(dp_responses, dp_oracles)
+        )
+        v2_bytes = after["wire_bytes_sent"] - before["wire_bytes_sent"]
+        blob_hits = after["blob_hits"] - before["blob_hits"]
+        blob_misses = after["blob_misses"] - before["blob_misses"]
+        t0 = time.perf_counter()
+        v1_bytes = sum(_v1_frame_bytes(r) for r in dp_requests)
+        v1_encode_wall = time.perf_counter() - t0
+        wire_reduction = v1_bytes / max(v2_bytes, 1)
+
         stats = cluster.stats()
         worker_stats = {
             w["worker_id"]: cluster.coordinator.worker_stats(w["worker_id"])
@@ -169,6 +244,16 @@ def run(full: bool = False, quick: bool = False, n_workers: int = 2) -> list:
         kernel_calls=int(stats["kernel_calls"]),
         mismatches=pool_mismatches, resize_signal=resize,
     ))
+    rows.append(emit(
+        "cluster", "data_plane", dp_wall,
+        requests=dp_n, req_per_s=dp_n / max(dp_wall, 1e-9),
+        v1_bytes=v1_bytes, v2_bytes=v2_bytes,
+        wire_reduction=round(wire_reduction, 2),
+        blob_hits=blob_hits, blob_misses=blob_misses,
+        submits_coalesced=int(stats["submits_coalesced"]),
+        v1_encode_seconds=round(v1_encode_wall, 4),
+        mismatches=dp_mismatches,
+    ))
 
     STATS_PATH.parent.mkdir(parents=True, exist_ok=True)
     STATS_PATH.write_text(json.dumps({
@@ -180,6 +265,21 @@ def run(full: bool = False, quick: bool = False, n_workers: int = 2) -> list:
         "mismatches": mismatches,
         "pool_mismatches": pool_mismatches,
         "resize_signal": resize,
+        "blob_hits": blob_hits,
+        "data_plane": {
+            "requests": dp_n,
+            "wall_seconds": dp_wall,
+            "v1_bytes": v1_bytes,
+            "v2_bytes": v2_bytes,
+            "wire_reduction": wire_reduction,
+            "blob_hits": blob_hits,
+            "blob_misses": blob_misses,
+            "submit_frames": int(stats["submit_frames"]),
+            "submits_coalesced": int(stats["submits_coalesced"]),
+            "v1_encode_seconds": v1_encode_wall,
+            "mismatches": dp_mismatches,
+            "require_wire_reduction": require_wire_reduction,
+        },
         "coordinator": stats,
         "worker_service_stats": worker_stats,
     }, indent=2, default=str))
@@ -189,11 +289,25 @@ def run(full: bool = False, quick: bool = False, n_workers: int = 2) -> list:
     # run still uploads the stats that explain it
     if not responses:
         raise RuntimeError("cluster suite served zero requests")
-    if mismatches or pool_mismatches:
+    if mismatches or pool_mismatches or dp_mismatches:
         raise RuntimeError(
-            f"cluster parity broken: {mismatches} submit-path and "
-            f"{pool_mismatches} pool-path responses diverged from engine.run"
+            f"cluster parity broken: {mismatches} submit-path, "
+            f"{pool_mismatches} pool-path, and {dp_mismatches} data-plane "
+            "responses diverged from engine.run"
         )
+    if require_wire_reduction:
+        if blob_hits <= 0:
+            raise RuntimeError(
+                "data-plane phase recorded zero blob_hits: the repeated "
+                "operand was re-shipped every submit instead of served by "
+                "reference"
+            )
+        if wire_reduction < require_wire_reduction:
+            raise RuntimeError(
+                f"wire reduction {wire_reduction:.2f}x "
+                f"({v1_bytes} -> {v2_bytes} bytes) is below the "
+                f"required {require_wire_reduction:g}x"
+            )
     if workers_used < min(2, n_workers):
         raise RuntimeError(
             f"requests were not distributed: per-worker served={served} "

@@ -110,6 +110,13 @@ def main(argv=None) -> None:
         "experiments/cluster_stats.json)",
     )
     ap.add_argument(
+        "--require-wire-reduction", type=float, default=0.0, metavar="X",
+        help="with the cluster suite: fail unless the data-plane phase "
+        "moved at least X times fewer bytes than the v1 inline encoding "
+        "would have, with blob_hits > 0 (asserted inside the suite and "
+        "recorded in experiments/cluster_stats.json; CI uses 3)",
+    )
+    ap.add_argument(
         "--machine-file", default=None,
         help="run suites against this pinned machine file "
         "(sets REPRO_MACHINE_PATH for this process)",
@@ -141,6 +148,14 @@ def main(argv=None) -> None:
                      "--bench cluster")
         if args.cluster < 1:
             ap.error("--cluster needs at least 1 worker (CI uses 2)")
+    # the wire gate fails closed: without the cluster suite in the run
+    # there is no data-plane phase to measure, and an unmeasured gate must
+    # not pass green
+    if args.require_wire_reduction > 0 and args.cluster is None and (
+        args.bench != "cluster"
+    ):
+        ap.error("--require-wire-reduction gates the cluster suite's "
+                 "data-plane phase; use --cluster N (or --bench cluster)")
     # the SLO gate fails closed too: gating p99 without the serve suite's
     # decode phase in the run would exit green having measured nothing
     if args.require_p99 > 0 and args.bench not in (None, "serve"):
@@ -190,6 +205,7 @@ def main(argv=None) -> None:
             all_rows.extend(SUITES[name](
                 full=args.full, quick=args.quick,
                 n_workers=args.cluster if args.cluster is not None else 2,
+                require_wire_reduction=args.require_wire_reduction or None,
             ))
         else:
             all_rows.extend(SUITES[name](full=args.full, quick=args.quick))

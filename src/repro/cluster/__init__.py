@@ -11,14 +11,23 @@ The serving plane, out of one process (DESIGN.md §1h):
         # ... or drive the PR-5 pool across processes:
         svc = EngineService(substrate="cluster", workers="auto")
 
-Pieces: a length-prefixed JSON protocol (:mod:`.protocol`), worker
+Pieces: a binary-framed v2 protocol — JSON envelope + raw out-of-band
+tensor segments (:mod:`.protocol`), a content-addressed blob store so
+repeated large inputs ship once per worker (:mod:`.blobs`), worker
 processes each running their own ``EngineService`` (:mod:`.worker`), a
-coordinator owning admission/routing/heartbeats/failover
-(:mod:`.coordinator`), a ``"cluster"`` substrate whose placement slots
-span processes (:mod:`.substrate`), and a launcher with pluggable
-process backends (:mod:`.launch`). Importing this package registers the
-substrate.
+coordinator owning admission/routing/heartbeats/failover plus the
+data-plane writer that coalesces submits (:mod:`.coordinator`), a
+``"cluster"`` substrate whose placement slots span processes
+(:mod:`.substrate`), and a launcher with pluggable process backends
+(:mod:`.launch`). Importing this package registers the substrate.
 """
+from .blobs import (
+    BlobDigestMismatch,
+    BlobError,
+    BlobMissing,
+    BlobStore,
+    blob_digest,
+)
 from .coordinator import (
     ClusterError,
     ClusterFuture,
@@ -44,6 +53,10 @@ from .substrate import (
 )
 
 __all__ = [
+    "BlobDigestMismatch",
+    "BlobError",
+    "BlobMissing",
+    "BlobStore",
     "Cluster",
     "ClusterError",
     "ClusterFuture",
@@ -59,6 +72,7 @@ __all__ = [
     "WorkerState",
     "activate_cluster",
     "active_cluster",
+    "blob_digest",
     "deactivate_cluster",
     "launch_cluster",
 ]

@@ -1,0 +1,243 @@
+"""Content-addressed blob store for the cluster data plane (DESIGN.md §1h).
+
+The Emu discipline, applied to the wire: move the lightweight context
+(the request envelope) to where the bulk data already lives, never the
+bulk data itself. Large arrays are addressed by the sha256 of their
+canonical wire bytes (:func:`repro.engine.wire.content_digest` — the same
+identity the dedup cache hashes), shipped to a worker **once** as a
+``put_blob`` frame, and referenced thereafter as
+``{"__wire__": "blobref", "digest": ...}`` — steady-state serving moves
+per-step deltas, not the expert weights / adjacency structures the worker
+already holds.
+
+Both ends hold a :class:`BlobStore`:
+
+- the **worker's** store is the authoritative byte-budgeted LRU the
+  decode path resolves blobrefs against. On a miss (evicted, or a
+  coordinator's stale belief) the worker sends ``need_blob`` and blocks
+  that request in :meth:`BlobStore.ensure` until the blob is re-shipped —
+  or the coordinator answers ``blob_gone``, which tombstones the digest
+  and fails the request instead of hanging it.
+- the **coordinator's** store keeps recently-shipped blobs for
+  ``need_blob`` re-fetches and failover re-shipping (in-flight requests
+  additionally pin their blobs on the ``_Inflight`` entry, so a retry can
+  always re-ship even past coordinator-side eviction).
+
+Budgets/thresholds (env-overridable, read at store/coordinator creation):
+
+- ``REPRO_BLOB_MIN_BYTES`` (default 64 KiB) — arrays below this ride the
+  frame inline as ``ndref`` segments; blob bookkeeping only pays off when
+  re-shipping would hurt.
+- ``REPRO_BLOB_BUDGET_BYTES`` (default 256 MiB) — per-store LRU byte
+  budget. A single blob larger than the budget is still admitted alone
+  (refusing it would deadlock the request that needs it).
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Callable
+
+import numpy as np
+
+from ..engine.wire import content_digest
+
+DEFAULT_BLOB_MIN_BYTES = 64 << 10
+DEFAULT_BLOB_BUDGET_BYTES = 256 << 20
+
+
+def _env_bytes(name: str, default: int) -> int:
+    raw = os.environ.get(name)
+    if not raw:
+        return default
+    try:
+        return max(1, int(raw))
+    except ValueError:
+        return default
+
+
+def blob_min_bytes_default() -> int:
+    """Arrays at/above this many bytes become blobrefs (coordinator side)."""
+    return _env_bytes("REPRO_BLOB_MIN_BYTES", DEFAULT_BLOB_MIN_BYTES)
+
+
+def blob_budget_bytes_default() -> int:
+    """Per-store LRU byte budget."""
+    return _env_bytes("REPRO_BLOB_BUDGET_BYTES", DEFAULT_BLOB_BUDGET_BYTES)
+
+
+def blob_digest(array: Any) -> str:
+    """Content address of one array: :func:`content_digest` of its
+    canonical wire form — dtype/shape-aware and bit-exact, so two arrays
+    share a digest iff they are the same tensor."""
+    arr = np.ascontiguousarray(np.asarray(array))
+    return content_digest(arr)
+
+
+class BlobError(RuntimeError):
+    """A blob the data plane needs cannot be produced."""
+
+
+class BlobDigestMismatch(BlobError):
+    """A shipped blob's bytes do not hash to its claimed digest."""
+
+
+class BlobMissing(BlobError):
+    """A blobref resolved against a store that does not hold the digest."""
+
+    def __init__(self, digest: str):
+        super().__init__(f"blob {digest} is not in the store")
+        self.digest = digest
+
+
+class BlobStore:
+    """Byte-budgeted LRU of content-addressed arrays, with waiter support.
+
+    Thread-safe. ``put`` verifies the digest by default (a worker must
+    refuse corrupt shipments — :class:`BlobDigestMismatch`), stores the
+    array read-only, and wakes any :meth:`ensure` waiters. Eviction is
+    LRU by last ``get``/``put`` touch, down to the byte budget.
+    """
+
+    def __init__(self, budget_bytes: "int | None" = None):
+        self.budget_bytes = (
+            blob_budget_bytes_default() if budget_bytes is None else int(budget_bytes)
+        )
+        self._cond = threading.Condition()
+        self._entries: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        self._gone: "set[str]" = set()  # coordinator said blob_gone
+        self.bytes_stored = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.inserted = 0
+
+    def __contains__(self, digest: str) -> bool:
+        with self._cond:
+            return digest in self._entries
+
+    def __len__(self) -> int:
+        with self._cond:
+            return len(self._entries)
+
+    def get(self, digest: str) -> "np.ndarray | None":
+        """The stored array (LRU-touched) or None. Does not count stats —
+        use :meth:`resolve` on the decode path."""
+        with self._cond:
+            arr = self._entries.get(digest)
+            if arr is not None:
+                self._entries.move_to_end(digest)
+            return arr
+
+    def resolve(self, digest: str) -> np.ndarray:
+        """Decode-path lookup: the array, or :class:`BlobMissing`."""
+        with self._cond:
+            arr = self._entries.get(digest)
+            if arr is None:
+                raise BlobMissing(digest)
+            self._entries.move_to_end(digest)
+            self.hits += 1
+            return arr
+
+    def put(self, digest: str, array: Any, *, verify: bool = True) -> np.ndarray:
+        """Admit one blob; evict LRU entries past the byte budget. With
+        ``verify`` (the worker-side default) the bytes must hash back to
+        ``digest`` — a mismatched shipment is refused, never stored."""
+        arr = np.ascontiguousarray(np.asarray(array))
+        if verify:
+            actual = content_digest(arr)
+            if actual != digest:
+                raise BlobDigestMismatch(
+                    f"blob claimed digest {digest} but its bytes hash to "
+                    f"{actual}; refusing the shipment"
+                )
+        arr = arr.copy() if not arr.flags.owndata else arr
+        arr.setflags(write=False)
+        with self._cond:
+            self._gone.discard(digest)
+            if digest in self._entries:
+                self._entries.move_to_end(digest)
+                return self._entries[digest]
+            self._entries[digest] = arr
+            self.bytes_stored += arr.nbytes
+            self.inserted += 1
+            # a single over-budget blob stays (alone); everything else LRUs out
+            while self.bytes_stored > self.budget_bytes and len(self._entries) > 1:
+                old_digest, old = self._entries.popitem(last=False)
+                self.bytes_stored -= old.nbytes
+                self.evictions += 1
+            self._cond.notify_all()
+            return arr
+
+    def mark_gone(self, digest: str) -> None:
+        """The coordinator cannot produce this digest (``blob_gone``):
+        tombstone it so :meth:`ensure` waiters fail instead of timing out."""
+        with self._cond:
+            self._gone.add(digest)
+            self._cond.notify_all()
+
+    def missing(self, digests: "list[str]") -> "list[str]":
+        with self._cond:
+            return [d for d in digests if d not in self._entries]
+
+    def ensure(
+        self,
+        digests: "list[str]",
+        request_missing: "Callable[[list[str]], None]",
+        timeout: float = 60.0,
+    ) -> None:
+        """Block until every digest is present **simultaneously**. Missing
+        digests are asked for via ``request_missing`` (the worker's
+        ``need_blob`` send); arrival of ``put_blob``/``blob_gone`` frames
+        wakes the wait. A digest that was present (or even one that just
+        arrived) can be LRU-evicted by another ``put`` before the full set
+        is satisfied — such digests are **re-requested**, so the wait
+        converges whenever the budget can hold the whole set at once
+        (needed blobs land MRU; eviction eats the cold tail). Raises
+        :class:`BlobError` on a tombstoned digest or timeout."""
+        deadline = time.monotonic() + timeout
+        requested: "set[str]" = set()  # asked for and not yet arrived
+        while True:
+            with self._cond:
+                gone = [d for d in digests if d in self._gone]
+                if gone:
+                    raise BlobError(
+                        f"blob(s) {gone} are gone at the coordinator and "
+                        "cannot be re-fetched"
+                    )
+                still = [d for d in digests if d not in self._entries]
+                if not still:
+                    return
+                # an arrived-then-evicted digest leaves `requested` here,
+                # making it re-askable below
+                requested &= set(still)
+                to_ask = [d for d in still if d not in requested]
+                if to_ask:
+                    self.misses += len(to_ask)
+                    requested.update(to_ask)
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise BlobError(
+                            f"timed out after {timeout:.0f}s waiting for "
+                            f"blob(s) {still}"
+                        )
+                    self._cond.wait(remaining)
+                    continue
+            # outside the lock: request_missing sends on the wire, and the
+            # reader thread that answers needs the lock to put()
+            request_missing(to_ask)
+
+    def stats(self) -> "dict[str, Any]":
+        with self._cond:
+            return {
+                "blobs": len(self._entries),
+                "bytes_stored": self.bytes_stored,
+                "budget_bytes": self.budget_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "inserted": self.inserted,
+            }

@@ -32,6 +32,18 @@ A request whose retry also dies fails its future with
 :class:`WorkerFailure` — every submitted future terminates, always.
 Remote *computation* errors are not retried (they are deterministic); they
 re-raise as :class:`RemoteOpError`.
+
+**Data plane (protocol v2)**: every outgoing submit/kernel_call encodes
+its arrays out-of-band — raw frame segments for small ones, and
+content-addressed ``blobref``\ s for arrays at/above ``blob_min_bytes``.
+Blob bytes ship to a given worker **once** (``put_blob``), tracked in the
+per-worker ``blob_digests`` belief set; re-submits of the same tensor send
+only its digest. Workers that evicted a blob ask for it back with
+``need_blob``; failover re-ships an in-flight request's pinned blobs to
+the survivor before replaying the request, so retries stay bit-identical.
+Submits to the same worker are coalesced by a per-worker writer thread
+into one ``submit_many`` frame under ``flush_window`` — continuous-batch
+decode traffic pays one syscall + frame per flush, not per request.
 """
 from __future__ import annotations
 
@@ -39,15 +51,18 @@ import dataclasses
 import enum
 import itertools
 import logging
+import queue
 import secrets
 import socket
 import threading
 import time
+import weakref
 from typing import Any
 
 from ..engine.api import args_signature
 from ..engine.request import Request
-from ..engine.wire import decode_value, encode_value
+from ..engine.wire import SegmentTable, content_digest, decode_value, encode_value
+from .blobs import BlobStore, blob_min_bytes_default
 from .protocol import Channel, ProtocolError
 
 log = logging.getLogger("repro.cluster")
@@ -130,6 +145,27 @@ class _Inflight:
     message: "dict[str, Any]"
     decode_report: bool
     retried: bool = False
+    #: the message's out-of-band payload buffers (ndref targets), replayed
+    #: verbatim on failover so the retry is bit-identical
+    segments: "list[Any]" = dataclasses.field(default_factory=list)
+    #: digest -> array pins for every blobref the message references —
+    #: strong refs, so failover can re-ship even past store eviction
+    blobs: "dict[str, Any]" = dataclasses.field(default_factory=dict)
+
+
+def _offset_ndrefs(node: Any, offset: int) -> Any:
+    """A structural copy of an encoded message with every ndref's segment
+    index shifted by ``offset`` — how per-submit segment tables concatenate
+    into one ``submit_many`` frame. A copy, never in-place: the original is
+    an in-flight entry's resend template."""
+    if isinstance(node, dict):
+        out = {k: _offset_ndrefs(v, offset) for k, v in node.items()}
+        if out.get("__wire__") == "ndref" and isinstance(out.get("seg"), int):
+            out["seg"] += offset
+        return out
+    if isinstance(node, list):
+        return [_offset_ndrefs(v, offset) for v in node]
+    return node
 
 
 class WorkerHandle:
@@ -146,6 +182,16 @@ class WorkerHandle:
         self.served = 0
         self.inflight: "dict[int, _Inflight]" = {}
         self.reader: "threading.Thread | None" = None
+        #: belief set: digests this worker has been shipped (may be stale —
+        #: the worker LRU-evicts; ``need_blob`` repairs the divergence)
+        self.blob_digests: "set[str]" = set()
+        #: blobrefs sent without re-shipping bytes (the data-plane win) /
+        #: shipments (first sends + need_blob re-sends)
+        self.blob_hits = 0
+        self.blob_misses = 0
+        #: pipelined-submit writer: dispatch enqueues, the writer coalesces
+        self.send_queue: "queue.Queue[Any]" = queue.Queue()
+        self.writer: "threading.Thread | None" = None
 
     def describe(self) -> dict:
         return {
@@ -156,6 +202,10 @@ class WorkerHandle:
             "slots": self.slots,
             "served": self.served,
             "inflight": len(self.inflight),
+            "blob_hits": self.blob_hits,
+            "blob_misses": self.blob_misses,
+            "blobs_shipped": len(self.blob_digests),
+            **self.channel.wire_stats(),
         }
 
 
@@ -168,12 +218,28 @@ class Coordinator:
         max_inflight: int = 512,
         call_timeout: float = 300.0,
         token: "str | None" = None,
+        flush_window: float = 0.002,
+        blob_min_bytes: "int | None" = None,
+        blob_budget_bytes: "int | None" = None,
     ):
         self.heartbeat_interval = heartbeat_interval
         self.heartbeat_timeout = heartbeat_timeout
         self.max_inflight = max_inflight
         self.call_timeout = call_timeout
         self.token = token if token is not None else secrets.token_hex(8)
+        #: submit-coalescing window (seconds): after a worker's writer picks
+        #: up one queued submit it waits this long for more before flushing
+        #: everything queued as a single ``submit_many`` frame. 0 disables
+        #: the wait (still coalesces whatever already queued up).
+        self.flush_window = flush_window
+        #: arrays at/above this many bytes become content-addressed blobs
+        self.blob_min_bytes = (
+            blob_min_bytes_default() if blob_min_bytes is None else int(blob_min_bytes)
+        )
+        #: re-ship source for ``need_blob``; in-flight pins cover the rest
+        self._blob_store = BlobStore(budget_bytes=blob_budget_bytes)
+        self._digest_lock = threading.Lock()
+        self._digest_cache: "dict[int, tuple[Any, str]]" = {}
         self._lock = threading.RLock()
         self._space = threading.Condition(self._lock)  # admission: slot freed
         self._joined = threading.Condition(self._lock)  # wait_ready()
@@ -191,6 +257,8 @@ class Coordinator:
         self._retries = 0
         self._failovers = 0
         self._remote_errors = 0
+        self._submit_frames = 0  # frames that carried >=1 submit
+        self._submits_coalesced = 0  # submits that rode a submit_many
 
     # -- lifecycle -------------------------------------------------------------
 
@@ -238,6 +306,7 @@ class Coordinator:
             workers = list(self._workers.values())
             self._space.notify_all()
         for worker in workers:
+            worker.send_queue.put(None)  # stop the writer
             try:
                 worker.channel.send({"kind": "shutdown"})
             except Exception:
@@ -322,6 +391,14 @@ class Coordinator:
         )
         worker.reader = reader
         reader.start()
+        writer = threading.Thread(
+            target=self._writer_loop,
+            args=(worker,),
+            name=f"cluster-writer-{worker.worker_id}",
+            daemon=True,
+        )
+        worker.writer = writer
+        writer.start()
         log.info(
             "worker %d joined (pid=%s, substrate=%s, slots=%d)",
             worker.worker_id, worker.pid, worker.substrate, worker.slots,
@@ -329,10 +406,50 @@ class Coordinator:
 
     # -- submission ------------------------------------------------------------
 
+    def _array_digest(self, original: Any, arr: Any) -> str:
+        """Content digest of one array, memoized by the *original* object's
+        identity — a decode server re-submitting the same expert-weight
+        array pays sha256 once, not per request. Weak refs keep the cache
+        from pinning tensors; un-weakref-able inputs just recompute."""
+        key = id(original)
+        with self._digest_lock:
+            entry = self._digest_cache.get(key)
+            if entry is not None and entry[0]() is original:
+                return entry[1]
+        digest = content_digest(arr)
+        try:
+            ref = weakref.ref(
+                original, lambda _r, k=key: self._digest_cache.pop(k, None)
+            )
+        except TypeError:
+            return digest
+        with self._digest_lock:
+            self._digest_cache[key] = (ref, digest)
+        return digest
+
+    def _make_blob_sink(self, blobs: "dict[str, Any]"):
+        """A ``blob_sink`` for :func:`encode_value`: arrays at/above the
+        threshold become blobrefs, pinned in ``blobs`` and admitted to the
+        coordinator's re-ship store."""
+
+        def sink(original: Any, arr: Any) -> "str | None":
+            if arr.nbytes < self.blob_min_bytes:
+                return None
+            digest = self._array_digest(original, arr)
+            blobs[digest] = self._blob_store.put(digest, arr, verify=False)
+            return digest
+
+        return sink
+
     def submit(self, request: Request) -> ClusterFuture:
         """Serve one Request on the cluster; returns a future that always
         terminates (result, remote error, or :class:`WorkerFailure`)."""
-        payload = request.to_wire()  # raises WireError before admission
+        segments = SegmentTable()
+        blobs: "dict[str, Any]" = {}
+        # raises WireError before admission
+        payload = request.to_wire(
+            segments=segments, blob_sink=self._make_blob_sink(blobs)
+        )
         op_name = payload["op"]
         strategy = request.strategy
         strategy_id = (
@@ -349,7 +466,13 @@ class Coordinator:
                 raise ClusterError("coordinator is shut down")
             worker = self._place(placement_key)
             self._submitted += 1
-        return self._dispatch(worker, message, decode_report=True)
+        return self._dispatch(
+            worker,
+            message,
+            decode_report=True,
+            segments=segments.segments,
+            blobs=blobs,
+        )
 
     def kernel_call(
         self,
@@ -363,11 +486,16 @@ class Coordinator:
         """Execute one substrate kernel on a worker (blocking). Pinned calls
         go to ``worker_pin`` while it is healthy; a death mid-call fails
         over exactly like a submit."""
+        segments = SegmentTable()
+        blobs: "dict[str, Any]" = {}
+        sink = self._make_blob_sink(blobs)
         message = {
             "kind": "kernel_call",
             "op": op,
-            "args": encode_value(tuple(args)),
-            "kwargs": encode_value(dict(kwargs)),
+            "args": encode_value(tuple(args), segments=segments, blob_sink=sink),
+            "kwargs": encode_value(
+                dict(kwargs), segments=segments, blob_sink=sink
+            ),
         }
         with self._lock:
             if self._stopping:
@@ -380,7 +508,13 @@ class Coordinator:
             if worker is None:
                 worker = self._least_loaded()
             self._kernel_calls += 1
-        future = self._dispatch(worker, message, decode_report=False)
+        future = self._dispatch(
+            worker,
+            message,
+            decode_report=False,
+            segments=segments.segments,
+            blobs=blobs,
+        )
         timeout = self.call_timeout if timeout is None else timeout
         try:
             response = future.result(timeout=timeout)
@@ -428,7 +562,11 @@ class Coordinator:
         decode_report: bool,
         retried: bool = False,
         future: "ClusterFuture | None" = None,
+        segments: "list[Any] | None" = None,
+        blobs: "dict[str, Any] | None" = None,
     ) -> ClusterFuture:
+        segments = [] if segments is None else segments
+        blobs = {} if blobs is None else blobs
         with self._lock:
             if worker.state == WorkerState.DEAD:
                 # died between placement and dispatch: reroute immediately
@@ -437,14 +575,90 @@ class Coordinator:
             ticket = next(self._tickets)
             if future is None:
                 future = ClusterFuture(ticket)
-            entry = _Inflight(ticket, future, message, decode_report, retried)
+            entry = _Inflight(
+                ticket, future, message, decode_report, retried,
+                segments=segments, blobs=blobs,
+            )
             worker.inflight[ticket] = entry
             self._inflight_total += 1
+            # decide blob shipments under the lock (belief set is shared
+            # state); the actual sends happen outside it
+            unshipped = [d for d in blobs if d not in worker.blob_digests]
+            worker.blob_digests.update(unshipped)
+            worker.blob_hits += len(blobs) - len(unshipped)
+            worker.blob_misses += len(unshipped)
         try:
-            worker.channel.send({**message, "ticket": ticket})
+            for digest in unshipped:
+                # direct send, so TCP ordering puts the bytes on the worker
+                # before any frame that references the digest
+                self._ship_blob(worker, digest, blobs[digest])
+            if message.get("kind") == "submit":
+                # the writer coalesces queued submits into submit_many
+                worker.send_queue.put(({**message, "ticket": ticket}, segments))
+            else:
+                worker.channel.send({**message, "ticket": ticket}, segments)
         except Exception as exc:  # connection died between place and send
             self._on_death(worker, f"send failed: {exc}")
         return future
+
+    def _ship_blob(self, worker: WorkerHandle, digest: str, array: Any) -> None:
+        table = SegmentTable()
+        encoded = encode_value(array, segments=table)
+        worker.channel.send(
+            {"kind": "put_blob", "digest": digest, "blob": encoded},
+            table.segments,
+        )
+
+    def _writer_loop(self, worker: WorkerHandle) -> None:
+        """Per-worker pipelined-submit writer: pick up one queued submit,
+        linger ``flush_window`` for company, flush everything queued as a
+        single frame — ``submit_many`` when more than one coalesced."""
+        q = worker.send_queue
+        while True:
+            item = q.get()
+            if item is None:
+                return  # death or shutdown sentinel
+            if self.flush_window > 0:
+                time.sleep(self.flush_window)
+            batch = [item]
+            stop = False
+            while True:
+                try:
+                    nxt = q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    stop = True
+                    break
+                batch.append(nxt)
+            try:
+                self._send_batch(worker, batch)
+            except Exception as exc:
+                # _on_death retries everything in worker.inflight —
+                # including the batch and anything still queued
+                self._on_death(worker, f"send failed: {exc}")
+                return
+            if stop:
+                return
+
+    def _send_batch(self, worker: WorkerHandle, batch: "list[tuple]") -> None:
+        if len(batch) == 1:
+            message, segments = batch[0]
+            worker.channel.send(message, segments)
+            with self._lock:
+                self._submit_frames += 1
+            return
+        items: "list[Any]" = []
+        all_segments: "list[Any]" = []
+        for message, segments in batch:
+            items.append(_offset_ndrefs(message, len(all_segments)))
+            all_segments.extend(segments)
+        worker.channel.send(
+            {"kind": "submit_many", "items": items}, all_segments
+        )
+        with self._lock:
+            self._submit_frames += 1
+            self._submits_coalesced += len(batch)
 
     # -- worker I/O ------------------------------------------------------------
 
@@ -524,6 +738,40 @@ class Coordinator:
                     )
                 )
             return
+        if kind == "need_blob":
+            # the worker evicted (or never had) these digests: re-ship from
+            # the coordinator store, falling back to in-flight pins; answer
+            # blob_gone for anything unproducible so the request fails fast
+            # instead of hanging in BlobStore.ensure
+            for digest in message.get("digests", ()):
+                array = self._blob_store.get(digest)
+                if array is None:
+                    with self._lock:
+                        for w in self._workers.values():
+                            for entry in w.inflight.values():
+                                if digest in entry.blobs:
+                                    array = entry.blobs[digest]
+                                    break
+                            if array is not None:
+                                break
+                try:
+                    if array is None:
+                        log.warning(
+                            "worker %d needs blob %s but it is gone",
+                            worker.worker_id, digest,
+                        )
+                        worker.channel.send(
+                            {"kind": "blob_gone", "digest": digest}
+                        )
+                        continue
+                    with self._lock:
+                        worker.blob_digests.add(digest)
+                        worker.blob_misses += 1
+                    self._ship_blob(worker, digest, array)
+                except Exception as exc:
+                    self._on_death(worker, f"blob re-ship failed: {exc}")
+                    return
+            return
         log.warning("unknown message kind %r from worker %d", kind, worker.worker_id)
 
     # -- health + failover -----------------------------------------------------
@@ -566,6 +814,7 @@ class Coordinator:
             self._inflight_total -= len(orphans)
             self._space.notify_all()
             self._joined.notify_all()
+        worker.send_queue.put(None)  # stop the writer
         log.warning(
             "worker %d is dead (%s): redistributing %d placement pins, "
             "retrying %d in-flight request(s)",
@@ -585,12 +834,17 @@ class Coordinator:
                 with self._lock:
                     survivor = self._least_loaded()
                     self._retries += 1
+                # segments + blob pins travel with the retry: the survivor
+                # gets the same bytes (put_blob first if it lacks any
+                # digest), so the replay is bit-identical
                 self._dispatch(
                     survivor,
                     entry.message,
                     decode_report=entry.decode_report,
                     retried=True,
                     future=entry.future,
+                    segments=entry.segments,
+                    blobs=entry.blobs,
                 )
             except ClusterError as exc:
                 entry.future._fail(
@@ -621,7 +875,8 @@ class Coordinator:
         return future.result(timeout=timeout).result
 
     def stats(self) -> "dict[str, Any]":
-        """Control-plane counters + per-worker health and serve counts."""
+        """Control-plane counters + per-worker health, serve counts, and
+        wire-traffic rows (bytes/frames/blob hit-miss per worker)."""
         with self._lock:
             workers = [w.describe() for w in self._workers.values()]
             served = sum(w.served for w in self._workers.values())
@@ -640,4 +895,14 @@ class Coordinator:
                 "failovers": self._failovers,
                 "remote_errors": self._remote_errors,
                 "placement_pins": len(self._placement),
+                "wire_bytes_sent": sum(w["bytes_sent"] for w in workers),
+                "wire_bytes_received": sum(
+                    w["bytes_received"] for w in workers
+                ),
+                "blob_hits": sum(w["blob_hits"] for w in workers),
+                "blob_misses": sum(w["blob_misses"] for w in workers),
+                "blob_store": self._blob_store.stats(),
+                "submit_frames": self._submit_frames,
+                "submits_coalesced": self._submits_coalesced,
+                "flush_window": self.flush_window,
             }

@@ -221,11 +221,17 @@ def launch_cluster(
     restarts: int = 0,
     wait_timeout: float = 180.0,
     activate: bool = True,
+    flush_window: float = 0.002,
+    blob_min_bytes: "int | None" = None,
 ) -> Cluster:
     """Stand up a localhost cluster and return its :class:`Cluster` handle.
 
     ``activate=True`` (default) installs the coordinator as the process's
     active cluster so ``substrate="cluster"`` resolves everywhere.
+    ``flush_window`` is the submit-coalescing window; ``blob_min_bytes``
+    the content-addressing threshold (None = ``REPRO_BLOB_MIN_BYTES`` or
+    its 64 KiB default). Workers read ``REPRO_BLOB_BUDGET_BYTES`` from
+    their (inherited) environment for the blob-store byte budget.
     """
     if n_workers < 1:
         raise ValueError(f"n_workers must be >= 1, got {n_workers}")
@@ -233,6 +239,8 @@ def launch_cluster(
         heartbeat_interval=heartbeat_interval,
         heartbeat_timeout=heartbeat_timeout,
         max_inflight=max_inflight,
+        flush_window=flush_window,
+        blob_min_bytes=blob_min_bytes,
     )
     host, port = coordinator.listen()
     backend = backend if backend is not None else LocalProcessBackend()

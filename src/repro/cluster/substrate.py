@@ -17,7 +17,11 @@ carries over *unchanged* at the process level:
   wire-encoded) executes on the pinned worker, which runs the real kernel
   from its own registry against its own substrate. Capability is the
   *remote* kind's registry — the cluster supports what its workers
-  support.
+  support. Forwarded arguments ride the protocol-v2 data plane: raw frame
+  segments for small arrays, content-addressed blobrefs for large ones —
+  a repeatedly-forwarded adjacency structure crosses the wire once per
+  worker, not once per call (the Emu move-the-context discipline, applied
+  to the forwarder).
 
 ``placement_policy = "affinity"`` (the warm executable lives in one
 process) and ``jit_plans = False`` (the forwarder does socket I/O;

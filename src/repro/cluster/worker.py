@@ -17,6 +17,14 @@ HOST:PORT --worker-id K``, it dials back to the coordinator, sends a
   statics — and cached per value-independent signature, so repeated calls
   hit a warm executable. Kernels the tracer rejects fall back to eager,
   once, and stay pinned eager.
+- ``submit_many`` — a coordinator-coalesced frame: each item is a full
+  submit (ticket + request) sharing the frame's segment table; they fan
+  out to the pool exactly as if they had arrived one frame each.
+- ``put_blob`` / ``blob_gone`` — content-addressed data plane: shipped
+  blobs land in a byte-budgeted LRU :class:`~repro.cluster.blobs.BlobStore`
+  (digest-verified — corrupt shipments are refused); requests referencing
+  a ``blobref`` this worker no longer holds block in ``ensure`` while a
+  ``need_blob`` round trip re-fetches the bytes.
 - ``ping`` — answered inline by the reader thread, *never* queued behind
   compute, so a busy worker still heartbeats and only a dead or truly hung
   process misses its deadline.
@@ -127,7 +135,13 @@ def serve(
     from ..engine.request import Request
     from ..engine.service import EngineService
     from ..engine.substrate import get_substrate
-    from ..engine.wire import decode_value, encode_value
+    from ..engine.wire import (
+        SegmentTable,
+        collect_blob_digests,
+        decode_value,
+        encode_value,
+    )
+    from .blobs import BlobMissing, BlobStore
 
     token = token if token is not None else os.environ.get("REPRO_CLUSTER_TOKEN", "")
     sock = socket.create_connection(connect, timeout=30)
@@ -140,6 +154,7 @@ def serve(
     service.start()
     sub = get_substrate(substrate)
     kernels = _KernelCache()
+    blob_store = BlobStore()
     pool = ThreadPoolExecutor(
         max_workers=max(2, service_workers), thread_name_prefix=f"w{worker_id}"
     )
@@ -152,30 +167,64 @@ def serve(
         "slots": sub.placement_slots(),
     })
 
+    def request_blobs(missing: "list[str]") -> None:
+        channel.send({"kind": "need_blob", "digests": missing})
+
+    def decode_with_blobs(decode):
+        """Run ``decode()`` with every referenced blob present, re-fetching
+        via ``need_blob`` when the LRU evicted one between arrival and
+        decode (bounded — a blob the coordinator cannot produce raises)."""
+        for _attempt in range(3):
+            try:
+                return decode()
+            except BlobMissing as exc:
+                blob_store.ensure([exc.digest], request_blobs)
+        return decode()
+
     def finish_submit(ticket: int, payload: dict) -> None:
         try:
-            request = Request.from_wire(payload)
+            digests = collect_blob_digests(payload)
+            if digests:
+                blob_store.ensure(digests, request_blobs)
+            request = decode_with_blobs(
+                lambda: Request.from_wire(
+                    payload, blob_resolver=blob_store.resolve
+                )
+            )
             response = service.submit(request).result()
+            table = SegmentTable()
             channel.send({
                 "kind": "result",
                 "ticket": ticket,
-                "result": encode_value(response.result),
-                "report": encode_value(response.report),
-            })
+                "result": encode_value(response.result, segments=table),
+                "report": encode_value(response.report, segments=table),
+            }, table.segments)
         except Exception as exc:  # noqa: BLE001 — every ticket must answer
             _send_error(ticket, exc)
 
     def finish_kernel(ticket: int, message: dict) -> None:
         try:
-            args = decode_value(message["args"])
-            kwargs = decode_value(message["kwargs"])
+            digests = collect_blob_digests([message["args"], message["kwargs"]])
+            if digests:
+                blob_store.ensure(digests, request_blobs)
+            args, kwargs = decode_with_blobs(
+                lambda: (
+                    decode_value(
+                        message["args"], blob_resolver=blob_store.resolve
+                    ),
+                    decode_value(
+                        message["kwargs"], blob_resolver=blob_store.resolve
+                    ),
+                )
+            )
             result = kernels.call(sub, message["op"], tuple(args), kwargs)
+            table = SegmentTable()
             channel.send({
                 "kind": "result",
                 "ticket": ticket,
-                "result": encode_value(result),
+                "result": encode_value(result, segments=table),
                 "report": None,
-            })
+            }, table.segments)
         except Exception as exc:  # noqa: BLE001
             _send_error(ticket, exc)
 
@@ -200,13 +249,38 @@ def serve(
                 channel.send({"kind": "pong", "inflight": len(service)})
             elif kind == "submit":
                 pool.submit(finish_submit, message["ticket"], message["request"])
+            elif kind == "submit_many":
+                for item in message["items"]:
+                    pool.submit(finish_submit, item["ticket"], item["request"])
+            elif kind == "put_blob":
+                # verify-then-store inline on the reader: the bytes must be
+                # in the store before any frame referencing them decodes
+                try:
+                    blob_store.put(
+                        message["digest"], decode_value(message["blob"])
+                    )
+                except Exception:
+                    log.exception(
+                        "worker %d: refused blob %s", worker_id,
+                        message.get("digest"),
+                    )
+            elif kind == "blob_gone":
+                blob_store.mark_gone(message["digest"])
             elif kind == "kernel_call":
                 pool.submit(finish_kernel, message["ticket"], message)
             elif kind == "stats":
+                stats = service.stats()
+                stats.wire_bytes_sent = channel.bytes_sent
+                stats.wire_bytes_received = channel.bytes_received
+                store_stats = blob_store.stats()
+                stats.blob_hits = store_stats["hits"]
+                stats.blob_misses = store_stats["misses"]
+                row = stats.to_dict()
+                row["blob_store"] = store_stats
                 channel.send({
                     "kind": "stats_reply",
                     "ticket": message["ticket"],
-                    "stats": service.stats().to_dict(),
+                    "stats": row,
                 })
             elif kind == "shutdown":
                 break

@@ -85,8 +85,11 @@ from .decode_op import (
 from .request import Request
 from .wire import (
     WIRE_VERSION,
+    SegmentTable,
     WireError,
     canonical_bytes,
+    collect_blob_digests,
+    content_digest,
     decode_value,
     encode_value,
 )
@@ -132,12 +135,13 @@ __all__ = [
     "OpNotSupportedError", "PALLAS_BLOCK_CANDIDATES", "PallasSubstrate",
     "PlanCache", "ProbeStore",
     "RankedCandidate", "Request",
-    "RunReport", "ServiceFuture", "ServiceRequest", "ServiceResponse",
+    "RunReport", "SegmentTable", "ServiceFuture", "ServiceRequest",
+    "ServiceResponse",
     "ServiceStats", "ServiceStopped", "ServiceTimeout",
     "SpMVInputs", "SpMVOp", "Substrate",
     "WIRE_VERSION", "WireError",
     "args_signature", "autotune", "build_plan", "candidate_grid",
-    "canonical_bytes",
+    "canonical_bytes", "collect_blob_digests", "content_digest",
     "capabilities", "choose_strategy", "compile_plan", "decode_value",
     "default_cache",
     "default_probe_store", "default_registry", "encode_value", "execute",

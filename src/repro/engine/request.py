@@ -52,14 +52,20 @@ class Request:
         if self.timeout is not None and float(self.timeout) < 0:
             raise ValueError(f"timeout must be >= 0, got {self.timeout!r}")
 
-    def to_wire(self) -> dict:
+    def to_wire(self, *, segments=None, blob_sink=None) -> dict:
         """The stable wire form of this request (DESIGN.md §1h): a JSON-
         compatible dict with dtype/shape-preserving array encoding, shared
         by the cluster protocol and the dedup content hash. ``op`` travels
         by name and ``substrate`` by registered name — the receiving
         process resolves both through its own registries, so a Request
         round-trips between processes with different object identities but
-        identical computation."""
+        identical computation.
+
+        ``segments`` (a :class:`~repro.engine.wire.SegmentTable`) and
+        ``blob_sink`` opt input arrays out of inline base64 and into
+        out-of-band frame segments / content-addressed blobrefs — the
+        protocol-v2 data plane. With neither, the encoding is the fully
+        inline v1-compatible form."""
         from .wire import WIRE_VERSION, WireError, encode_value
 
         op = self.op
@@ -85,7 +91,9 @@ class Request:
         return {
             "v": WIRE_VERSION,
             "op": op,
-            "inputs": encode_value(self.inputs),
+            "inputs": encode_value(
+                self.inputs, segments=segments, blob_sink=blob_sink
+            ),
             "strategy": encode_value(self.strategy),
             "substrate": substrate,
             "qos": None if self.qos is None else float(self.qos),
@@ -93,8 +101,10 @@ class Request:
         }
 
     @classmethod
-    def from_wire(cls, payload: dict) -> "Request":
-        """Rebuild a Request from :meth:`to_wire` output."""
+    def from_wire(cls, payload: dict, *, blob_resolver=None) -> "Request":
+        """Rebuild a Request from :meth:`to_wire` output. ``blob_resolver``
+        (digest -> array) resolves any ``blobref`` nodes — required when the
+        sender encoded with a ``blob_sink``."""
         from .wire import WIRE_VERSION, WireError, decode_value
 
         version = payload.get("v")
@@ -104,7 +114,7 @@ class Request:
             )
         return cls(
             op=payload["op"],
-            inputs=decode_value(payload["inputs"]),
+            inputs=decode_value(payload["inputs"], blob_resolver=blob_resolver),
             strategy=decode_value(payload["strategy"]),
             substrate=payload.get("substrate"),
             qos=payload.get("qos"),

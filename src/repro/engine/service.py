@@ -353,6 +353,13 @@ class ServiceStats:
     #: monotone high-water mark an autoscaler compares against its grow
     #: threshold even if the pool has since gone idle
     occupancy_hwm: float = 0.0
+    #: cluster data-plane counters (DESIGN.md §1h). Zero in-process; the
+    #: cluster coordinator/worker planes merge real wire traffic and
+    #: content-addressed blob-store activity into their stats rows.
+    wire_bytes_sent: int = 0
+    wire_bytes_received: int = 0
+    blob_hits: int = 0  # blobrefs resolved from a local blob store
+    blob_misses: int = 0  # blobrefs that needed a need_blob re-fetch
 
     @property
     def requests_per_second(self) -> float:
@@ -437,6 +444,10 @@ class ServiceStats:
             "worker_steals": self.worker_steals,
             "worker_occupancy": self.worker_occupancy,
             "occupancy_hwm": self.occupancy_hwm,
+            "wire_bytes_sent": self.wire_bytes_sent,
+            "wire_bytes_received": self.wire_bytes_received,
+            "blob_hits": self.blob_hits,
+            "blob_misses": self.blob_misses,
             "resize_signal": self.resize_signal(),
             "requests_per_second": self.requests_per_second,
             "amortization": self.amortization,

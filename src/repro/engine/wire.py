@@ -6,7 +6,7 @@ agree on request identity:
 - the **cluster protocol** (:mod:`repro.cluster.protocol`): a ``Request``
   crosses a process boundary as ``Request.to_wire()`` and is rebuilt with
   ``Request.from_wire()`` — dtype/shape-preserving, bit-exact array round
-  trips (raw buffer in base64, no float repr loss);
+  trips;
 - the **dedup content hash** (:func:`~repro.engine.service._content_hash`):
   the sha256 of :func:`canonical_bytes` over the same encoding, so "two
   requests are the same computation" means exactly "they serialize to the
@@ -16,11 +16,23 @@ agree on request identity:
 Encoding rules (``encode_value``):
 
 - JSON scalars (``None``/bool/int/float/str) pass through.
-- Array-likes (anything with ``shape``+``dtype``) become
-  ``{"__wire__": "nd", "dtype", "shape", "data"}`` with ``data`` the
-  base64 of the C-order buffer. Decoding returns a NumPy array — the
-  kernels convert lazily, and NumPy preserves dtypes (e.g. int64) that an
-  eager ``jnp.asarray`` would downcast under default x64 settings.
+- Array-likes (anything with ``shape``+``dtype``) have three wire forms:
+
+  * inline ``{"__wire__": "nd", "dtype", "shape", "data"}`` with ``data``
+    the base64 of the C-order buffer — the *canonical* form, what
+    :func:`canonical_bytes` always emits (dedup identity is pinned to it);
+  * out-of-band ``{"__wire__": "ndref", "seg", "dtype", "shape"}`` when a
+    :class:`SegmentTable` is passed — the raw C-order buffer is appended
+    verbatim as frame segment ``seg`` instead of being base64-inflated
+    into the JSON envelope (protocol v2's zero-copy data plane);
+  * content-addressed ``{"__wire__": "blobref", "digest", "dtype",
+    "shape"}`` when a ``blob_sink`` claims the array — the bytes do not
+    travel with the envelope at all; the receiver resolves the digest
+    against its blob store (``blob_resolver`` on decode).
+
+  Decoding returns a NumPy array — the kernels convert lazily, and NumPy
+  preserves dtypes (e.g. int64) that an eager ``jnp.asarray`` would
+  downcast under default x64 settings.
 - Dataclasses become ``{"__wire__": "dc", "cls": "module:qualname",
   "fields": {...}}``. Decoding imports the class, **restricted to
   ``repro.*`` modules** — the wire format never instantiates arbitrary
@@ -34,16 +46,19 @@ Encoding rules (``encode_value``):
   ``decode_value`` (a cluster cannot rebuild a value from its repr).
 
 ``canonical_bytes`` is ``json.dumps(encode_value(v), sort_keys=True)``
-encoded UTF-8: deterministic across processes and Python hash seeds.
+encoded UTF-8: deterministic across processes and Python hash seeds, and
+**never** in segment or blobref form — the dedup identity of a value is
+the same whether it crossed the wire as base64, a raw segment, or a blob.
 """
 from __future__ import annotations
 
 import base64
 import dataclasses
 import enum
+import hashlib
 import importlib
 import json
-from typing import Any
+from typing import Any, Callable
 
 import numpy as np
 
@@ -55,6 +70,39 @@ _ALLOWED_MODULE_PREFIX = "repro."
 
 class WireError(ValueError):
     """A value cannot be encoded for, or decoded from, the wire."""
+
+
+class SegmentTable:
+    """Out-of-band payload collector for protocol v2 frames.
+
+    Passed to :func:`encode_value` as ``segments=``: every array's raw
+    C-order buffer lands here (as a zero-copy byte view when possible) and
+    the envelope carries only an ``ndref`` with the segment index. The
+    collected :attr:`segments` list rides the frame after the JSON
+    envelope — see :meth:`repro.cluster.protocol.Channel.send`.
+    """
+
+    def __init__(self):
+        self.segments: "list[Any]" = []  # bytes-like: memoryview | bytes
+
+    def add(self, buf: Any) -> int:
+        self.segments.append(buf)
+        return len(self.segments) - 1
+
+    def nbytes(self) -> int:
+        return sum(len(s) for s in self.segments)
+
+    def __len__(self) -> int:
+        return len(self.segments)
+
+
+def _byte_view(arr: np.ndarray) -> Any:
+    """A flat byte view of a C-contiguous array (no copy when the buffer
+    protocol allows it; ``tobytes`` fallback otherwise)."""
+    try:
+        return memoryview(arr).cast("B")
+    except (TypeError, ValueError):
+        return arr.tobytes()
 
 
 def _class_path(cls: type) -> str:
@@ -76,8 +124,21 @@ def _resolve_class(path: str) -> type:
     return obj
 
 
-def encode_value(value: Any) -> Any:
-    """Encode ``value`` into the JSON-compatible wire form (module doc)."""
+def encode_value(
+    value: Any,
+    *,
+    segments: "SegmentTable | None" = None,
+    blob_sink: "Callable[[Any, np.ndarray], str | None] | None" = None,
+) -> Any:
+    """Encode ``value`` into the JSON-compatible wire form (module doc).
+
+    ``segments`` switches arrays to out-of-band ``ndref`` form (raw buffer
+    appended to the table, no base64). ``blob_sink(original, contiguous)``
+    is consulted first for every array: returning a digest string emits a
+    ``blobref`` (the bytes travel separately, at most once per receiver);
+    returning ``None`` falls through to the segment/inline path. Neither
+    affects :func:`canonical_bytes`, which always encodes inline.
+    """
     if isinstance(value, enum.Enum):
         # before the scalar pass-through: str/int-mixin enums (Comm, Layout,
         # Scheme) must round-trip as enum members, not bare scalars
@@ -94,6 +155,22 @@ def encode_value(value: Any) -> Any:
         arr = np.ascontiguousarray(np.asarray(value))
         if arr.dtype == object:
             raise WireError("object-dtype arrays cannot cross the wire")
+        if blob_sink is not None:
+            digest = blob_sink(value, arr)
+            if digest is not None:
+                return {
+                    _TAG: "blobref",
+                    "digest": digest,
+                    "dtype": str(arr.dtype),
+                    "shape": list(arr.shape),
+                }
+        if segments is not None:
+            return {
+                _TAG: "ndref",
+                "seg": segments.add(_byte_view(arr)),
+                "dtype": str(arr.dtype),
+                "shape": list(arr.shape),
+            }
         return {
             _TAG: "nd",
             "dtype": str(arr.dtype),
@@ -105,17 +182,35 @@ def encode_value(value: Any) -> Any:
             _TAG: "dc",
             "cls": _class_path(type(value)),
             "fields": {
-                f.name: encode_value(getattr(value, f.name))
+                f.name: encode_value(
+                    getattr(value, f.name), segments=segments, blob_sink=blob_sink
+                )
                 for f in dataclasses.fields(value)
             },
         }
     if isinstance(value, tuple):
-        return {_TAG: "tuple", "items": [encode_value(v) for v in value]}
+        return {
+            _TAG: "tuple",
+            "items": [
+                encode_value(v, segments=segments, blob_sink=blob_sink)
+                for v in value
+            ],
+        }
     if isinstance(value, list):
-        return {_TAG: "list", "items": [encode_value(v) for v in value]}
+        return {
+            _TAG: "list",
+            "items": [
+                encode_value(v, segments=segments, blob_sink=blob_sink)
+                for v in value
+            ],
+        }
     if isinstance(value, dict):
         items = [
-            [encode_value(k), encode_value(v)] for k, v in value.items()
+            [
+                encode_value(k),
+                encode_value(v, segments=segments, blob_sink=blob_sink),
+            ]
+            for k, v in value.items()
         ]
         items.sort(key=lambda kv: json.dumps(kv[0], sort_keys=True, default=str))
         return {_TAG: "dict", "items": items}
@@ -123,13 +218,25 @@ def encode_value(value: Any) -> Any:
     return {_TAG: "repr", "repr": repr(value), "cls": _class_path(type(value))}
 
 
-def decode_value(value: Any) -> Any:
+def decode_value(
+    value: Any,
+    *,
+    blob_resolver: "Callable[[str], np.ndarray] | None" = None,
+) -> Any:
     """Rebuild a value from its wire form. Raises :class:`WireError` for
-    hash-only (``repr``) payloads and non-``repro.*`` classes."""
+    hash-only (``repr``) payloads and non-``repro.*`` classes.
+
+    ``ndref`` values decode from the raw segment buffer the protocol layer
+    attached under ``"data"`` (see
+    :func:`repro.cluster.protocol.attach_segments`); an unattached ndref is
+    refused. ``blobref`` values resolve their digest through
+    ``blob_resolver`` (the receiver's blob store); without one they are
+    refused — a blobref is meaningless outside a blob-aware peer.
+    """
     if value is None or isinstance(value, (bool, int, float, str)):
         return value
     if isinstance(value, list):  # bare lists never appear, but be lenient
-        return [decode_value(v) for v in value]
+        return [decode_value(v, blob_resolver=blob_resolver) for v in value]
     if not isinstance(value, dict):
         raise WireError(f"unexpected wire value of type {type(value).__name__}")
     tag = value.get(_TAG)
@@ -137,19 +244,46 @@ def decode_value(value: Any) -> Any:
         raw = base64.b64decode(value["data"])
         arr = np.frombuffer(raw, dtype=np.dtype(value["dtype"]))
         return arr.reshape(tuple(value["shape"])).copy()
+    if tag == "ndref":
+        raw = value.get("data")
+        if raw is None:
+            raise WireError(
+                f"ndref segment {value.get('seg')!r} was not attached — "
+                "ndref values only decode inside a protocol v2 frame"
+            )
+        # no copy: the frame buffer outlives the (read-only) array view
+        arr = np.frombuffer(raw, dtype=np.dtype(value["dtype"]))
+        return arr.reshape(tuple(value["shape"]))
+    if tag == "blobref":
+        if blob_resolver is None:
+            raise WireError(
+                f"blobref {value.get('digest')!r} cannot be decoded without "
+                "a blob store (pass blob_resolver=)"
+            )
+        return blob_resolver(value["digest"])
     if tag == "enum":
         cls = _resolve_class(value["cls"])
         return cls(decode_value(value["value"]))
     if tag == "dc":
         cls = _resolve_class(value["cls"])
-        fields = {k: decode_value(v) for k, v in value["fields"].items()}
+        fields = {
+            k: decode_value(v, blob_resolver=blob_resolver)
+            for k, v in value["fields"].items()
+        }
         return cls(**fields)
     if tag == "tuple":
-        return tuple(decode_value(v) for v in value["items"])
+        return tuple(
+            decode_value(v, blob_resolver=blob_resolver) for v in value["items"]
+        )
     if tag == "list":
-        return [decode_value(v) for v in value["items"]]
+        return [
+            decode_value(v, blob_resolver=blob_resolver) for v in value["items"]
+        ]
     if tag == "dict":
-        return {decode_value(k): decode_value(v) for k, v in value["items"]}
+        return {
+            decode_value(k): decode_value(v, blob_resolver=blob_resolver)
+            for k, v in value["items"]
+        }
     if tag == "repr":
         raise WireError(
             f"value of type {value.get('cls')!r} was encoded hash-only "
@@ -158,12 +292,48 @@ def decode_value(value: Any) -> Any:
     raise WireError(f"unknown wire tag {tag!r}")
 
 
+def collect_blob_digests(encoded: Any) -> "list[str]":
+    """Every ``blobref`` digest reachable in an *encoded* wire structure,
+    in first-appearance order (deduplicated). The receiver pre-scans a
+    frame with this to fetch missing blobs in one ``need_blob`` round trip
+    instead of failing mid-decode."""
+    out: "list[str]" = []
+    seen: "set[str]" = set()
+
+    def walk(obj: Any) -> None:
+        if isinstance(obj, dict):
+            if obj.get(_TAG) == "blobref":
+                digest = obj.get("digest")
+                if digest not in seen:
+                    seen.add(digest)
+                    out.append(digest)
+                return
+            for v in obj.values():
+                walk(v)
+        elif isinstance(obj, list):
+            for v in obj:
+                walk(v)
+
+    walk(encoded)
+    return out
+
+
 def canonical_bytes(value: Any) -> bytes:
     """Deterministic byte encoding of ``value`` — the dedup-hash payload.
-    Stable across processes: sorted keys, no whitespace, UTF-8."""
+    Stable across processes and Python hash seeds: sorted keys, no
+    whitespace, UTF-8, and always the inline (base64) array form — never
+    segment- or blob-relative, so identity does not depend on transport."""
     return json.dumps(
         encode_value(value), sort_keys=True, separators=(",", ":")
     ).encode("utf-8")
+
+
+def content_digest(value: Any) -> str:
+    """sha256 hex digest of :func:`canonical_bytes` — the one
+    content-addressed identity in the system. The dedup cache hashes whole
+    requests with it (via ``_content_hash``); the cluster's blob store
+    addresses individual arrays with it (DESIGN.md §1h)."""
+    return hashlib.sha256(canonical_bytes(value)).hexdigest()
 
 
 def dumps(value: Any) -> bytes:

@@ -239,3 +239,113 @@ def test_dedup_hash_shared_with_wire_identity():
     other = _mixed_requests()[1]
     h2 = _content_hash(other.op, other.inputs, other.strategy, "local")
     assert h2 != h0
+
+
+# -- segment / blobref modes (protocol v2 data plane) --------------------------
+
+
+def test_segment_mode_emits_ndref_and_roundtrips_bit_identically():
+    from repro.engine import SegmentTable
+
+    table = SegmentTable()
+    arr = np.arange(24, dtype=np.int64).reshape(4, 6)
+    encoded = encode_value({"a": arr, "k": 3}, segments=table)
+    assert len(table) == 1 and table.nbytes() == arr.nbytes
+    # the envelope carries no tensor bytes, only the ref
+    flat = json.dumps(encoded)
+    assert "ndref" in flat and "data" not in flat
+    # decode path: the protocol layer attaches the raw buffer
+    from repro.cluster.protocol import attach_segments
+
+    parsed = json.loads(flat)
+    attach_segments(parsed, [bytes(s) for s in table.segments])
+    out = decode_value(parsed)
+    np.testing.assert_array_equal(out["a"], arr)
+    assert out["a"].dtype == arr.dtype and out["k"] == 3
+
+
+def test_unattached_ndref_is_refused():
+    from repro.engine import SegmentTable
+
+    encoded = encode_value(np.ones(3), segments=SegmentTable())
+    with pytest.raises(WireError, match="not attached"):
+        decode_value(json.loads(json.dumps(encoded)))
+
+
+def test_blob_sink_emits_blobref_and_resolver_decodes():
+    from repro.engine import SegmentTable, collect_blob_digests, content_digest
+
+    big = np.arange(64, dtype=np.float32)
+    small = np.ones(2, dtype=np.float32)
+    store = {}
+
+    def sink(original, arr):
+        if arr.nbytes < 64:
+            return None
+        digest = content_digest(arr)
+        store[digest] = arr
+        return digest
+
+    table = SegmentTable()
+    encoded = encode_value((big, small), segments=table, blob_sink=sink)
+    assert len(store) == 1  # only the big array was claimed
+    assert len(table) == 1  # the small one rides as a segment
+    assert collect_blob_digests(encoded) == list(store)
+    from repro.cluster.protocol import attach_segments
+
+    attach_segments(encoded, [bytes(s) for s in table.segments])
+    out = decode_value(encoded, blob_resolver=store.__getitem__)
+    np.testing.assert_array_equal(out[0], big)
+    np.testing.assert_array_equal(out[1], small)
+    with pytest.raises(WireError, match="blob store"):
+        decode_value(encoded, blob_resolver=None)
+
+
+def test_canonical_bytes_ignore_transport_encoding():
+    """Dedup identity must not depend on how a value crossed the wire."""
+    from repro.engine import SegmentTable, content_digest
+
+    a = partition_ell(laplacian_2d(6), 2)
+    x = jnp.asarray(np.arange(36, dtype=np.float32))
+    value = SpMVInputs(a, x)
+    baseline = canonical_bytes(value)
+    # encoding the same value in segment/blob modes leaves identity alone
+    encode_value(value, segments=SegmentTable())
+    encode_value(value, blob_sink=lambda o, arr: content_digest(arr))
+    assert canonical_bytes(value) == baseline
+    # and a segment-mode wire round trip reproduces the same canonical bytes
+    from repro.cluster.protocol import attach_segments
+
+    table = SegmentTable()
+    encoded = json.loads(json.dumps(encode_value(value, segments=table)))
+    attach_segments(encoded, [bytes(s) for s in table.segments])
+    assert canonical_bytes(decode_value(encoded)) == baseline
+
+
+def test_request_to_wire_threads_segments_and_blobs():
+    from repro.engine import SegmentTable, collect_blob_digests, content_digest
+
+    a = partition_ell(laplacian_2d(6), 2)
+    x = jnp.asarray(np.arange(36, dtype=np.float32))
+    request = Request("spmv", SpMVInputs(a, x), strategy=None)
+    blobs = {}
+
+    def sink(original, arr):
+        if arr.nbytes < 128:
+            return None
+        digest = content_digest(arr)
+        blobs[digest] = arr
+        return digest
+
+    table = SegmentTable()
+    payload = request.to_wire(segments=table, blob_sink=sink)
+    digests = collect_blob_digests(payload)
+    assert digests and set(digests) == set(blobs)
+    from repro.cluster.protocol import attach_segments
+
+    parsed = json.loads(json.dumps(payload))
+    attach_segments(parsed, [bytes(s) for s in table.segments])
+    rebuilt = Request.from_wire(parsed, blob_resolver=blobs.__getitem__)
+    oracle, _ = run(request, iters=1, warmup=0)
+    got, _ = run(rebuilt, iters=1, warmup=0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
