@@ -17,7 +17,9 @@ Both ends hold a :class:`BlobStore`:
   coordinator's stale belief) the worker sends ``need_blob`` and blocks
   that request in :meth:`BlobStore.ensure` until the blob is re-shipped —
   or the coordinator answers ``blob_gone``, which tombstones the digest
-  and fails the request instead of hanging it.
+  and fails the request instead of hanging it. The tombstone is
+  *transient*: it fails the waits that saw it and is cleared, so a later
+  submit (which re-pins the blob coordinator-side) can re-fetch it.
 - the **coordinator's** store keeps recently-shipped blobs for
   ``need_blob`` re-fetches and failover re-shipping (in-flight requests
   additionally pin their blobs on the ``_Inflight`` entry, so a retry can
@@ -144,7 +146,14 @@ class BlobStore:
     def put(self, digest: str, array: Any, *, verify: bool = True) -> np.ndarray:
         """Admit one blob; evict LRU entries past the byte budget. With
         ``verify`` (the worker-side default) the bytes must hash back to
-        ``digest`` — a mismatched shipment is refused, never stored."""
+        ``digest`` — a mismatched shipment is refused, never stored.
+
+        The stored entry is always a *private* read-only array: the
+        caller's own object is never frozen (a submitter must stay free to
+        update weights in place between submits) and never stored directly
+        (a read-only **view** aliases its buffer instead — zero-copy; a
+        later drift between the caller's bytes and the digest is caught by
+        the receiving end's ``verify``)."""
         arr = np.ascontiguousarray(np.asarray(array))
         if verify:
             actual = content_digest(arr)
@@ -153,7 +162,19 @@ class BlobStore:
                     f"blob claimed digest {digest} but its bytes hash to "
                     f"{actual}; refusing the shipment"
                 )
-        arr = arr.copy() if not arr.flags.owndata else arr
+        with self._cond:
+            existing = self._entries.get(digest)
+            if existing is not None:
+                self._gone.discard(digest)
+                self._entries.move_to_end(digest)
+                return existing
+        if not arr.flags.owndata:
+            # e.g. a decode view: copying frees the whole frame buffer the
+            # view would otherwise pin for the blob's store lifetime
+            arr = arr.copy()
+        elif arr is array:
+            # the caller's own object — freeze a private view, not it
+            arr = arr.view()
         arr.setflags(write=False)
         with self._cond:
             self._gone.discard(digest)
@@ -203,6 +224,11 @@ class BlobStore:
             with self._cond:
                 gone = [d for d in digests if d in self._gone]
                 if gone:
+                    # fail *this* wait, but clear the tombstone: blob_gone
+                    # is a statement about the coordinator's store at one
+                    # moment — a later submit re-pins the blob there, so a
+                    # later ensure() must be allowed to re-ask
+                    self._gone.difference_update(gone)
                     raise BlobError(
                         f"blob(s) {gone} are gone at the coordinator and "
                         "cannot be re-fetched"

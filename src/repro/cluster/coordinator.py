@@ -35,7 +35,7 @@ re-raise as :class:`RemoteOpError`.
 
 **Data plane (protocol v2)**: every outgoing submit/kernel_call encodes
 its arrays out-of-band — raw frame segments for small ones, and
-content-addressed ``blobref``\ s for arrays at/above ``blob_min_bytes``.
+content-addressed blobrefs for arrays at/above ``blob_min_bytes``.
 Blob bytes ship to a given worker **once** (``put_blob``), tracked in the
 per-worker ``blob_digests`` belief set; re-submits of the same tensor send
 only its digest. Workers that evicted a blob ask for it back with
@@ -227,10 +227,14 @@ class Coordinator:
         self.max_inflight = max_inflight
         self.call_timeout = call_timeout
         self.token = token if token is not None else secrets.token_hex(8)
-        #: submit-coalescing window (seconds): after a worker's writer picks
-        #: up one queued submit it waits this long for more before flushing
-        #: everything queued as a single ``submit_many`` frame. 0 disables
-        #: the wait (still coalesces whatever already queued up).
+        #: submit-coalescing window (seconds): when a worker's writer sees
+        #: a *burst* — several submits already queued, or other submits
+        #: still in flight on the worker — it lingers this long for
+        #: stragglers before flushing everything as one ``submit_many``
+        #: frame. An isolated submit with nothing else outstanding is
+        #: flushed immediately — the window never taxes synchronous
+        #: single-stream latency. 0 disables the linger (still coalesces
+        #: whatever already queued up).
         self.flush_window = flush_window
         #: arrays at/above this many bytes become content-addressed blobs
         self.blob_min_bytes = (
@@ -409,14 +413,20 @@ class Coordinator:
     def _array_digest(self, original: Any, arr: Any) -> str:
         """Content digest of one array, memoized by the *original* object's
         identity — a decode server re-submitting the same expert-weight
-        array pays sha256 once, not per request. Weak refs keep the cache
-        from pinning tensors; un-weakref-able inputs just recompute."""
+        array (frozen numpy, or an immutable jax array) pays sha256 once,
+        not per request. Only **read-only** buffers are memoized: a
+        writable array can be mutated in place and resubmitted, and an
+        id()-keyed digest would then silently ship the old bytes — those
+        recompute every time. Weak refs keep the cache from pinning
+        tensors; un-weakref-able inputs just recompute."""
         key = id(original)
         with self._digest_lock:
             entry = self._digest_cache.get(key)
             if entry is not None and entry[0]() is original:
                 return entry[1]
         digest = content_digest(arr)
+        if arr.flags.writeable:
+            return digest
         try:
             ref = weakref.ref(
                 original, lambda _r, k=key: self._digest_cache.pop(k, None)
@@ -611,26 +621,44 @@ class Coordinator:
 
     def _writer_loop(self, worker: WorkerHandle) -> None:
         """Per-worker pipelined-submit writer: pick up one queued submit,
-        linger ``flush_window`` for company, flush everything queued as a
-        single frame — ``submit_many`` when more than one coalesced."""
+        drain whatever else already queued, and flush it all as a single
+        frame — ``submit_many`` when more than one coalesced. The
+        ``flush_window`` linger only happens when a burst is plausibly in
+        progress — the drain found company, or the caller has *other*
+        submits still in flight on this worker (a pipelined stream, so
+        more is coming); a synchronous single-stream caller's isolated
+        submit flushes immediately and pays no latency tax."""
         q = worker.send_queue
         while True:
             item = q.get()
             if item is None:
                 return  # death or shutdown sentinel
-            if self.flush_window > 0:
-                time.sleep(self.flush_window)
             batch = [item]
             stop = False
-            while True:
-                try:
-                    nxt = q.get_nowait()
-                except queue.Empty:
-                    break
-                if nxt is None:
-                    stop = True
-                    break
-                batch.append(nxt)
+
+            def drain() -> None:
+                nonlocal stop
+                while not stop:
+                    try:
+                        nxt = q.get_nowait()
+                    except queue.Empty:
+                        return
+                    if nxt is None:
+                        stop = True
+                        return
+                    batch.append(nxt)
+
+            drain()
+            # worker.inflight already holds the batch's own entries
+            # (dispatch registers before enqueueing), so a strictly larger
+            # inflight table means other submits are still outstanding
+            if (
+                self.flush_window > 0
+                and not stop
+                and (len(batch) > 1 or len(worker.inflight) > len(batch))
+            ):
+                time.sleep(self.flush_window)
+                drain()
             try:
                 self._send_batch(worker, batch)
             except Exception as exc:
@@ -760,6 +788,11 @@ class Coordinator:
                             "worker %d needs blob %s but it is gone",
                             worker.worker_id, digest,
                         )
+                        # forget the belief too: the next submit that
+                        # references this digest must re-ship the bytes,
+                        # not trust a pin we just failed to honor
+                        with self._lock:
+                            worker.blob_digests.discard(digest)
                         worker.channel.send(
                             {"kind": "blob_gone", "digest": digest}
                         )

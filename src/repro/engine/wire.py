@@ -229,9 +229,11 @@ def decode_value(
     ``ndref`` values decode from the raw segment buffer the protocol layer
     attached under ``"data"`` (see
     :func:`repro.cluster.protocol.attach_segments`); an unattached ndref is
-    refused. ``blobref`` values resolve their digest through
-    ``blob_resolver`` (the receiver's blob store); without one they are
-    refused — a blobref is meaningless outside a blob-aware peer.
+    refused. Both ``nd`` and ``ndref`` decode to a fresh *writable* array.
+    ``blobref`` values resolve their digest through ``blob_resolver`` (the
+    receiver's blob store); without one they are refused — a blobref is
+    meaningless outside a blob-aware peer. Resolved blobs are the store's
+    shared entries and therefore **read-only** — copy before mutating.
     """
     if value is None or isinstance(value, (bool, int, float, str)):
         return value
@@ -251,9 +253,10 @@ def decode_value(
                 f"ndref segment {value.get('seg')!r} was not attached — "
                 "ndref values only decode inside a protocol v2 frame"
             )
-        # no copy: the frame buffer outlives the (read-only) array view
+        # .copy() for parity with the v1 "nd" path: decoded arrays are
+        # writable, owndata, and don't pin the whole frame buffer alive
         arr = np.frombuffer(raw, dtype=np.dtype(value["dtype"]))
-        return arr.reshape(tuple(value["shape"]))
+        return arr.reshape(tuple(value["shape"])).copy()
     if tag == "blobref":
         if blob_resolver is None:
             raise WireError(

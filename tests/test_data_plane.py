@@ -9,9 +9,15 @@ Three layers, pinned separately and then together:
   refused with a version-mismatch error at the first frame; oversized
   frames raise :class:`FrameTooLarge` naming ``REPRO_MAX_FRAME_BYTES``.
 - **blob store** (process-free units) — digest-verified admission (a
-  corrupt shipment is refused, never stored), byte-budgeted LRU eviction,
-  ``ensure``'s miss-negotiation wait (woken by ``put``, failed fast by
-  ``mark_gone``).
+  corrupt shipment is refused, never stored — and the caller's own array
+  is never frozen), byte-budgeted LRU eviction, ``ensure``'s
+  miss-negotiation wait (woken by ``put``, failed fast — but only once —
+  by ``mark_gone``).
+- **coordinator units** (socketpair, no processes) — ``blob_gone`` drops
+  the per-worker belief digest so later submits re-ship; writable arrays
+  re-hash on every submit (no stale id()-keyed digests); the pipelined
+  writer flushes an isolated submit immediately and only lingers
+  ``flush_window`` on a queued burst.
 - **cluster integration** (live workers) — a tiny worker-side budget
   forces evictions and the ``need_blob`` re-fetch path while results stay
   bit-identical; SIGKILL failover re-ships pinned blobs to the survivor
@@ -284,6 +290,129 @@ def test_stored_blobs_are_read_only():
     stored = store.put(blob_digest(arr), arr)
     with pytest.raises(ValueError):
         stored[0] = 99.0  # a shared blob must never be mutated in place
+
+
+def test_put_never_freezes_the_callers_array():
+    """Admitting a C-contiguous owndata array (the coordinator sink path,
+    ``verify=False``) must freeze a private view, not the caller's own
+    object — in-place weight updates between submits must keep working."""
+    store = BlobStore(budget_bytes=1 << 20)
+    arr = _blob(5.0)
+    stored = store.put(blob_digest(arr), arr, verify=False)
+    assert arr.flags.writeable, "put() froze the caller's own array"
+    arr[0] = 99.0  # must not raise "assignment destination is read-only"
+    with pytest.raises(ValueError):
+        stored[1] = 1.0  # ...while the stored entry stays read-only
+
+
+def test_blob_gone_tombstone_is_transient():
+    """``blob_gone`` fails the waits that saw it and is then forgotten —
+    a later submit re-pins the blob coordinator-side, so a later ensure()
+    must be allowed to re-ask instead of failing instantly forever."""
+    store = BlobStore(budget_bytes=1 << 20)
+    arr = _blob(6.0)
+    digest = blob_digest(arr)
+
+    def mark(missing):
+        threading.Timer(0.02, lambda: store.mark_gone(digest)).start()
+
+    with pytest.raises(BlobError, match="gone"):
+        store.ensure([digest], mark, timeout=10.0)
+
+    def ship(missing):
+        threading.Timer(0.02, lambda: store.put(digest, arr)).start()
+
+    store.ensure([digest], ship, timeout=10.0)  # no stale tombstone
+    np.testing.assert_array_equal(store.resolve(digest), arr)
+
+
+# -- coordinator units (socketpair, no processes) -----------------------------
+
+
+@pytest.fixture()
+def coordinator_worker():
+    from repro.cluster.coordinator import Coordinator, WorkerHandle
+
+    left, right = socket.socketpair()
+    right.settimeout(10.0)
+    coordinator = Coordinator(flush_window=1.0)
+    worker = WorkerHandle(1, Channel(left), {"pid": 0})
+    coordinator._workers[1] = worker
+    peer = Channel(right)
+    yield coordinator, worker, peer
+    worker.send_queue.put(None)
+    worker.channel.close()
+    peer.close()
+
+
+def test_blob_gone_forgets_the_coordinator_belief(coordinator_worker):
+    """Answering ``blob_gone`` must drop the digest from the worker's
+    belief set, so the next submit referencing it re-ships the bytes
+    instead of trusting a pin the coordinator just failed to honor."""
+    coordinator, worker, peer = coordinator_worker
+    worker.blob_digests.add("deadbeef")
+    coordinator._on_message(
+        worker, {"kind": "need_blob", "digests": ["deadbeef"]}
+    )
+    assert peer.recv() == {"kind": "blob_gone", "digest": "deadbeef"}
+    assert "deadbeef" not in worker.blob_digests
+
+
+def test_writable_arrays_rehash_on_resubmit():
+    """A writable array mutated in place and resubmitted must ship its
+    *new* bytes: the id()-keyed digest memo only covers read-only buffers
+    (frozen numpy / immutable jax arrays)."""
+    from repro.cluster.coordinator import Coordinator
+    from repro.engine.wire import content_digest
+
+    coordinator = Coordinator()
+    arr = np.arange(512, dtype=np.float64)
+    first = coordinator._array_digest(arr, arr)
+    arr[0] = -1.0
+    second = coordinator._array_digest(arr, arr)
+    assert first != second and second == content_digest(arr)
+    assert id(arr) not in coordinator._digest_cache
+    frozen = np.arange(512, dtype=np.float64)
+    frozen.setflags(write=False)
+    assert (
+        coordinator._array_digest(frozen, frozen)
+        == coordinator._array_digest(frozen, frozen)
+    )
+    assert id(frozen) in coordinator._digest_cache
+
+
+def test_isolated_submit_flushes_without_window_latency(coordinator_worker):
+    """An isolated submit must go out immediately — the 1 s flush window
+    only lingers when a burst is already queued."""
+    coordinator, worker, peer = coordinator_worker
+    writer = threading.Thread(
+        target=coordinator._writer_loop, args=(worker,), daemon=True
+    )
+    writer.start()
+    start = time.monotonic()
+    worker.send_queue.put(({"kind": "submit", "ticket": 1}, []))
+    message = peer.recv()
+    elapsed = time.monotonic() - start
+    assert message["kind"] == "submit" and message["ticket"] == 1
+    assert elapsed < 0.5, f"isolated submit waited {elapsed:.3f}s on the window"
+
+
+def test_queued_burst_still_coalesces_into_submit_many(coordinator_worker):
+    coordinator, worker, peer = coordinator_worker
+    coordinator.flush_window = 0.01
+    for ticket in range(3):  # queued before the writer even starts
+        worker.send_queue.put(({"kind": "submit", "ticket": ticket}, []))
+    writer = threading.Thread(
+        target=coordinator._writer_loop, args=(worker,), daemon=True
+    )
+    writer.start()
+    message = peer.recv()
+    assert message["kind"] == "submit_many"
+    assert [item["ticket"] for item in message["items"]] == [0, 1, 2]
+    deadline = time.monotonic() + 5.0  # counter lands just after the send
+    while coordinator._submits_coalesced < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert coordinator._submits_coalesced == 3
 
 
 # -- cluster integration (live workers) ---------------------------------------

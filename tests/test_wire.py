@@ -264,6 +264,22 @@ def test_segment_mode_emits_ndref_and_roundtrips_bit_identically():
     assert out["a"].dtype == arr.dtype and out["k"] == 3
 
 
+def test_segment_decode_returns_writable_copies():
+    """v1 'nd' parity: an ndref decodes to a fresh writable array, not a
+    read-only view pinning the frame buffer."""
+    from repro.engine import SegmentTable
+
+    from repro.cluster.protocol import attach_segments
+
+    table = SegmentTable()
+    encoded = encode_value(np.arange(8, dtype=np.float32), segments=table)
+    parsed = json.loads(json.dumps(encoded))
+    attach_segments(parsed, [bytes(s) for s in table.segments])
+    out = decode_value(parsed)
+    assert out.flags.writeable and out.flags.owndata
+    out[0] = -1.0  # downstream in-place mutation keeps working
+
+
 def test_unattached_ndref_is_refused():
     from repro.engine import SegmentTable
 
